@@ -1,0 +1,44 @@
+"""Fig. 11 (Appendix F) — lambda / tau Pareto frontier: distillation loss
+vs normalized KV cache size. Sweeping tau on gates distilled at two
+lambdas traces the frontier; tau≈0.1 should sit near the knee."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (SEQ, VOCAB, bench_cfg, _distill, _pretrain,
+                               cache_size_at, trained_model)
+from repro.core.losses import distill_loss
+from repro.data.synthetic import needle_task
+from repro.models import transformer as T
+
+
+@functools.lru_cache(maxsize=4)
+def _model_at_lambda(lam: float):
+    cfg = bench_cfg(lam=lam)
+    _, base = trained_model()  # reuse the pre-trained teacher backbone
+    params, _ = _distill(cfg, base, lam, steps=120)
+    return cfg, params
+
+
+def _val_loss(cfg, params, tau, n=8, seed=999):
+    c2 = cfg.replace(wgkv=dataclasses.replace(cfg.wgkv, tau=tau))
+    b = needle_task(jax.random.PRNGKey(seed), n, SEQ, VOCAB, payload=2)
+    teach = T.forward(params, c2, b["tokens"], mode="teacher")
+    hard = T.forward(params, c2, b["tokens"], mode="hard")
+    return float(distill_loss(hard.hidden, teach.hidden))
+
+
+def run():
+    rows = []
+    for lam in (0.05, 0.15, 0.4):
+        cfg, params = _model_at_lambda(lam)
+        for tau in (0.05, 0.1, 0.3, 0.7):
+            loss = _val_loss(cfg, params, tau)
+            size = cache_size_at(cfg, params, tau)
+            rows.append((f"fig11/lam{lam}_tau{tau}", 0.0,
+                         f"cache={size:.3f},distill_loss={loss:.4f}"))
+    return rows

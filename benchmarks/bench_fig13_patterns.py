@@ -1,0 +1,40 @@
+"""Fig. 13 (Appendix H) — input-dependent admission patterns.
+
+Per-(layer, head) normalized cache size on two different tasks (uniform
+zipf stream vs structured copy task). Input dependence = the per-head
+admission profile changes with the task (low cross-task correlation /
+different mean sparsity), unlike any static policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SEQ, VOCAB, trained_model
+from repro.data.synthetic import copy_task, token_stream
+from repro.models import transformer as T
+
+
+def _per_head_sizes(cfg, params, toks):
+    out = T.forward(params, cfg, toks, mode="gated")
+    adm = (out.gates >= cfg.wgkv.tau).mean(axis=(1, 3))  # [L_attn, H]
+    return np.asarray(adm)
+
+
+def run():
+    cfg, params = trained_model()
+    key = jax.random.PRNGKey(3)
+    stream = token_stream(key, 8, SEQ, VOCAB)
+    copy = copy_task(key, 8, 24, SEQ - 26, VOCAB)["tokens"]
+    a = _per_head_sizes(cfg, params, stream)
+    b = _per_head_sizes(cfg, params, copy)
+    corr = float(np.corrcoef(a.ravel(), b.ravel())[0, 1])
+    rows = [
+        ("fig13/stream_mean_admission", 0.0, f"{a.mean():.3f}"),
+        ("fig13/copy_mean_admission", 0.0, f"{b.mean():.3f}"),
+        ("fig13/head_variance_stream", 0.0, f"{a.std():.3f}"),
+        ("fig13/head_variance_copy", 0.0, f"{b.std():.3f}"),
+        ("fig13/cross_task_head_correlation", 0.0, f"{corr:.3f}"),
+        ("fig13/task_delta_mean_abs", 0.0, f"{np.abs(a - b).mean():.3f}"),
+    ]
+    return rows

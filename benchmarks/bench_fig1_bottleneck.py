@@ -1,0 +1,69 @@
+"""Fig. 1 — attention dominates long-context inference.
+
+Measures (a) prefill latency split attention vs. non-attention as seq
+grows, (b) decode latency vs. resident cache size. CPU wall-clock on the
+tiny bench model; the quadratic-vs-linear scaling trend is the claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_cfg, timeit
+from repro.models import inference as I
+from repro.models import transformer as T
+
+
+def run():
+    cfg = bench_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    rows = []
+    prev = None
+    for s in (256, 512, 1024, 2048):
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, s), 0,
+                                  cfg.vocab_size)
+
+        full = jax.jit(lambda p, t: T.forward(p, cfg, t, mode="teacher").logits)
+        t_full = timeit(full, params, toks)
+        # "non-attention" estimate: same model with attention ablated to a
+        # window-1 mask is still O(S^2) in jnp; instead time the FFN+embed
+        # path by a model with 0-length attention: approximate with
+        # window=1 local attention (scores still computed) is wrong — use
+        # per-token FLOP-proportional estimate via a 1-layer MLP-only pass:
+        mlponly = jax.jit(lambda p, t: _mlp_only(p, cfg, t))
+        t_mlp = timeit(mlponly, params, toks)
+        frac = max(0.0, 1.0 - t_mlp / t_full)
+        rows.append((f"fig1/prefill_s{s}", t_full, f"attn_frac={frac:.2f}"))
+        if prev is not None:
+            rows.append((f"fig1/prefill_scaling_s{s}", t_full,
+                         f"x{t_full / prev:.2f}_vs_half_seq"))
+        prev = t_full
+    # decode: latency vs cache length (memory-bound trend)
+    for s in (512, 2048):
+        caches = _dense_caches(cfg, params, s)
+        tok = jnp.zeros((1,), jnp.int32)
+        step = jax.jit(lambda p, t, c: I.decode_step(p, cfg, t, c)[0])
+        t_dec = timeit(step, params, tok, caches)
+        rows.append((f"fig1/decode_cache{s}", t_dec, f"cache_tokens={s}"))
+    return rows
+
+
+def _mlp_only(params, cfg, toks):
+    from repro.models import layers as L
+
+    x = L.embed(params["embed"], toks, jnp.float32)
+
+    def body(xc, bp):
+        b0 = bp["b0"]
+        xc = xc + L.swiglu(b0["mlp"], L.rmsnorm(b0["ln2"], xc))
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return L.unembed(params["embed"], x)
+
+
+def _dense_caches(cfg, params, s):
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, s), 0,
+                              cfg.vocab_size)
+    _, caches = I.prefill(params, cfg, toks, use_wgkv=False, max_len=s + 16)
+    return caches

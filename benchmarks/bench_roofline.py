@@ -1,0 +1,42 @@
+"""Table/roofline summary — reads the dry-run + roofline artifacts (written
+by repro.launch.dryrun / repro.roofline.run_all on the production mesh) and
+prints the per-(arch x shape) terms. This is the TPU-v5e analogue of the
+paper's Fig. 8 H200 wall-clock table (DESIGN.md §6)."""
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def run():
+    rows = []
+    rf = os.path.join(ART, "roofline.json")
+    if os.path.exists(rf):
+        with open(rf) as f:
+            recs = json.load(f)
+        for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+            if "error" in r:
+                rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                             f"error={str(r['error'])[:40]}"))
+                continue
+            rows.append((
+                f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                f"bottleneck={r['bottleneck']},c={r['compute_s']:.4g}s,"
+                f"m={r['memory_s']:.4g}s,x={r['collective_s']:.4g}s,"
+                f"useful={r['useful_ratio']:.2f}"))
+    dr = os.path.join(ART, "dryrun.json")
+    if os.path.exists(dr):
+        with open(dr) as f:
+            recs = json.load(f)
+        full = [r for r in recs if r.get("n_repeats_override") is None]
+        ok = sum(1 for r in full if "error" not in r and not r.get("skipped"))
+        skip = sum(1 for r in full if r.get("skipped"))
+        err = sum(1 for r in full if "error" in r)
+        rows.append(("dryrun/summary", 0.0,
+                     f"ok={ok},documented_skips={skip},errors={err}"))
+    if not rows:
+        rows.append(("roofline/missing", 0.0,
+                     "run repro.launch.dryrun + repro.roofline.run_all first"))
+    return rows

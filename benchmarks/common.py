@@ -1,0 +1,118 @@
+"""Shared benchmark substrate: a tiny needle-retrieval model pre-trained on
+CPU, with distilled write-gates — the stand-in for Llama-3.1-8B + FineWeb
+in the offline container (DESIGN.md §7). Trained once, cached to
+benchmarks/artifacts/.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, WGKVConfig
+from repro.data.synthetic import lm_loss, needle_task
+from repro.models import transformer as T
+from repro.training import checkpoint as C
+from repro.training import trainer as TR
+from repro.training.optimizer import adamw_init, adamw_update, cosine_schedule
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+VOCAB = 256
+SEQ = 128      # needles live in the first 55% => always > W_LOCAL from the query
+W_LOCAL = 16
+
+
+def bench_cfg(**wg) -> ModelConfig:
+    wk = dict(enabled=True, w_local=W_LOCAL, tau=0.1, gate_hidden=32,
+              global_budget_frac=1.0, sink=2, lam=0.1)
+    wk.update(wg)
+    return ModelConfig(
+        name="bench-tiny", arch_type="dense", d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=VOCAB,
+        block_pattern=("attn",), n_repeats=2, rope_theta=10000.0,
+        dtype="float32", wgkv=WGKVConfig(**wk))
+
+
+def _pretrain(cfg: ModelConfig, steps: int = 2000) -> Dict:
+    """Train the teacher until induction-head retrieval emerges (the
+    circuit needs ~1-2k steps at this scale; weight decay off helps)."""
+    key = jax.random.PRNGKey(0)
+    params = T.init_model(key, cfg)
+    opt = adamw_init(params)
+    lr = cosine_schedule(2e-3, steps)
+
+    @jax.jit
+    def step(params, opt, toks, mask, i):
+        def loss_fn(p):
+            out = T.forward(p, cfg, toks, mode="teacher")
+            return lm_loss(out.logits, toks) + 4.0 * lm_loss(out.logits,
+                                                             toks, mask)
+        g = jax.grad(loss_fn)(params)
+        return adamw_update(g, opt, params, lr=lr(i), weight_decay=0.0)
+
+    for i in range(steps):
+        b = needle_task(jax.random.PRNGKey(i + 1), 16, SEQ, VOCAB, payload=2)
+        params, opt = step(params, opt, b["tokens"], b["loss_mask"], i)
+    return params
+
+
+def _distill(cfg: ModelConfig, params, lam: float, steps: int = 150):
+    state = TR.init_train_state(params)
+    step = TR.make_train_step(cfg, lr=cosine_schedule(2e-3, steps), lam=lam)
+    for i in range(steps):
+        b = needle_task(jax.random.PRNGKey(10_000 + i), 4, SEQ, VOCAB,
+                        payload=2)
+        state, m = step(state, params, batch={"tokens": b["tokens"]})
+    return TR.set_gates(params, state.gates), m
+
+
+@functools.lru_cache(maxsize=1)
+def trained_model(lam: float = 0.15) -> Tuple[ModelConfig, Dict]:
+    """Teacher + distilled gates, cached on disk across benchmark runs."""
+    cfg = bench_cfg(lam=lam)
+    path = os.path.join(ART, f"bench_model_lam{lam}.npz")
+    key = jax.random.PRNGKey(0)
+    like = T.init_model(key, cfg)
+    if os.path.exists(path):
+        return cfg, C.restore(path, like)
+    params = _pretrain(cfg)
+    params, _ = _distill(cfg, params, lam)
+    os.makedirs(ART, exist_ok=True)
+    C.save(path, params, meta={"lam": lam, "vocab": VOCAB, "seq": SEQ})
+    return cfg, params
+
+
+def needle_accuracy(cfg: ModelConfig, params, *, mode: str = "hard",
+                    n: int = 32, seed: int = 777,
+                    gate_override_fn=None) -> float:
+    b = needle_task(jax.random.PRNGKey(seed), n, SEQ, VOCAB, payload=2)
+    out = T.forward(params, cfg, b["tokens"], mode=mode)
+    qpos = int(b["query_pos"])
+    pred = jnp.argmax(out.logits[:, qpos:qpos + 2], -1)
+    return float((np.asarray(pred) == np.asarray(b["answer"])).mean())
+
+
+def cache_size_at(cfg: ModelConfig, params, tau: float, n: int = 16,
+                  seed: int = 778) -> float:
+    """Mean normalized KV cache size (admitted + window) / full."""
+    b = needle_task(jax.random.PRNGKey(seed), n, SEQ, VOCAB, payload=2)
+    out = T.forward(params, cfg, b["tokens"], mode="gated")
+    adm = (out.gates >= tau).mean()
+    return float(min(float(adm) + cfg.wgkv.w_local / SEQ, 1.0))
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocking on device)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)

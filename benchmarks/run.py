@@ -1,0 +1,62 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.
+#
+#   PYTHONPATH=src python -m benchmarks.run [--only fig7,fig8]
+#
+# Modules:
+#   fig1   attention-bottleneck scaling          (paper Fig. 1)
+#   fig7   memory-accuracy vs static admission   (paper Fig. 7 / Fig. 14)
+#   fig8   efficiency at 75% sparsity            (paper Fig. 8 / Fig. 15)
+#   fig9   Quest (Selection) composability       (paper Fig. 9)
+#   fig10  SnapKV (Eviction) synergy             (paper Fig. 10 / Fig. 16)
+#   fig11  lambda/tau Pareto frontier            (paper Fig. 11)
+#   fig12  local-cache ablation                  (paper Fig. 12)
+#   fig13  input-dependent admission patterns    (paper Fig. 13)
+#   roofline  dry-run derived TPU roofline table (paper Fig. 8 analogue)
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = {
+    "fig1": "benchmarks.bench_fig1_bottleneck",
+    "fig7": "benchmarks.bench_fig7_memory_accuracy",
+    "fig8": "benchmarks.bench_fig8_efficiency",
+    "fig9": "benchmarks.bench_fig9_quest",
+    "fig10": "benchmarks.bench_fig10_eviction",
+    "fig11": "benchmarks.bench_fig11_pareto",
+    "fig12": "benchmarks.bench_fig12_local_cache",
+    "fig13": "benchmarks.bench_fig13_patterns",
+    "roofline": "benchmarks.bench_roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(MODULES))
+    args = ap.parse_args()
+    names = list(MODULES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        import importlib
+
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(MODULES[name])
+            rows = mod.run()
+            for r, us, derived in rows:
+                print(f"{r},{us:.1f},{derived}", flush=True)
+            print(f"{name}/_wall_s,{(time.time() - t0) * 1e6:.0f},module_total",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name}/_error,0,{traceback.format_exc(limit=2)!r}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Assigned-architecture registry: ``--arch <id>`` selects one of these."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, Tuple
+
+from repro.configs.base import InputShape, ModelConfig, MoEConfig, WGKVConfig
+from repro.configs.shapes import SHAPES, get_shape
+
+_ARCH_MODULES = {
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "whisper-medium": "repro.configs.whisper_medium",
+}
+
+ARCH_NAMES: Tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+def get_reduced_config(name: str) -> ModelConfig:
+    return importlib.import_module(_ARCH_MODULES[name]).reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Is (arch x shape) a runnable pair? Returns (ok, reason-if-not)."""
+    if shape.name == "long_500k":
+        if cfg.arch_type == "audio":
+            return False, (
+                "long_500k skipped for whisper-medium: 500k mel frames is far "
+                "beyond the enc-dec design (DESIGN.md §4)"
+            )
+        if cfg.arch_type in ("ssm", "hybrid"):
+            return True, ""  # native sub-quadratic state
+        # attention archs: runnable only via the WG-KV budgeted cache
+        if cfg.wgkv.enabled:
+            return True, ""
+        return False, "long_500k needs sub-quadratic attention (enable WG-KV)"
+    return True, ""
+
+
+__all__ = [
+    "ARCH_NAMES",
+    "InputShape",
+    "ModelConfig",
+    "MoEConfig",
+    "SHAPES",
+    "WGKVConfig",
+    "all_configs",
+    "get_config",
+    "get_reduced_config",
+    "get_shape",
+    "shape_applicable",
+]

@@ -1,0 +1,22 @@
+"""WG-KV core: the paper's contribution (KV Admission) as composable JAX.
+
+Modules:
+  gate        — Write-Gate MLP (learned utility predictor)
+  masks       — write-gated training bias / vertical-slash inference mask
+  admission   — budgeted pre-write admission (global-cache selection)
+  dual_cache  — Local ring + Global budgeted cache, Lazy Promotion
+  losses      — distillation + sparsity objective
+  baselines   — Local-Attention / DuoAttention static admission policies
+  selection   — Quest-style read-time selection (composable)
+  eviction    — SnapKV-style post-write eviction (composable)
+"""
+from repro.core import (  # noqa: F401
+    admission,
+    baselines,
+    dual_cache,
+    eviction,
+    gate,
+    losses,
+    masks,
+    selection,
+)

@@ -1,0 +1,78 @@
+"""Budgeted KV Admission (paper §2.2, §4.2 — "Initial Cache Population").
+
+Inference-time admission binarizes the gate (g >= tau) and, under a memory
+budget ``C_g`` per head, selects the admitted tokens to persist in the
+Global Cache. Sink tokens (first ``sink`` positions) are always admitted as
+a safety floor (StreamingLLM-style), matching the baseline configurations
+in the paper's Appendix E.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GlobalSelection(NamedTuple):
+    """Per-head admitted token set under a budget.
+
+    idx:   [B, H, C] int32 token positions (ascending; padded with 0)
+    valid: [B, H, C] bool
+    count: [B, H] int32 number of valid entries
+    """
+
+    idx: jax.Array
+    valid: jax.Array
+    count: jax.Array
+
+
+def select_global(
+    g: jax.Array,
+    *,
+    budget: int,
+    tau: float,
+    sink: int = 0,
+    exclude_from: int | None = None,
+) -> GlobalSelection:
+    """Pick up to ``budget`` admitted tokens per head.
+
+    g: [B, H, S] gate scores. Tokens with position >= exclude_from (the
+    final local window during prefill) are never globally admitted here —
+    they live in the Local Cache and are lazily promoted later.
+    Selection = sinks first, then highest-g admitted tokens.
+    """
+    b, h, s = g.shape
+    pos = jnp.arange(s)
+    eligible = g >= tau
+    if sink > 0:
+        eligible = eligible | (pos < sink)[None, None, :]
+    if exclude_from is not None:
+        eligible = eligible & (pos < exclude_from)[None, None, :]
+    # score: sinks get +2 (always first), others their gate; ineligible -inf
+    score = jnp.where(eligible, g, -jnp.inf)
+    if sink > 0:
+        score = jnp.where((pos < sink)[None, None, :] & eligible, 2.0, score)
+    budget = min(budget, s)
+    top_score, top_idx = jax.lax.top_k(score, budget)  # [B,H,C]
+    valid = jnp.isfinite(top_score)
+    count = valid.sum(-1).astype(jnp.int32)
+    # ascending positions for causal-friendly layouts (invalid sorted last)
+    sort_key = jnp.where(valid, top_idx, s + 1)
+    order = jnp.argsort(sort_key, axis=-1)
+    top_idx = jnp.take_along_axis(top_idx, order, axis=-1)
+    valid = jnp.take_along_axis(valid, order, axis=-1)
+    top_idx = jnp.where(valid, top_idx, 0)
+    return GlobalSelection(top_idx.astype(jnp.int32), valid, count)
+
+
+def admission_rate(g: jax.Array, tau: float) -> jax.Array:
+    """Fraction of tokens admitted per head: [B, H]."""
+    return (g >= tau).mean(-1)
+
+
+def normalized_cache_size(g: jax.Array, tau: float, w_local: int) -> jax.Array:
+    """Paper's x-axis metric: (admitted + local window) / full, per head."""
+    s = g.shape[-1]
+    admitted = (g >= tau).sum(-1)
+    return jnp.minimum((admitted + w_local) / s, 1.0)

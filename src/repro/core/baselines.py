@@ -1,0 +1,48 @@
+"""Static admission baselines (paper §5.2, Appendix E).
+
+Both are *input-independent* admission policies re-contextualized into the
+same gate interface as WG-KV (g per (head, token)), so they reuse the
+identical vertical-slash / dual-cache machinery:
+
+* Local Attention (StreamingLLM): admit only attention sinks; everything
+  else lives (transiently) in the sliding local window.
+* DuoAttention: a per-head static split into "retrieval heads" (admit all)
+  and "streaming heads" (sinks + local window only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def local_attention_gates(batch: int, n_kv_heads: int, seq: int,
+                          sink: int = 128) -> jax.Array:
+    """g = 1 for sink tokens, 0 elsewhere. [B, H, S]."""
+    g = (jnp.arange(seq) < sink).astype(jnp.float32)
+    return jnp.broadcast_to(g[None, None], (batch, n_kv_heads, seq))
+
+
+def duo_attention_gates(batch: int, head_is_retrieval: jax.Array, seq: int,
+                        sink: int = 128) -> jax.Array:
+    """head_is_retrieval: [H] bool. Retrieval heads admit everything;
+    streaming heads admit only sinks. [B, H, S]."""
+    h = head_is_retrieval.shape[0]
+    sinks = (jnp.arange(seq) < sink).astype(jnp.float32)[None, :]
+    g = jnp.where(head_is_retrieval[:, None], 1.0, sinks)  # [H, S]
+    return jnp.broadcast_to(g[None], (batch, h, seq))
+
+
+def identify_retrieval_heads(gate_scores: jax.Array, ratio: float) -> jax.Array:
+    """Profile-based head identification (DuoAttention-style): rank heads by
+    mean admission of a *learned* gate on calibration data and flag the top
+    ``ratio`` fraction as retrieval heads. gate_scores: [B, H, S] -> [H]."""
+    per_head = gate_scores.mean(axis=(0, 2))  # [H]
+    h = per_head.shape[0]
+    k = max(1, int(round(ratio * h)))
+    thresh = jnp.sort(per_head)[h - k]
+    return per_head >= thresh
+
+
+def full_attention_gates(batch: int, n_kv_heads: int, seq: int) -> jax.Array:
+    """The no-admission upper baseline: admit everything."""
+    return jnp.ones((batch, n_kv_heads, seq), jnp.float32)

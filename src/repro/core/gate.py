@@ -1,0 +1,68 @@
+"""Write-Gate MLP (paper §3.2).
+
+Per (layer, kv-head) two-layer MLP predicting the future utility
+``g in [0,1]`` of a token *before* its KV pair enters the cache:
+
+    x = [RMSNorm(k_pre_rope); RMSNorm(k_post_rope)]       (2*head_dim,)
+    g = sigmoid(W2 @ gelu(W1 @ x + b1) + b2)
+
+Weights are stored per-head: W1 [H, 2*hd, hidden], b1 [H, hidden],
+W2 [H, hidden, 1], b2 [H, 1]. Layer stacking happens outside (the layer
+scan stacks a leading n_repeats axis).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+def init_gate(key: jax.Array, cfg: ModelConfig) -> Params:
+    h = cfg.n_kv_heads
+    fin = 2 * cfg.head_dim
+    hid = cfg.wgkv.gate_hidden
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    scale1 = 1.0 / jnp.sqrt(fin)
+    scale2 = 1.0 / jnp.sqrt(hid)
+    return {
+        "w1": (jax.random.normal(k1, (h, fin, hid)) * scale1).astype(dt),
+        "b1": jnp.zeros((h, hid), dt),
+        "w2": (jax.random.normal(k2, (h, hid, 1)) * scale2).astype(dt),
+        # positive bias => gates start near "admit" (~0.73) so early training
+        # matches the teacher; the sparsity loss then pushes them down.
+        "b2": jnp.full((h, 1), 1.0, dt),
+    }
+
+
+def _rmsnorm_nowt(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+
+
+def gate_features(k_pre: jax.Array, k_post: jax.Array) -> jax.Array:
+    """[..., H, T, hd] x2 -> [..., H, T, 2*hd] (both inputs RMS-normalized)."""
+    return jnp.concatenate([_rmsnorm_nowt(k_pre), _rmsnorm_nowt(k_post)], axis=-1)
+
+
+def gate_scores(params: Params, k_pre: jax.Array, k_post: jax.Array) -> jax.Array:
+    """Compute g for keys.
+
+    k_pre, k_post: [B, H_kv, T, hd] (pre-/post-RoPE keys).
+    Returns g: [B, H_kv, T] in (0, 1).
+    """
+    x = gate_features(k_pre, k_post)  # [B,H,T,2hd]
+    x = x.astype(params["w1"].dtype)
+    h = jnp.einsum("bhtf,hfm->bhtm", x, params["w1"]) + params["b1"][None, :, None]
+    h = jax.nn.gelu(h)
+    y = jnp.einsum("bhtm,hmo->bhto", h, params["w2"]) + params["b2"][None, :, None]
+    return jax.nn.sigmoid(y[..., 0]).astype(jnp.float32)
+
+
+def gate_param_count(cfg: ModelConfig) -> int:
+    h, fin, hid = cfg.n_kv_heads, 2 * cfg.head_dim, cfg.wgkv.gate_hidden
+    return h * (fin * hid + hid + hid + 1)

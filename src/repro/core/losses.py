@@ -1,0 +1,50 @@
+"""Training objective for the admission policy (paper §3.3).
+
+    L_total = L_distill + lambda * L_sparsity
+    L_distill  = mean || h_student_final - h_teacher_final ||^2
+    L_sparsity = mean_{l,h,t} ( g + g * (1 - g) )
+
+The backbone is frozen; only Write-Gate MLP parameters receive gradients.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def distill_loss(h_student: jax.Array, h_teacher: jax.Array,
+                 loss_mask: jax.Array | None = None) -> jax.Array:
+    """L2 on final-layer hidden states. h: [B, S, D]; mask: [B, S]."""
+    d = jnp.square(h_student.astype(jnp.float32) - h_teacher.astype(jnp.float32))
+    d = d.mean(-1)
+    if loss_mask is not None:
+        return (d * loss_mask).sum() / jnp.maximum(loss_mask.sum(), 1.0)
+    return d.mean()
+
+
+def sparsity_loss(gates: jax.Array, loss_mask: jax.Array | None = None) -> jax.Array:
+    """gates: [..., T] stacked over layers/heads. First term drives admission
+    down; second penalizes non-binary values (pushes g toward {0, 1})."""
+    g = gates.astype(jnp.float32)
+    per = g + g * (1.0 - g)
+    if loss_mask is not None:
+        # gates: [L, B, H, T]; mask: [B, T] -> [1, B, 1, T]
+        m = loss_mask[None, :, None, :] if per.ndim == 4 else loss_mask
+        w = jnp.broadcast_to(m, per.shape)
+        return (per * w).sum() / jnp.maximum(w.sum(), 1.0)
+    return per.mean()
+
+
+def total_loss(h_student, h_teacher, gates, lam: float,
+               loss_mask=None) -> tuple[jax.Array, Dict[str, jax.Array]]:
+    ld = distill_loss(h_student, h_teacher, loss_mask)
+    ls = sparsity_loss(gates, loss_mask)
+    aux = {
+        "distill": ld,
+        "sparsity": ls,
+        "mean_gate": gates.mean(),
+        "admission_rate@0.1": (gates >= 0.1).mean(),
+    }
+    return ld + lam * ls, aux

@@ -1,0 +1,63 @@
+"""Write-gated attention masks and log-space biases (paper §3.2, §4.2).
+
+Training-time (differentiable):
+    m_ij = 1                if i - j < W_local
+         = g_j              otherwise
+    bias B_ij = log(m_ij + eps), added to qk/sqrt(d) before softmax;
+    causal positions i < j get -inf.
+
+Inference-time (binary, vertical-slash):
+    M_ij = (1[i - j < W_local] or 1[g_j >= tau]) and 1[i >= j]
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def local_window_mask(s_q: int, s_k: int, w_local: int, q_offset: int = 0):
+    """[s_q, s_k] bool: True where i - j < w_local (and causal i >= j).
+
+    ``q_offset`` shifts query positions (query i corresponds to absolute
+    position q_offset + i; keys are absolute 0..s_k-1).
+    """
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return (qi >= kj) & (qi - kj < w_local)
+
+
+def causal_mask(s_q: int, s_k: int, q_offset: int = 0):
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return qi >= kj
+
+
+def write_gate_bias(g, s_q: int, w_local: int, eps: float = 1e-6, q_offset: int = 0):
+    """Log-space additive bias for Write-Gated Attention.
+
+    g: [..., s_k] gate scores per key (broadcast over query dim).
+    Returns bias [..., s_q, s_k]: 0 inside the local window, log(g+eps)
+    outside it, NEG_INF above the causal diagonal.
+    """
+    s_k = g.shape[-1]
+    local = local_window_mask(s_q, s_k, w_local, q_offset)  # [s_q, s_k]
+    causal = causal_mask(s_q, s_k, q_offset)
+    logg = jnp.log(g + eps)[..., None, :]  # [..., 1, s_k]
+    bias = jnp.where(local, 0.0, logg)
+    return jnp.where(causal, bias, NEG_INF)
+
+
+def vertical_slash_mask(g, tau: float, s_q: int, w_local: int, q_offset: int = 0,
+                        sink: int = 0):
+    """Binary inference mask M_ij (vertical-slash pattern).
+
+    g: [..., s_k]; returns bool [..., s_q, s_k].
+    """
+    s_k = g.shape[-1]
+    local = local_window_mask(s_q, s_k, w_local, q_offset)
+    causal = causal_mask(s_q, s_k, q_offset)
+    admitted = g >= tau  # [..., s_k]
+    if sink > 0:
+        admitted = admitted | (jnp.arange(s_k) < sink)
+    return (local | admitted[..., None, :]) & causal

@@ -1,0 +1,66 @@
+"""Quest-style read-time KV Selection (paper §5.4 composability).
+
+Quest (Tang et al., 2024) keeps page-level key min/max metadata and, per
+query, attends only to the top-B pages ranked by an upper bound on the
+page's attention score:  ub(page) = sum_d max(q_d * kmin_d, q_d * kmax_d).
+
+Here selection operates either on a dense full cache ("Quest only") or on
+the WG-KV global cache ("WG-KV + Quest") — admission shrinks the candidate
+pool, selection then focuses the read.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PAGE_SIZE = 16
+
+
+class PageMeta(NamedTuple):
+    kmin: jax.Array  # [B, H, P, hd]
+    kmax: jax.Array  # [B, H, P, hd]
+    valid: jax.Array  # [B, H, P] page has >= 1 valid token
+
+
+def build_page_meta(k: jax.Array, valid: jax.Array,
+                    page_size: int = PAGE_SIZE) -> PageMeta:
+    """k: [B, H, S, hd]; valid: [B, H, S] -> page metadata (S % page == 0
+    required; pad upstream)."""
+    b, h, s, d = k.shape
+    p = s // page_size
+    kp = k.reshape(b, h, p, page_size, d)
+    vp = valid.reshape(b, h, p, page_size)
+    big = jnp.asarray(3e38, k.dtype)
+    kmin = jnp.where(vp[..., None], kp, big).min(axis=3)
+    kmax = jnp.where(vp[..., None], kp, -big).max(axis=3)
+    return PageMeta(kmin, kmax, vp.any(axis=3))
+
+
+def page_upper_bound(q: jax.Array, meta: PageMeta) -> jax.Array:
+    """q: [B, Hq, hd] (Hq = G * Hkv); meta per kv head. Returns ub scores
+    aggregated over the query group: [B, Hkv, P]."""
+    b, hq, d = q.shape
+    hkv = meta.kmin.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    lo = jnp.einsum("bhgd,bhpd->bhgp", qg, meta.kmin.astype(q.dtype))
+    hi = jnp.einsum("bhgd,bhpd->bhgp", qg, meta.kmax.astype(q.dtype))
+    ub = jnp.maximum(lo, hi).sum(axis=2) / g  # mean over group
+    return jnp.where(meta.valid, ub, -jnp.inf)
+
+
+def select_pages(q: jax.Array, meta: PageMeta, budget_pages: int) -> jax.Array:
+    """Top-``budget_pages`` page mask per kv head: [B, Hkv, P] bool."""
+    ub = page_upper_bound(q, meta)
+    p = ub.shape[-1]
+    budget_pages = min(budget_pages, p)
+    thresh = jax.lax.top_k(ub, budget_pages)[0][..., -1:]
+    return (ub >= thresh) & jnp.isfinite(ub)
+
+
+def token_mask_from_pages(page_mask: jax.Array,
+                          page_size: int = PAGE_SIZE) -> jax.Array:
+    """[B, H, P] -> [B, H, P*page_size]."""
+    return jnp.repeat(page_mask, page_size, axis=-1)

@@ -1,0 +1,130 @@
+"""Synthetic data pipeline (offline container: no FineWeb/HELMET downloads).
+
+Three generators mirroring the paper's data needs:
+  * ``token_stream``    — zipfian web-like token stream (gate distillation,
+    paper Appendix C trains on FineWeb-Edu samples).
+  * ``needle_task``     — key-value retrieval in a long haystack (HELMET
+    RAG/recall proxy for the Fig. 7 memory-accuracy trade-off): the model
+    must emit the payload that followed the needle marker when queried at
+    the end. Local-attention policies provably lose the needle once it
+    leaves the window; learned admission must keep it.
+  * ``copy_task``       — prompt echo after long generation (Fig. 10/16
+    reasoning-trace proxy: early context needed late under memory bounds).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# reserved control tokens at the top of the vocab
+def _specials(vocab: int):
+    return {"needle": vocab - 1, "query": vocab - 2, "sep": vocab - 3}
+
+
+def token_stream(key: jax.Array, batch: int, seq: int, vocab: int,
+                 zipf_a: float = 1.3) -> jax.Array:
+    """Zipf-distributed token ids in [0, vocab-8) (specials excluded)."""
+    # inverse-CDF zipf via uniform samples (numpy for the harmonic weights)
+    u = jax.random.uniform(key, (batch, seq))
+    n = min(vocab - 8, 4096)
+    w = 1.0 / np.arange(1, n + 1) ** zipf_a
+    cdf = jnp.asarray(np.cumsum(w) / np.sum(w))
+    ids = jnp.searchsorted(cdf, u)
+    return ids.astype(jnp.int32)
+
+
+def needle_task(key: jax.Array, batch: int, seq: int, vocab: int,
+                payload: int = 4, needle_frac_lo: float = 0.05,
+                needle_frac_hi: float = 0.55, occurrences: int = 3
+                ) -> Dict[str, jax.Array]:
+    """tokens = [hay .. M p1..pk .. hay .. M p1..pk .. hay .. M p1..pk]
+    (same marker M each time — canonical induction): the payload appears
+    ``occurrences`` times in the first ``needle_frac_hi`` of the sequence
+    (always far outside the local window of the final query), then the
+    model must reproduce p1..pk after the final M at the tail. Trained
+    causally. Returns tokens [B, S], loss_mask [B, S] (1 on the answer
+    span), answer [B, payload]."""
+    sp = _specials(vocab)
+    k1, k2, k3 = jax.random.split(key, 3)
+    hay = token_stream(k1, batch, seq, vocab)
+    pay = jax.random.randint(k2, (batch, payload), 0, vocab - 8)
+    lo = int(seq * needle_frac_lo)
+    hi = int(seq * needle_frac_hi)
+    span = max((hi - lo) // max(occurrences, 1), payload + 2)
+    offs = jax.random.randint(k3, (batch, occurrences), 0,
+                              max(span - payload - 1, 1))
+    npos = lo + jnp.arange(occurrences)[None] * span + offs  # [B, O]
+    qpos = seq - payload - 1
+    idx = jnp.arange(seq)[None]
+    toks = hay
+    bidx = jnp.arange(batch)[:, None]
+    for o in range(occurrences):
+        off = idx - npos[:, o][:, None]
+        toks = jnp.where(off == 0, sp["needle"], toks)
+        in_pay = (off >= 1) & (off <= payload)
+        pay_val = pay[bidx, jnp.clip(off - 1, 0, payload - 1)]
+        toks = jnp.where(in_pay, pay_val, toks)
+    # query (same marker) + answer span at the tail
+    toks = jnp.where(idx == qpos, sp["needle"], toks)
+    ans_off = idx - qpos - 1
+    in_ans = (ans_off >= 0) & (ans_off < payload)
+    ans_val = pay[bidx, jnp.clip(ans_off, 0, payload - 1)]
+    toks = jnp.where(in_ans, ans_val, toks)
+    loss_mask = jnp.broadcast_to(in_ans, toks.shape).astype(jnp.float32)
+    return {"tokens": toks.astype(jnp.int32), "loss_mask": loss_mask,
+            "answer": pay, "needle_pos": npos[:, 0], "query_pos": qpos}
+
+
+def copy_task(key: jax.Array, batch: int, prompt: int, filler: int,
+              vocab: int) -> Dict[str, jax.Array]:
+    """[prompt tokens][SEP][filler][QUERY] -> model must echo the prompt."""
+    sp = _specials(vocab)
+    k1, k2 = jax.random.split(key)
+    p = jax.random.randint(k1, (batch, prompt), 0, vocab - 8)
+    f = token_stream(k2, batch, filler, vocab)
+    toks = jnp.concatenate([
+        p,
+        jnp.full((batch, 1), sp["sep"], jnp.int32),
+        f,
+        jnp.full((batch, 1), sp["query"], jnp.int32),
+    ], axis=1)
+    return {"tokens": toks.astype(jnp.int32), "prompt": p}
+
+
+class DistillStream:
+    """Iterator of gate-distillation batches (paper Appendix C setup, with
+    the generic instruction prefix replaced by a fixed SEP prefix)."""
+
+    def __init__(self, seed: int, batch: int, seq: int, vocab: int,
+                 task_mix: float = 0.5):
+        self.key = jax.random.PRNGKey(seed)
+        self.batch, self.seq, self.vocab = batch, seq, vocab
+        self.task_mix = task_mix
+        self._i = 0
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        return self
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        self.key, k1, k2 = jax.random.split(self.key, 3)
+        self._i += 1
+        if self._i % max(int(1 / max(self.task_mix, 1e-6)), 1) == 0:
+            b = needle_task(k1, self.batch, self.seq, self.vocab)
+            return {"tokens": b["tokens"], "loss_mask": None}
+        return {"tokens": token_stream(k1, self.batch, self.seq, self.vocab),
+                "loss_mask": None}
+
+
+def lm_loss(logits: jax.Array, tokens: jax.Array,
+            loss_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token cross entropy (teacher pre-training for benchmarks)."""
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], -1)[..., 0]
+    if loss_mask is not None:
+        m = loss_mask[:, 1:]
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+These are deliberately straightforward (dense, O(S^2) where applicable) and
+are used by tests/test_kernels.py to validate the kernels across shape and
+dtype sweeps in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gated_flash_ref(q, k, v, g, *, w_local: int, eps: float = 1e-6):
+    """Write-gated attention (training form), single head-group.
+
+    q: [N, Sq, hd]; k, v: [N, Sk, hd]; g: [N, Sk]. Queries are the last Sq
+    positions of the Sk-long stream (Sq == Sk here). Returns [N, Sq, hd].
+    """
+    n, sq, hd = q.shape
+    sk = k.shape[1]
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    causal = qi >= kj
+    in_win = causal & (qi - kj < w_local)
+    logits = jnp.einsum("nqd,nkd->nqk", q, k).astype(jnp.float32) * (hd ** -0.5)
+    logg = jnp.log(g.astype(jnp.float32) + eps)[:, None, :]
+    bias = jnp.where(in_win[None], 0.0, logg)
+    logits = logits + jnp.where(causal[None], bias, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("nqk,nkd->nqd", w.astype(v.dtype), v)
+
+
+def vertical_slash_ref(q, k, v, kg, vg, gpos, *, w_local: int):
+    """Budgeted vertical-slash prefill attention, single head-group.
+
+    q, k, v: [N, S, hd]; kg, vg: [N, C, hd] gathered global tokens with
+    absolute positions gpos [N, C] (int32; out-of-range => never visible).
+    Query i sees: local window (i-j < w_local, causal) from k, plus global
+    tokens with gpos <= i - w_local. One joint softmax. Returns [N, S, hd].
+    """
+    n, s, hd = q.shape
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    local_ok = (qi >= kj) & (qi - kj < w_local)
+    l1 = jnp.einsum("nqd,nkd->nqk", q, k).astype(jnp.float32) * (hd ** -0.5)
+    l1 = jnp.where(local_ok[None], l1, NEG_INF)
+    l2 = jnp.einsum("nqd,ncd->nqc", q, kg).astype(jnp.float32) * (hd ** -0.5)
+    vis = gpos[:, None, :] <= (jnp.arange(s)[None, :, None] - w_local)
+    l2 = jnp.where(vis, l2, NEG_INF)
+    logits = jnp.concatenate([l1, l2], axis=-1)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("nqk,nkd->nqd", w[..., :s].astype(v.dtype), v)
+    o = o + jnp.einsum("nqc,ncd->nqd", w[..., s:].astype(vg.dtype), vg)
+    return o
+
+
+def paged_decode_ref(q, k_pool, v_pool, page_table, lengths):
+    """Paged decode attention, head-folded-into-batch (paper Appendix B).
+
+    q: [N, hd] one query per (batch x kv-head) stream;
+    k_pool, v_pool: [P, page, hd]; page_table: [N, max_pages] int32;
+    lengths: [N] valid token count per stream. Returns [N, hd].
+    """
+    n, hd = q.shape
+    p, page, _ = k_pool.shape
+    mp = page_table.shape[1]
+    k = k_pool[page_table]  # [N, mp, page, hd]
+    v = v_pool[page_table]
+    k = k.reshape(n, mp * page, hd)
+    v = v.reshape(n, mp * page, hd)
+    pos = jnp.arange(mp * page)[None]
+    valid = pos < lengths[:, None]
+    logits = jnp.einsum("nd,nkd->nk", q, k).astype(jnp.float32) * (hd ** -0.5)
+    logits = jnp.where(valid, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("nk,nkd->nd", w.astype(v.dtype), v)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t. a, b: [B, S, D]."""
+    if h0 is None:
+        h0 = jnp.zeros(a[:, 0].shape, a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def gate_mlp_ref(x, w1, b1, w2, b2):
+    """Write-Gate MLP. x: [H, S, F]; w1: [H, F, M]; w2: [H, M, 1].
+    Returns g [H, S] in (0,1), float32."""
+    h = jnp.einsum("hsf,hfm->hsm", x, w1) + b1[:, None]
+    h = jax.nn.gelu(h)
+    y = jnp.einsum("hsm,hmo->hso", h, w2) + b2[:, None]
+    return jax.nn.sigmoid(y[..., 0].astype(jnp.float32))

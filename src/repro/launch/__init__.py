@@ -1,0 +1,3 @@
+# NOTE: do not import repro.launch.dryrun here — it sets XLA_FLAGS at import
+# time and must only be imported as the FIRST jax-touching module.
+from repro.launch import mesh, specs, steps  # noqa: F401

@@ -1,0 +1,135 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, per
+(arch x input-shape x step-kind) — weak-type-correct, shardable, no device
+allocation — plus direct cache-tree constructors for decode dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.dual_cache import init_dual_cache
+from repro.models import attention as A
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+
+# number of vision patches in the VLM stream (32x32 grid)
+VLM_GRID = (32, 32)
+VLM_N_IMG = VLM_GRID[0] * VLM_GRID[1]
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ==========================================================================
+# token / embedding inputs per step kind
+# ==========================================================================
+def train_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.arch_type == "audio":
+        s_dec = cfg.dec_max_len
+        return {
+            "tokens": sds((b, s_dec), jnp.int32),
+            "enc_embeds": sds((b, s // cfg.enc_seq_divisor, cfg.d_model), cfg.dtype),
+            "loss_mask": sds((b, s_dec), jnp.float32),
+        }
+    out = {
+        "tokens": sds((b, s), jnp.int32),
+        "loss_mask": sds((b, s), jnp.float32),
+    }
+    if cfg.arch_type == "vlm":
+        out["patch_embeds"] = sds((b, VLM_N_IMG, cfg.d_model), cfg.dtype)
+        out["positions"] = sds((3, b, s), jnp.int32)
+    return out
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.arch_type == "audio":
+        return {
+            "tokens": sds((b, cfg.dec_max_len), jnp.int32),
+            "enc_embeds": sds((b, s // cfg.enc_seq_divisor, cfg.d_model), cfg.dtype),
+        }
+    out = {"tokens": sds((b, s), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        out["patch_embeds"] = sds((b, VLM_N_IMG, cfg.d_model), cfg.dtype)
+        out["positions"] = sds((3, b, s), jnp.int32)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    return {"token": sds((shape.global_batch,), jnp.int32)}
+
+
+# ==========================================================================
+# decode cache construction (runs under jax.eval_shape for dry-runs)
+# ==========================================================================
+def _attn_block_cache(cfg: ModelConfig, bt: str, b: int, capacity: int,
+                      use_wgkv: bool, s_enc: Optional[int]):
+    dt = jnp.dtype(cfg.dtype)
+    if use_wgkv:
+        w_ring = cfg.sliding_window if bt == "local_attn" else cfg.wgkv.w_local
+        self_cache = init_dual_cache(
+            b, cfg.n_kv_heads, cfg.head_dim, w_local=w_ring,
+            budget=cfg.wgkv.global_budget(capacity), dtype=dt)
+    elif bt == "local_attn":
+        # baseline sliding-window arch: ring only (streaming)
+        self_cache = init_dual_cache(
+            b, cfg.n_kv_heads, cfg.head_dim, w_local=cfg.sliding_window,
+            budget=max(cfg.wgkv.sink, 16), dtype=dt)
+    else:
+        self_cache = A.init_dense_cache(b, cfg.n_kv_heads, cfg.head_dim,
+                                        capacity, dt)
+    if bt == "attn_cross":
+        assert s_enc is not None
+        cross_len = cfg.wgkv.global_budget(s_enc) if use_wgkv else s_enc
+        cross = A.CrossCache(
+            k=jnp.zeros((b, cfg.n_kv_heads, cross_len, cfg.head_dim), dt),
+            v=jnp.zeros((b, cfg.n_kv_heads, cross_len, cfg.head_dim), dt),
+            valid=jnp.ones((b, cfg.n_kv_heads, cross_len), bool),
+        )
+        return {"self": self_cache, "cross": cross}
+    return self_cache
+
+
+def _block_cache(cfg: ModelConfig, bt: str, b: int, capacity: int,
+                 use_wgkv: bool, s_enc: Optional[int]):
+    dt = jnp.dtype(cfg.dtype)
+    if bt in ("attn", "attn_moe", "local_attn", "attn_cross"):
+        return _attn_block_cache(cfg, bt, b, capacity, use_wgkv, s_enc)
+    if bt == "rglru":
+        return RG.init_rglru_state(cfg, b, dt)
+    if bt == "mlstm":
+        return XL.init_mlstm_state(cfg, b, dt)
+    if bt == "slstm":
+        return XL.init_slstm_state(cfg, b)
+    raise ValueError(bt)
+
+
+def build_decode_caches(cfg: ModelConfig, batch: int, capacity: int, *,
+                        use_wgkv: bool, s_enc: Optional[int] = None,
+                        prefilled: int = 0) -> Dict[str, Any]:
+    """Construct the decode cache tree directly (shape source of truth for
+    serve_step dry-runs; also used to warm-start serving)."""
+    mk = functools.partial(_block_cache, cfg, b=batch, capacity=capacity,
+                           use_wgkv=use_wgkv, s_enc=s_enc)
+    caches: Dict[str, Any] = {"t": jnp.full((batch,), prefilled, jnp.int32)}
+    if cfg.stem_pattern:
+        caches["stem"] = tuple(mk(bt=bt) for bt in cfg.stem_pattern)
+    one = {f"b{i}": mk(bt=bt) for i, bt in enumerate(cfg.block_pattern)}
+    caches["blocks"] = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_repeats,) + x.shape), one)
+    return caches
+
+
+def decode_cache_structs(cfg: ModelConfig, shape: InputShape, *,
+                         use_wgkv: bool) -> Any:
+    b, s = shape.global_batch, shape.seq_len
+    s_enc = s // cfg.enc_seq_divisor if cfg.is_encdec else None
+    return jax.eval_shape(
+        functools.partial(build_decode_caches, cfg, b, s,
+                          use_wgkv=use_wgkv, s_enc=s_enc, prefilled=0))

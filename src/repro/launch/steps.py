@@ -1,0 +1,252 @@
+"""Step builders for pjit lowering: (fn, example-arg structs, shardings).
+
+Used by dryrun.py (lower + compile on the production mesh), roofline
+analysis (L1/L2 unrolled-diff accounting), and the real train/serve
+drivers on small meshes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import specs as S
+from repro.models import inference as I
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.sharding import rules
+from repro.training import trainer as TR
+from repro.training.optimizer import cosine_schedule
+
+
+def _with_act_sharding(fn, mesh: Mesh, batch: int, cfg=None):
+    """Pin the residual-stream batch sharding inside the step (stabilizes
+    SPMD propagation across depths — required for L1/L2 roofline diffs)."""
+    bax = rules.pick(batch, mesh, rules.batch_axes(mesh), "data")
+    e_ax = None
+    if cfg is not None and cfg.moe is not None:
+        e_ax = rules.pick(cfg.moe.n_experts, mesh, "model")
+
+    def wrapped(*args, **kw):
+        with rules.activation_sharding(bax, expert_ax=e_ax):
+            return fn(*args, **kw)
+
+    return wrapped
+
+
+class StepBundle(NamedTuple):
+    fn: Any                 # python callable (to be jit'ed by caller)
+    args: Tuple             # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...]
+    knobs: Dict[str, Any]
+
+
+# ==========================================================================
+# execution knobs per (arch, shape)
+# ==========================================================================
+def exec_knobs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Dict[str, Any]:
+    s = shape.seq_len
+    k: Dict[str, Any] = {"q_chunk": None, "block_chunk": None,
+                         "moe_groups": 1, "remat": False}
+    seq_for_attn = cfg.dec_max_len if cfg.arch_type == "audio" else s
+    if shape.kind == "train":
+        k["remat"] = True
+        if seq_for_attn >= 2048:
+            k["q_chunk"] = 512
+    if shape.kind == "prefill" and seq_for_attn >= 8192:
+        w = cfg.wgkv.w_local
+        nb = seq_for_attn // w
+        k["block_chunk"] = max(1, min(8, nb))
+        while nb % k["block_chunk"]:
+            k["block_chunk"] -= 1
+        k["q_chunk"] = 512  # baseline full-attention path
+    if cfg.moe is not None:
+        tokens = shape.global_batch * (seq_for_attn if shape.kind != "decode" else 1)
+        groups = 1
+        for cand in (rules._axsize(mesh, rules.batch_axes(mesh)),
+                     mesh.shape.get("data", 1), 1):
+            if tokens % cand == 0 and shape.global_batch % cand == 0:
+                groups = cand
+                break
+        k["moe_groups"] = groups
+    return k
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _replicated_tree(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: _named(mesh, P()), tree)
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(T.init_model, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def _input_shardings(inputs: Dict[str, Any], mesh: Mesh, batch: int):
+    out = {}
+    for k, v in inputs.items():
+        if k == "positions":          # [3, B, S]
+            out[k] = _named(mesh, P(None, rules.pick(batch, mesh, rules.batch_axes(mesh)), None))
+        else:
+            nd = len(v.shape)
+            out[k] = _named(mesh, rules.tokens_spec(mesh, batch, nd - 1))
+    return out
+
+
+# ==========================================================================
+# train step
+# ==========================================================================
+def make_train_bundle(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                      *, scan_unroll: bool = False) -> StepBundle:
+    knobs = exec_knobs(cfg, shape, mesh)
+    pstruct = param_structs(cfg)
+    inputs = S.train_inputs(cfg, shape)
+    lr = cosine_schedule(1e-3, 7500)
+
+    def _vlm_fix(params, batch):
+        batch = dict(batch)
+        if cfg.arch_type == "vlm":
+            embeds, pos3 = R.build_vlm_embeds(
+                params, cfg, batch.pop("tokens"), batch.pop("patch_embeds"),
+                S.VLM_GRID)
+            batch["tokens"] = None
+            batch["embeds"] = embeds
+            batch["positions"] = pos3
+        return batch
+
+    if cfg.wgkv.enabled and cfg.wgkv_applicable():
+        # the paper's training: gate-only distillation, frozen backbone
+        state_struct = jax.eval_shape(TR.init_train_state, pstruct)
+
+        def fn(state, params, batch):
+            batch = _vlm_fix(params, batch)
+            return TR.train_step(
+                state, params, cfg, batch, lr=lr,
+                moe_groups=knobs["moe_groups"], q_chunk=knobs["q_chunk"],
+                remat=knobs["remat"], scan_unroll=scan_unroll)
+
+        in_sh = (
+            _replicated_tree(state_struct, mesh),
+            rules.param_shardings(pstruct, mesh, cfg),
+            _input_shardings(inputs, mesh, shape.global_batch),
+        )
+        return StepBundle(_with_act_sharding(fn, mesh, shape.global_batch, cfg),
+                          (state_struct, pstruct, inputs), in_sh, (0,), knobs)
+
+    # WG-KV-inapplicable arch (xlstm): standard full-parameter LM training
+    state_struct = jax.eval_shape(TR.init_lm_train_state, pstruct)
+    psh = rules.param_shardings(pstruct, mesh, cfg)
+    state_sh = TR.LMTrainState(
+        psh, TR.AdamWState(_named(mesh, P()), psh, psh))
+
+    def fn(state, batch):
+        batch = _vlm_fix(state.params, batch)
+        return TR.lm_train_step(
+            state, cfg, batch, lr=lr, moe_groups=knobs["moe_groups"],
+            q_chunk=knobs["q_chunk"], remat=knobs["remat"],
+            scan_unroll=scan_unroll)
+
+    in_sh = (state_sh, _input_shardings(inputs, mesh, shape.global_batch))
+    return StepBundle(_with_act_sharding(fn, mesh, shape.global_batch, cfg),
+                      (state_struct, inputs), in_sh, (0,), knobs)
+
+
+# ==========================================================================
+# prefill step
+# ==========================================================================
+def make_prefill_bundle(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
+                        use_wgkv: bool, scan_unroll: bool = False) -> StepBundle:
+    knobs = exec_knobs(cfg, shape, mesh)
+    pstruct = param_structs(cfg)
+    inputs = S.prefill_inputs(cfg, shape)
+
+    def fn(params, batch):
+        batch = dict(batch)
+        kw: Dict[str, Any] = {}
+        if cfg.arch_type == "vlm":
+            batch.pop("positions", None)  # rebuilt as 3D M-RoPE ids below
+            embeds, pos3 = R.build_vlm_embeds(
+                params, cfg, batch.pop("tokens"), batch.pop("patch_embeds"),
+                S.VLM_GRID)
+            kw["embeds"] = embeds
+            kw["positions"] = pos3
+        out, caches = I.prefill(
+            params, cfg, batch.pop("tokens", None), use_wgkv=use_wgkv,
+            budget=cfg.wgkv.global_budget(shape.seq_len),
+            max_len=shape.seq_len + 64,
+            moe_groups=knobs["moe_groups"], block_chunk=knobs["block_chunk"],
+            q_chunk=knobs["q_chunk"], scan_unroll=scan_unroll, **batch, **kw)
+        return out.logits, out.mean_admission, caches
+
+    in_sh = (
+        rules.param_shardings(pstruct, mesh, cfg),
+        _input_shardings(inputs, mesh, shape.global_batch),
+    )
+    return StepBundle(_with_act_sharding(fn, mesh, shape.global_batch, cfg),
+                      (pstruct, inputs), in_sh, (), knobs)
+
+
+# ==========================================================================
+# decode (serve) step
+# ==========================================================================
+def make_decode_bundle(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
+                       use_wgkv: bool, scan_unroll: bool = False) -> StepBundle:
+    knobs = exec_knobs(cfg, shape, mesh)
+    pstruct = param_structs(cfg)
+    cstruct = S.decode_cache_structs(cfg, shape, use_wgkv=use_wgkv)
+    inputs = S.decode_inputs(cfg, shape)
+    seq_shard = shape.global_batch < rules._axsize(mesh, rules.batch_axes(mesh))
+    # decode §Perf: weights-stationary when the model-sharded params fit
+    # HBM alongside the cache — kills the per-step FSDP all-gathers
+    model_ways = mesh.shape.get("model", 1)
+    per_chip_param_gb = cfg.param_count() * 2 / model_ways / 2**30
+    replicate = knobs.setdefault(
+        "replicate_params", per_chip_param_gb <= 4.0)
+
+    def fn(params, caches, batch):
+        logits, new_caches, stats = I.decode_step(
+            params, cfg, batch["token"], caches,
+            moe_groups=knobs["moe_groups"], scan_unroll=scan_unroll)
+        return logits, new_caches
+
+    in_sh = (
+        rules.param_shardings(pstruct, mesh, cfg, replicate_fsdp=replicate),
+        rules.cache_shardings(cstruct, mesh, cfg, seq_shard=seq_shard),
+        _input_shardings(inputs, mesh, shape.global_batch),
+    )
+    return StepBundle(_with_act_sharding(fn, mesh, shape.global_batch, cfg),
+                      (pstruct, cstruct, inputs), in_sh, (1,), knobs)
+
+
+def make_bundle(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
+                use_wgkv: bool, scan_unroll: bool = False,
+                knob_overrides: Optional[Dict[str, Any]] = None) -> StepBundle:
+    if knob_overrides:
+        orig = exec_knobs
+
+        def patched(cfg_, shape_, mesh_):
+            k = orig(cfg_, shape_, mesh_)
+            k.update(knob_overrides)
+            return k
+
+        globals()["exec_knobs"], restore = patched, orig
+        try:
+            return make_bundle(cfg, shape, mesh, use_wgkv=use_wgkv,
+                               scan_unroll=scan_unroll)
+        finally:
+            globals()["exec_knobs"] = restore
+    if shape.kind == "train":
+        return make_train_bundle(cfg, shape, mesh, scan_unroll=scan_unroll)
+    if shape.kind == "prefill":
+        return make_prefill_bundle(cfg, shape, mesh, use_wgkv=use_wgkv,
+                                   scan_unroll=scan_unroll)
+    return make_decode_bundle(cfg, shape, mesh, use_wgkv=use_wgkv,
+                              scan_unroll=scan_unroll)

@@ -1,0 +1,84 @@
+"""Gate-distillation training driver (the paper's training recipe).
+
+Works at two scales:
+  * real run on this CPU container with --reduced (smoke/e2e examples)
+  * production lowering on the 16x16 / 2x16x16 mesh via dryrun.py
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch smollm-360m --reduced --steps 200 --batch 8 --seq 512 \
+        --lam 0.08 --out /tmp/gates.npz
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, get_reduced_config
+from repro.data.synthetic import DistillStream
+from repro.models import transformer as T
+from repro.training import checkpoint
+from repro.training import trainer as TR
+from repro.training.optimizer import cosine_schedule
+
+
+def run_training(cfg, *, steps: int, batch: int, seq: int, lam: float,
+                 peak_lr: float = 1e-3, seed: int = 0, log_every: int = 10,
+                 out: str | None = None, params=None, verbose: bool = True):
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = T.init_model(key, cfg)
+    state = TR.init_train_state(params)
+    lr = cosine_schedule(peak_lr, steps)
+    step_fn = TR.make_train_step(cfg, lr=lr, lam=lam)
+    stream = DistillStream(seed + 1, batch, seq, cfg.vocab_size)
+    history = []
+    t0 = time.time()
+    for i, batch_data in zip(range(steps), stream):
+        state, m = step_fn(state, params, batch=batch_data)
+        if i % log_every == 0 or i == steps - 1:
+            rec = {k: float(v) for k, v in m.items()}
+            rec["step"] = i
+            rec["wall_s"] = round(time.time() - t0, 1)
+            history.append(rec)
+            if verbose:
+                print(f"step {i:5d} loss={rec['loss']:.4f} "
+                      f"distill={rec['distill']:.4f} "
+                      f"admission={rec['admission_rate@0.1']:.3f} "
+                      f"({rec['wall_s']}s)", flush=True)
+    params = TR.set_gates(params, state.gates)
+    if out:
+        checkpoint.save(out, state.gates,
+                        meta={"arch": cfg.name, "lam": lam, "steps": steps,
+                              "history": history})
+    return params, state, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lam", type=float, default=0.08)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    cfg = cfg.replace(dtype="float32")
+    if not (cfg.wgkv.enabled and cfg.wgkv_applicable()):
+        raise SystemExit(f"{args.arch}: WG-KV inapplicable (no KV cache); "
+                         "see DESIGN.md §4")
+    _, state, history = run_training(
+        cfg, steps=args.steps, batch=args.batch, seq=args.seq, lam=args.lam,
+        peak_lr=args.lr, seed=args.seed, out=args.out)
+    print(json.dumps(history[-1], indent=1))
+
+
+if __name__ == "__main__":
+    main()

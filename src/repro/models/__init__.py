@@ -1,0 +1,10 @@
+from repro.models import (  # noqa: F401
+    attention,
+    inference,
+    layers,
+    moe,
+    registry,
+    rglru,
+    transformer,
+    xlstm,
+)

@@ -1,0 +1,342 @@
+"""Inference paths: prefill (populate caches) and decode_step (one token).
+
+Cache tree mirrors the parameter tree:
+  {"t": [B] int32, "stem": (block_cache, ...), "blocks": <stacked>,
+   "obs": <stacked ObsWindow> (only when eviction is enabled)}
+
+Per-block caches:
+  attn / attn_moe / local_attn — DualCache (WG-KV) or DenseCache (baseline)
+  attn_cross                  — {"self": DualCache|DenseCache, "cross": CrossCache}
+  rglru                       — RGLRUState;  mlstm/slstm — their states
+
+Composability (paper §5.4): ``DecodeOptions.quest_pages`` applies Quest
+read-time selection over the (global) cache; ``evict_hard_budget`` applies
+SnapKV-style eviction when a head's global count hits the bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import eviction as EV
+from repro.core import selection as SEL
+from repro.core.dual_cache import DualCache, init_dual_cache, prefill_populate
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MoE
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+from repro.models.transformer import _encode, _norm
+from repro.sharding.rules import constrain_tokens
+
+Params = Dict[str, Any]
+CacheTree = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeOptions:
+    quest_pages: Optional[int] = None      # read-time Selection budget (pages)
+    evict_hard_budget: Optional[int] = None  # post-write Eviction bound (tokens/head)
+    evict_frac: float = 0.10
+    w_obs: int = 256
+
+
+class PrefillOut(NamedTuple):
+    logits: jax.Array          # [B, V] for the last position
+    hidden: jax.Array          # [B, S, D]
+    mean_admission: jax.Array  # scalar: fraction of tokens with g >= tau
+
+
+# ==========================================================================
+# per-block prefill
+# ==========================================================================
+def _attn_block_prefill(p, cfg: ModelConfig, bt: str, x, positions, *,
+                        use_wgkv: bool, budget: int, max_len: int,
+                        block_chunk, q_chunk, enc_out, moe_groups,
+                        gate_override=None):
+    window = cfg.sliding_window if bt == "local_attn" else None
+    xin = _norm(cfg, p["ln1"], x)
+    b, s, _ = x.shape
+    dt = jnp.dtype(cfg.dtype)
+    adm = jnp.zeros((), jnp.float32)
+    if use_wgkv:
+        w_ring = window if window is not None else cfg.wgkv.w_local
+        r = A.attn_prefill_budgeted(
+            p["attn"], cfg, xin, positions, budget=budget, window=window,
+            block_chunk=block_chunk, gate_override=gate_override)
+        cache = init_dual_cache(b, cfg.n_kv_heads, cfg.head_dim,
+                                w_local=w_ring, budget=budget, dtype=dt)
+        cache = prefill_populate(cache, r.k_rope, r.v, r.g,
+                                 tau=cfg.wgkv.tau, sink=cfg.wgkv.sink)
+        h = r.out
+        adm = (r.g >= cfg.wgkv.tau).mean()
+    else:
+        h, k_rope, v = A.attn_prefill_full(p["attn"], cfg, xin, positions,
+                                           window=window, q_chunk=q_chunk)
+        cache = A.init_dense_cache(b, cfg.n_kv_heads, cfg.head_dim, max_len, dt)
+        cache = cache._replace(
+            k=cache.k.at[:, :, :s].set(k_rope.astype(dt)),
+            v=cache.v.at[:, :, :s].set(v.astype(dt)),
+            t=jnp.full((b,), s, jnp.int32),
+        )
+    x = x + h
+    if bt == "attn_cross":
+        xbudget = budget if use_wgkv else None
+        cc = A.build_cross_cache(p["xattn"], cfg, enc_out, budget=xbudget)
+        x = x + A.attn_cross(p["xattn"], cfg, _norm(cfg, p["ln_x"], x), cc)
+        cache = {"self": cache, "cross": cc}
+    if bt == "attn_moe":
+        y, _ = MoE.moe_ffn(p["moe"], cfg, _norm(cfg, p["ln2"], x), groups=moe_groups)
+        x = x + y
+    elif bt == "attn_cross" or cfg.arch_type == "audio":
+        x = x + L.gelu_mlp(p["mlp"], _norm(cfg, p["ln2"], x))
+    else:
+        x = x + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x))
+    return x, cache, adm
+
+
+def _block_prefill(p, cfg: ModelConfig, bt: str, x, positions, **kw):
+    if bt in ("attn", "attn_moe", "local_attn", "attn_cross"):
+        return _attn_block_prefill(p, cfg, bt, x, positions, **kw)
+    zero = jnp.zeros((), jnp.float32)
+    if bt == "rglru":
+        y, state = RG.rglru_block(p["rec"], cfg, _norm(cfg, p["ln1"], x))
+        x = x + y
+        x = x + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x))
+        return x, state, zero
+    if bt == "mlstm":
+        x, state = XL.mlstm_auto(p["cell"], cfg, x)
+        return x, state, zero
+    if bt == "slstm":
+        x, state = XL.slstm_block(p["cell"], cfg, x)
+        return x, state, zero
+    raise ValueError(bt)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array] = None,
+            *, positions: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            enc_embeds: Optional[jax.Array] = None,
+            use_wgkv: Optional[bool] = None, budget: Optional[int] = None,
+            max_len: Optional[int] = None, moe_groups: int = 1,
+            block_chunk: Optional[int] = None, q_chunk: Optional[int] = None,
+            opts: DecodeOptions = DecodeOptions(), scan_unroll: bool = False,
+            ) -> Tuple[PrefillOut, CacheTree]:
+    dt = jnp.dtype(cfg.dtype)
+    if use_wgkv is None:
+        use_wgkv = cfg.wgkv.enabled
+    x = L.embed(params["embed"], tokens, dt) if embeds is None else embeds.astype(dt)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if budget is None:
+        budget = cfg.wgkv.global_budget(max_len or s)
+    if max_len is None:
+        max_len = s + 64
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(params, cfg, enc_embeds.astype(dt))
+        x = x + L.sinusoidal_positions(s, cfg.d_model)[None].astype(dt)
+
+    pf = functools.partial(
+        _block_prefill, cfg=cfg, use_wgkv=use_wgkv, budget=budget,
+        max_len=max_len, block_chunk=block_chunk, q_chunk=q_chunk,
+        enc_out=enc_out, moe_groups=moe_groups)
+
+    caches: CacheTree = {"t": jnp.full((b,), s, jnp.int32)}
+    adm_sum, adm_n = jnp.zeros(()), 0
+    stem_caches = []
+    for i, bt in enumerate(cfg.stem_pattern):
+        x, c, adm = pf(params["stem"][i], bt=bt, x=x, positions=positions)
+        stem_caches.append(c)
+        adm_sum, adm_n = adm_sum + adm, adm_n + 1
+    if stem_caches:
+        caches["stem"] = tuple(stem_caches)
+
+    x = constrain_tokens(x)
+
+    def body(carry, bp):
+        xc, asum = carry
+        xc = constrain_tokens(xc)
+        bl_caches = {}
+        for i, bt in enumerate(cfg.block_pattern):
+            xc, c, adm = pf(bp[f"b{i}"], bt=bt, x=xc, positions=positions)
+            bl_caches[f"b{i}"] = c
+            asum = asum + adm
+        return (constrain_tokens(xc), asum), bl_caches
+
+    (x, adm_sum), blk_caches = jax.lax.scan(body, (x, adm_sum),
+                                            params["blocks"], unroll=scan_unroll)
+    adm_n += cfg.n_repeats * max(cfg.attn_blocks_per_pattern, 1)
+    caches["blocks"] = blk_caches
+    if opts.evict_hard_budget is not None:
+        caches["obs"] = _init_obs_tree(cfg, b, opts)
+    hidden = _norm(cfg, params["ln_f"], x)
+    logits = L.unembed(params["embed"], hidden[:, -1])
+    return PrefillOut(logits, hidden, adm_sum / max(adm_n, 1)), caches
+
+
+def _init_obs_tree(cfg: ModelConfig, b: int, opts: DecodeOptions):
+    one = lambda: EV.init_obs(b, cfg.n_heads, cfg.head_dim, opts.w_obs,
+                              jnp.dtype(cfg.dtype))
+    n_attn = cfg.attn_blocks_per_pattern
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_repeats, n_attn) + x.shape),
+        one())
+    return stacked
+
+
+# ==========================================================================
+# decode
+# ==========================================================================
+def _quest_mask(cfg: ModelConfig, cache: DualCache, q: jax.Array,
+                pages: int) -> jax.Array:
+    """Read-time Selection over the *global* cache (local + self always
+    visible). Returns [B, Hkv, C + W + 1] bool."""
+    c = cache.budget
+    assert c % SEL.PAGE_SIZE == 0, "global budget must be page-aligned for Quest"
+    gvalid = jnp.arange(c)[None, None] < cache.gcnt[..., None]
+    meta = SEL.build_page_meta(cache.gk, gvalid)
+    pmask = SEL.select_pages(q, meta, pages)
+    gmask = SEL.token_mask_from_pages(pmask) & gvalid
+    b, h = gvalid.shape[:2]
+    rest = jnp.ones((b, h, cache.w_local), bool)  # local ring always visible
+    return jnp.concatenate([gmask, rest], axis=-1)
+
+
+def _attn_block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *,
+                       opts: DecodeOptions, obs=None, moe_groups: int):
+    xin = _norm(cfg, p["ln1"], x_t[:, None])[:, 0]
+    self_cache = cache["self"] if bt == "attn_cross" else cache
+    window = cfg.sliding_window if bt == "local_attn" else None
+    trig = jnp.zeros((), jnp.float32)
+    if isinstance(self_cache, DualCache):
+        sel_fn = None
+        if opts.quest_pages is not None:
+            sel_fn = lambda cache, q: _quest_mask(cfg, cache, q, opts.quest_pages)
+        h, new_cache, g_new = A.attn_decode_wgkv(
+            p["attn"], cfg, xin, self_cache, token_select_fn=sel_fn)
+        if opts.evict_hard_budget is not None and obs is not None:
+            q_obs = A._heads((xin[:, None] @ p["attn"]["w_q"].astype(xin.dtype)),
+                             cfg.n_heads, cfg.head_dim)[:, :, 0]
+            obs = EV.push_query(obs, q_obs)
+            new_cache, trg = EV.maybe_evict(
+                new_cache, obs, hard_budget=opts.evict_hard_budget,
+                evict_frac=opts.evict_frac)
+            trig = trg.astype(jnp.float32).mean()
+    else:
+        h, new_cache = A.attn_decode_dense(p["attn"], cfg, xin, self_cache,
+                                           window=window)
+    x_t = x_t + h
+    if bt == "attn_cross":
+        x_t = x_t + A.attn_cross(p["xattn"], cfg,
+                                 _norm(cfg, p["ln_x"], x_t[:, None]),
+                                 cache["cross"])[:, 0]
+        new_cache = {"self": new_cache, "cross": cache["cross"]}
+    if bt == "attn_moe":
+        y, _ = MoE.moe_ffn(p["moe"], cfg, _norm(cfg, p["ln2"], x_t[:, None]),
+                           groups=moe_groups)
+        x_t = x_t + y[:, 0]
+    elif bt == "attn_cross" or cfg.arch_type == "audio":
+        x_t = x_t + L.gelu_mlp(p["mlp"], _norm(cfg, p["ln2"], x_t[:, None]))[:, 0]
+    else:
+        x_t = x_t + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x_t[:, None]))[:, 0]
+    return x_t, new_cache, obs, trig
+
+
+def _block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *, opts, obs,
+                  moe_groups):
+    if bt in ("attn", "attn_moe", "local_attn", "attn_cross"):
+        return _attn_block_decode(p, cfg, bt, x_t, cache, opts=opts, obs=obs,
+                                  moe_groups=moe_groups)
+    zero = jnp.zeros((), jnp.float32)
+    if bt == "rglru":
+        y, state = RG.rglru_step(p["rec"], cfg,
+                                 _norm(cfg, p["ln1"], x_t[:, None])[:, 0], cache)
+        x_t = x_t + y
+        x_t = x_t + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x_t[:, None]))[:, 0]
+        return x_t, state, obs, zero
+    if bt == "mlstm":
+        x_t, state = XL.mlstm_step(p["cell"], cfg, x_t, cache)
+        return x_t, state, obs, zero
+    if bt == "slstm":
+        x_t, state = XL.slstm_step(p["cell"], cfg, x_t, cache)
+        return x_t, state, obs, zero
+    raise ValueError(bt)
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                caches: CacheTree, *, moe_groups: int = 1,
+                opts: DecodeOptions = DecodeOptions(),
+                scan_unroll: bool = False
+                ) -> Tuple[jax.Array, CacheTree, Dict[str, jax.Array]]:
+    """token: [B] int32 -> (logits [B, V], new caches, stats)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], token[:, None], dt)[:, 0]  # [B, D]
+    b = x.shape[0]
+    t = caches["t"]
+    if cfg.is_encdec:
+        # sinusoid at per-batch position t
+        dmax = cfg.d_model
+        inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(dmax // 2) / max(dmax // 2 - 1, 1))
+        ang = t[:, None].astype(jnp.float32) * inv[None]
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dt)
+
+    new_caches: CacheTree = {"t": t + 1}
+    trig_sum = jnp.zeros((), jnp.float32)
+    bd = functools.partial(_block_decode, cfg=cfg, opts=opts,
+                           moe_groups=moe_groups)
+    stem_new = []
+    for i, bt in enumerate(cfg.stem_pattern):
+        x, c, _, trg = bd(params["stem"][i], bt=bt, x_t=x,
+                          cache=caches["stem"][i], obs=None)
+        stem_new.append(c)
+        trig_sum = trig_sum + trg
+    if stem_new:
+        new_caches["stem"] = tuple(stem_new)
+
+    has_obs = "obs" in caches
+
+    x = constrain_tokens(x)
+
+    def body(carry, xs):
+        xc, trig = carry
+        xc = constrain_tokens(xc)
+        if has_obs:
+            bp, bc, obs_b = xs
+        else:
+            bp, bc = xs
+            obs_b = None
+        new_bc = {}
+        new_obs = []
+        ai = 0
+        for i, bt in enumerate(cfg.block_pattern):
+            obs_i = None
+            if obs_b is not None and bt in ("attn", "attn_moe", "local_attn", "attn_cross"):
+                obs_i = jax.tree.map(lambda v: v[ai], obs_b)
+            xc, c, obs_o, trg = bd(bp[f"b{i}"], bt=bt, x_t=xc, cache=bc[f"b{i}"],
+                                   obs=obs_i)
+            new_bc[f"b{i}"] = c
+            if obs_i is not None:
+                new_obs.append(obs_o)
+                ai += 1
+            trig = trig + trg
+        ys = (new_bc, jax.tree.map(lambda *v: jnp.stack(v), *new_obs)) if new_obs \
+            else (new_bc,)
+        return (xc, trig), ys
+
+    xs = (params["blocks"], caches["blocks"], caches["obs"]) if has_obs \
+        else (params["blocks"], caches["blocks"])
+    (x, trig_sum), ys = jax.lax.scan(body, (x, trig_sum), xs,
+                                     unroll=scan_unroll)
+    new_caches["blocks"] = ys[0]
+    if has_obs:
+        new_caches["obs"] = ys[1]
+    hidden = _norm(cfg, params["ln_f"], x[:, None])[:, 0]
+    logits = L.unembed(params["embed"], hidden)
+    return logits, new_caches, {"evict_triggers": trig_sum}

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded,
+argsort-based dispatch (no giant one-hot tensors; expert-parallel friendly).
+
+Tokens are routed in ``groups`` (one per data shard in the distributed
+setting) so the dispatch buffer is [G, E, C, D] with G sharded over "data"
+and E over "model" — the all-to-all pattern the paper-pool MoE archs
+(qwen3-moe, granite-moe) need.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, jax.Array]
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Params:
+    assert cfg.moe is not None
+    dt = jnp.dtype(cfg.param_dtype)
+    d, e, f = cfg.d_model, cfg.moe.n_experts, cfg.moe.expert_d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], (d, e), dt, scale=0.02),
+        "w_gate": L.dense_init(ks[1], (e, d, f), dt),
+        "w_up": L.dense_init(ks[2], (e, d, f), dt),
+        "w_down": L.dense_init(ks[3], (e, f, d), dt),
+    }
+
+
+def _capacity(tokens_per_group: int, n_experts: int, top_k: int,
+              factor: float) -> int:
+    c = int(tokens_per_group * top_k / n_experts * factor) + 1
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def _dispatch_one_group(x, probs, top_idx, top_w, capacity, n_experts):
+    """x: [T, D]; top_idx/top_w: [T, K]. Returns (y [T, D], load [E])."""
+    t, k = top_idx.shape
+    flat_e = top_idx.reshape(t * k)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_w.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    stok = flat_tok[order]
+    sw = flat_w[order]
+    start = jnp.searchsorted(se, jnp.arange(n_experts), side="left")
+    # slot position of each sorted entry within its expert
+    slot = jnp.arange(t * k) - start[se]
+    keep = slot < capacity
+    # build [E, C] -> sorted-position table
+    pos_ec = start[:, None] + jnp.arange(capacity)[None]          # [E, C]
+    in_range = pos_ec < jnp.searchsorted(se, jnp.arange(n_experts), side="right")[:, None]
+    pos_ec = jnp.minimum(pos_ec, t * k - 1)
+    tok_ec = stok[pos_ec]                                         # [E, C]
+    w_ec = jnp.where(in_range, sw[pos_ec], 0.0)                   # [E, C]
+    valid_ec = in_range
+    x_ec = x[tok_ec] * valid_ec[..., None].astype(x.dtype)        # [E, C, D]
+    load = jax.ops.segment_sum(keep.astype(jnp.float32), se,
+                               num_segments=n_experts)
+    return x_ec, tok_ec, w_ec, valid_ec, load
+
+
+def moe_ffn(p: Params, cfg: ModelConfig, x: jax.Array, *, groups: int = 1
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, D] -> (y [B, S, D], aux dict with load-balance loss)."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    tot = b * s
+    assert tot % groups == 0, (tot, groups)
+    tg = tot // groups
+    e, k = mc.n_experts, mc.top_k
+    cap = _capacity(tg, e, k, mc.capacity_factor)
+    xf = x.reshape(groups, tg, d)
+    logits = xf @ p["router"].astype(x.dtype)                     # [G, Tg, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top_w, top_idx = jax.lax.top_k(probs, k)                      # [G, Tg, K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    disp = jax.vmap(
+        lambda xx, pp, ti, tw: _dispatch_one_group(xx, pp, ti, tw, cap, e)
+    )(xf, probs, top_idx, top_w)
+    x_ec, tok_ec, w_ec, valid_ec, load = disp                     # [G, E, C, *]
+
+    # pin shardings: groups over data, experts over model. Without these
+    # XLA's backward pass replicates [G, E, C, D]-shaped tensors over the
+    # data axis, inflating all-reduce traffic ~G-fold (EXPERIMENTS.md §Perf)
+    from repro.sharding.rules import constrain_moe
+
+    x_ec = constrain_moe(x_ec, "dispatch")
+    h = jnp.einsum("gecd,edf->gecf", x_ec, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", x_ec, p["w_up"].astype(x.dtype))
+    yo = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u,
+                    p["w_down"].astype(x.dtype))
+    yo = yo * (w_ec[..., None] * valid_ec[..., None]).astype(yo.dtype)
+    yo = constrain_moe(yo, "dispatch")
+
+    def combine(y_e, tok_e):
+        return jax.ops.segment_sum(y_e.reshape(e * cap, d),
+                                   tok_e.reshape(e * cap), num_segments=tg)
+
+    y = constrain_moe(jax.vmap(combine)(yo, tok_ec), "grouped")
+    y = y.reshape(b, s, d)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = load / jnp.maximum(load.sum(-1, keepdims=True), 1.0)  # [G,E]
+    mean_prob = probs.mean(axis=1)                                      # [G,E]
+    lb = e * (frac_tokens * mean_prob).sum(-1).mean()
+    dropped = 1.0 - load.sum() / (groups * tg * k)
+    return y, {"lb_loss": lb, "router_drop_frac": dropped}

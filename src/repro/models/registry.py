@@ -1,0 +1,146 @@
+"""Model registry: config -> init/forward, analytic parameter counting,
+and modality-frontend stubs (VLM patch embeddings, whisper frames)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.gate import gate_param_count
+from repro.models import inference, transformer
+
+init_model = transformer.init_model
+forward = transformer.forward
+prefill = inference.prefill
+decode_step = inference.decode_step
+DecodeOptions = inference.DecodeOptions
+
+
+# ==========================================================================
+# analytic parameter counting (mirrors init_* exactly; verified by tests)
+# ==========================================================================
+def _block_params(cfg: ModelConfig, bt: str, active_only: bool) -> int:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    norm = 2 * d if cfg.arch_type == "audio" else d  # layernorm has bias
+
+    def attn_p() -> int:
+        n = d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+        if cfg.qk_norm:
+            n += 2 * hd
+        if cfg.wgkv.enabled:
+            n += gate_param_count(cfg)
+        return n
+
+    if bt in ("attn", "local_attn"):
+        return 2 * norm + attn_p() + 3 * d * cfg.d_ff
+    if bt == "attn_moe":
+        mc = cfg.moe
+        full = cfg.moe.n_experts * 3 * d * mc.expert_d_ff
+        act = mc.top_k * 3 * d * mc.expert_d_ff
+        return 2 * norm + attn_p() + d * mc.n_experts + (act if active_only else full)
+    if bt == "attn_cross":
+        mlp = 2 * d * cfg.d_ff + cfg.d_ff + d  # gelu mlp with biases
+        return 3 * norm + 2 * attn_p() + mlp
+    if bt == "enc_attn":
+        base = d * hq * hd + 2 * d * hkv * hd + hq * hd * d  # no gate on enc
+        mlp = 2 * d * cfg.d_ff + cfg.d_ff + d
+        return 2 * norm + base + mlp
+    if bt == "rglru":
+        dr = int(cfg.rglru_expand * d)
+        dh = dr // hq
+        rec = (2 * d * dr + cfg.rglru_conv_width * dr
+               + 2 * hq * dh * dh + 2 * dr + dr + dr * d)
+        return 2 * norm + rec + 3 * d * cfg.d_ff
+    if bt == "mlstm":
+        dm = int(cfg.xlstm_proj_factor * d)
+        return (d + 2 * d * dm + cfg.xlstm_conv_width * dm + 3 * dm * dm
+                + 2 * (dm * hq + hq) + dm + dm * d)
+    if bt == "slstm":
+        dh = d // hq
+        dff = int(d * 4 / 3 / 2) * 2
+        return (d + d * 4 * d + 4 * hq * dh * dh + 4 * d + d
+                + 2 * d * dff + dff * d)
+    raise ValueError(bt)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    n = cfg.vocab_size * cfg.d_model
+    if not cfg.tie_embeddings:
+        n += cfg.d_model * cfg.vocab_size
+    for bt in cfg.stem_pattern:
+        n += _block_params(cfg, bt, active_only)
+    for bt in cfg.block_pattern:
+        n += cfg.n_repeats * _block_params(cfg, bt, active_only)
+    for bt in cfg.enc_block_pattern:
+        n += cfg.n_enc_repeats * _block_params(cfg, bt, active_only)
+    n += 2 * cfg.d_model if cfg.arch_type == "audio" else cfg.d_model  # ln_f
+    if cfg.is_encdec:
+        n += 2 * cfg.d_model if cfg.arch_type == "audio" else cfg.d_model
+    return n
+
+
+def count_params_tree(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def gate_params_tree(params) -> int:
+    """Parameters belonging to Write-Gate MLPs (paper: ~0.4% of total)."""
+    total = 0
+
+    def walk(tree, in_gate=False):
+        nonlocal total
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, in_gate or k == "gate")
+        elif isinstance(tree, (tuple, list)):
+            for v in tree:
+                walk(v, in_gate)
+        elif in_gate and hasattr(tree, "size"):
+            total += tree.size
+
+    walk(params)
+    return total
+
+
+# ==========================================================================
+# modality-frontend stubs (the one sanctioned carve-out)
+# ==========================================================================
+def build_vlm_embeds(params, cfg: ModelConfig, tokens: jax.Array,
+                     patch_embeds: jax.Array, grid_hw: Tuple[int, int]
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """embeds [B,S,D] with image patches in the leading slots; positions3
+    [3,B,S] with spatial (t,h,w) ids for the vision span and equal text ids
+    after it (Qwen2-VL M-RoPE scheme)."""
+    from repro.models import layers as L
+
+    b, s = tokens.shape
+    n_img = patch_embeds.shape[1]
+    gh, gw = grid_hw
+    assert gh * gw == n_img and n_img <= s
+    dt = jnp.dtype(cfg.dtype)
+    emb = L.embed(params["embed"], tokens, dt)
+    emb = emb.at[:, :n_img].set(patch_embeds.astype(dt))
+    # vision span: t=0, h=row, w=col; text: all three advance together
+    rows = jnp.repeat(jnp.arange(gh), gw)
+    cols = jnp.tile(jnp.arange(gw), gh)
+    t_img = jnp.zeros((n_img,), jnp.int32)
+    text_start = max(gh, gw)  # Qwen2-VL: text resumes at max spatial extent
+    text_pos = jnp.arange(s - n_img, dtype=jnp.int32) + text_start
+    pt = jnp.concatenate([t_img, text_pos])
+    ph = jnp.concatenate([rows.astype(jnp.int32), text_pos])
+    pw = jnp.concatenate([cols.astype(jnp.int32), text_pos])
+    pos3 = jnp.stack([pt, ph, pw])  # [3, S]
+    pos3 = jnp.broadcast_to(pos3[:, None], (3, b, s))
+    return emb, pos3
+
+
+def whisper_frame_embeds(key: jax.Array, cfg: ModelConfig, batch: int,
+                         n_frames: int) -> jax.Array:
+    """STUB for mel-spectrogram + conv feature extractor: random frame
+    embeddings [B, n_frames // enc_seq_divisor, D] standing in for the conv
+    stack's output (2x temporal downsample)."""
+    s_enc = n_frames // cfg.enc_seq_divisor
+    return jax.random.normal(key, (batch, s_enc, cfg.d_model),
+                             jnp.dtype(cfg.dtype)) * 0.1

@@ -1,0 +1,307 @@
+"""Generic pattern-super-block decoder (and enc-dec) assembly.
+
+A model = embed -> [stem blocks] -> scan over ``n_repeats`` copies of the
+``block_pattern`` super-block (stacked params, MaxText-style) -> final norm
+-> unembed. Heterogeneous patterns (hybrid/ssm) put several block types in
+one super-block, so the scan body stays uniform.
+
+Three execution families:
+  forward(...)      — full-sequence training/teacher/eval forward
+  prefill(...)      — inference prefill; returns logits + per-layer caches
+  decode_step(...)  — one-token step updating caches
+
+Caches mirror the param tree: {"stem": (cache,...), "blocks": stacked}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dual_cache import DualCache, init_dual_cache, prefill_populate
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MoE
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+from repro.sharding.rules import constrain_tokens
+
+Params = Dict[str, Any]
+
+
+def _norm_init(cfg: ModelConfig, dt):
+    if cfg.arch_type == "audio":
+        return L.init_layernorm(cfg.d_model, dt)
+    return L.init_rmsnorm(cfg.d_model, dt)
+
+
+def _norm(cfg: ModelConfig, p, x):
+    if cfg.arch_type == "audio":
+        return L.layernorm(p, x)
+    return L.rmsnorm(p, x)
+
+
+# ==========================================================================
+# block init
+# ==========================================================================
+def init_block(key: jax.Array, cfg: ModelConfig, bt: str) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    if bt in ("attn", "local_attn", "attn_moe"):
+        p = {
+            "ln1": _norm_init(cfg, dt),
+            "attn": A.init_attention(ks[0], cfg, kind="self"),
+            "ln2": _norm_init(cfg, dt),
+        }
+        if bt == "attn_moe":
+            p["moe"] = MoE.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt)
+        return p
+    if bt == "attn_cross":
+        return {
+            "ln1": _norm_init(cfg, dt),
+            "attn": A.init_attention(ks[0], cfg, kind="self"),
+            "ln_x": _norm_init(cfg, dt),
+            "xattn": A.init_attention(ks[1], cfg, kind="cross",
+                                      with_gate=cfg.wgkv.enabled),
+            "ln2": _norm_init(cfg, dt),
+            "mlp": L.init_gelu_mlp(ks[2], cfg.d_model, cfg.d_ff, dt),
+        }
+    if bt == "enc_attn":
+        return {
+            "ln1": _norm_init(cfg, dt),
+            "attn": A.init_attention(ks[0], cfg, kind="enc"),
+            "ln2": _norm_init(cfg, dt),
+            "mlp": L.init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, dt),
+        }
+    if bt == "rglru":
+        return {
+            "ln1": _norm_init(cfg, dt),
+            "rec": RG.init_rglru(ks[0], cfg),
+            "ln2": _norm_init(cfg, dt),
+            "mlp": L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt),
+        }
+    if bt == "mlstm":
+        return {"cell": XL.init_mlstm(ks[0], cfg)}
+    if bt == "slstm":
+        return {"cell": XL.init_slstm(ks[0], cfg)}
+    raise ValueError(f"unknown block type {bt!r}")
+
+
+def init_superblock(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{i}": init_block(ks[i], cfg, bt)
+            for i, bt in enumerate(cfg.block_pattern)}
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    ke, kb, ks, kenc = jax.random.split(key, 4)
+    params: Params = {"embed": L.init_embedding(ke, cfg)}
+    if cfg.stem_pattern:
+        kst = jax.random.split(ks, len(cfg.stem_pattern))
+        params["stem"] = tuple(
+            init_block(kst[i], cfg, bt) for i, bt in enumerate(cfg.stem_pattern)
+        )
+    params["blocks"] = jax.vmap(lambda k: init_superblock(k, cfg))(
+        jax.random.split(kb, cfg.n_repeats))
+    params["ln_f"] = _norm_init(cfg, dt)
+    if cfg.is_encdec:
+        kencb, kencn = jax.random.split(kenc)
+        params["enc"] = {
+            "blocks": jax.vmap(lambda k: {
+                f"b{i}": init_block(jax.random.fold_in(k, i), cfg, bt)
+                for i, bt in enumerate(cfg.enc_block_pattern)
+            })(jax.random.split(kencb, cfg.n_enc_repeats)),
+            "ln_f": _norm_init(cfg, dt),
+        }
+    return params
+
+
+# ==========================================================================
+# full-sequence block forward (train / teacher / hard-eval)
+# ==========================================================================
+class BlockAux(NamedTuple):
+    gates: Optional[jax.Array]  # [n_attn_in_block(=1), B, Hkv, S] or None
+    lb_loss: jax.Array
+
+
+def block_forward(p: Params, cfg: ModelConfig, bt: str, x: jax.Array,
+                  positions: jax.Array, *, mode: str,
+                  enc_out: Optional[jax.Array] = None,
+                  moe_groups: int = 1, q_chunk: Optional[int] = None,
+                  gate_override: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, BlockAux]:
+    """mode: "teacher" | "gated" | "hard". ``gate_override``: [B, Hkv, S]
+    static admission scores replacing the learned gate (Local-Attention /
+    DuoAttention baselines re-contextualized as admission policies)."""
+    gate_mode = {"teacher": "off", "gated": "gated", "hard": "hard"}[mode]
+    zero = jnp.zeros((), jnp.float32)
+    if bt in ("attn", "attn_moe", "local_attn", "attn_cross"):
+        window = cfg.sliding_window if bt == "local_attn" else None
+        h, g = A.attn_train(p["attn"], cfg, _norm(cfg, p["ln1"], x), positions,
+                            gate_mode=gate_mode, window=window, q_chunk=q_chunk,
+                            gate_override=gate_override)
+        x = x + h
+        if bt == "attn_cross":
+            cc = A.build_cross_cache(p["xattn"], cfg, enc_out)
+            x = x + A.attn_cross(p["xattn"], cfg, _norm(cfg, p["ln_x"], x), cc)
+        lb = zero
+        if bt == "attn_moe":
+            y, aux = MoE.moe_ffn(p["moe"], cfg, _norm(cfg, p["ln2"], x),
+                                 groups=moe_groups)
+            x = x + y
+            lb = aux["lb_loss"]
+        elif cfg.arch_type == "audio":
+            x = x + L.gelu_mlp(p["mlp"], _norm(cfg, p["ln2"], x))
+        else:
+            x = x + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x))
+        gates = None if g is None else g[None]
+        return x, BlockAux(gates, lb)
+    if bt == "enc_attn":
+        x = x + A.attn_encoder(p["attn"], cfg, _norm(cfg, p["ln1"], x))
+        x = x + L.gelu_mlp(p["mlp"], _norm(cfg, p["ln2"], x))
+        return x, BlockAux(None, zero)
+    if bt == "rglru":
+        y, _ = RG.rglru_block(p["rec"], cfg, _norm(cfg, p["ln1"], x))
+        x = x + y
+        x = x + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x))
+        return x, BlockAux(None, zero)
+    if bt == "mlstm":
+        x, _ = XL.mlstm_auto(p["cell"], cfg, x)
+        return x, BlockAux(None, zero)
+    if bt == "slstm":
+        x, _ = XL.slstm_block(p["cell"], cfg, x)
+        return x, BlockAux(None, zero)
+    raise ValueError(bt)
+
+
+def _encode(params: Params, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    s = enc_embeds.shape[1]
+    x = enc_embeds + L.sinusoidal_positions(s, cfg.d_model)[None].astype(enc_embeds.dtype)
+
+    def body(xc, bp):
+        for i, bt in enumerate(cfg.enc_block_pattern):
+            xc, _ = block_forward(bp[f"b{i}"], cfg, bt, xc,
+                                  jnp.zeros((1, 1), jnp.int32), mode="teacher")
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"]["blocks"])
+    return _norm(cfg, params["enc"]["ln_f"], x)
+
+
+class ForwardResult(NamedTuple):
+    logits: jax.Array
+    hidden: jax.Array                 # final-layer hidden states [B, S, D]
+    gates: Optional[jax.Array]        # [L_attn, B, Hkv, S]
+    lb_loss: jax.Array
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array] = None,
+            *, positions: Optional[jax.Array] = None, mode: str = "teacher",
+            embeds: Optional[jax.Array] = None,
+            enc_embeds: Optional[jax.Array] = None,
+            moe_groups: int = 1, q_chunk: Optional[int] = None,
+            with_logits: bool = True, remat: bool = False,
+            scan_unroll: bool = False,
+            gate_override: Optional[jax.Array] = None) -> ForwardResult:
+    """Full-sequence forward.
+
+    tokens: [B, S] int32 (or ``embeds`` [B, S, D] for VLM vision streams).
+    positions: [B, S] or [3, B, S] (M-RoPE). enc_embeds: [B, S_enc, D]
+    for enc-dec archs (whisper frame embeddings, conv-frontend stub).
+    gate_override: [L_attn, B, Hkv, S] (per attn layer) or [B, Hkv, S]
+    (broadcast) static admission scores for baseline policies.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if embeds is None:
+        x = L.embed(params["embed"], tokens, dt)
+    else:
+        x = embeds.astype(dt)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    enc_out = None
+    if cfg.is_encdec:
+        assert enc_embeds is not None, "enc-dec arch needs enc_embeds"
+        enc_out = _encode(params, cfg, enc_embeds.astype(dt))
+        pos_emb = L.sinusoidal_positions(s, cfg.d_model).astype(dt)
+        x = x + pos_emb[None]
+
+    fwd = functools.partial(block_forward, cfg=cfg, mode=mode, enc_out=enc_out,
+                            moe_groups=moe_groups, q_chunk=q_chunk)
+    n_attn_pb = cfg.attn_blocks_per_pattern
+    go_stem, go_blocks = None, None
+    if gate_override is not None:
+        if gate_override.ndim == 3:  # broadcast one policy to all layers
+            n_stem = sum(1 for t in cfg.stem_pattern
+                         if t in ("attn", "attn_moe", "local_attn", "attn_cross"))
+            go_stem = [gate_override] * n_stem
+            go_blocks = jnp.broadcast_to(
+                gate_override[None, None],
+                (cfg.n_repeats, n_attn_pb) + gate_override.shape)
+        else:  # [L_attn, B, H, S]: stem layers first, then scanned stack
+            n_stem = sum(1 for t in cfg.stem_pattern
+                         if t in ("attn", "attn_moe", "local_attn", "attn_cross"))
+            go_stem = [gate_override[i] for i in range(n_stem)]
+            go_blocks = gate_override[n_stem:].reshape(
+                (cfg.n_repeats, n_attn_pb) + gate_override.shape[1:])
+    stem_gates = []
+    lb_total = jnp.zeros((), jnp.float32)
+    si = 0
+    for i, bt in enumerate(cfg.stem_pattern):
+        ov = None
+        if go_stem is not None and bt in ("attn", "attn_moe", "local_attn",
+                                          "attn_cross"):
+            ov = go_stem[si]
+            si += 1
+        x, aux = fwd(params["stem"][i], bt=bt, x=x, positions=positions,
+                     gate_override=ov)
+        if aux.gates is not None:
+            stem_gates.append(aux.gates)
+        lb_total = lb_total + aux.lb_loss
+
+    x = constrain_tokens(x)
+
+    def body(carry, xs):
+        bp = xs[0] if go_blocks is not None else xs
+        ov_blk = xs[1] if go_blocks is not None else None
+        xc, lb = carry
+        xc = constrain_tokens(xc)
+        gs = []
+        ai = 0
+        for i, bt in enumerate(cfg.block_pattern):
+            ov = None
+            if ov_blk is not None and bt in ("attn", "attn_moe", "local_attn",
+                                             "attn_cross"):
+                ov = ov_blk[ai]
+                ai += 1
+            xc, aux = fwd(bp[f"b{i}"], bt=bt, x=xc, positions=positions,
+                          gate_override=ov)
+            if aux.gates is not None:
+                gs.append(aux.gates)
+            lb = lb + aux.lb_loss
+        g = jnp.concatenate(gs, 0) if gs else jnp.zeros((0, b, cfg.n_kv_heads, s))
+        return (constrain_tokens(xc), lb), g
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (params["blocks"], go_blocks) if go_blocks is not None \
+        else params["blocks"]
+    (x, lb_total), gstack = jax.lax.scan(body, (x, lb_total), xs,
+                                         unroll=scan_unroll)
+    # gstack: [n_repeats, n_attn_pb, B, H, S] -> [L_attn, B, H, S]
+    gates = None
+    if mode != "teacher" and cfg.wgkv.enabled:
+        parts = list(stem_gates)
+        if gstack.shape[1] > 0:
+            parts.append(gstack.reshape((-1,) + gstack.shape[2:]))
+        gates = jnp.concatenate(parts, 0) if parts else None
+    hidden = _norm(cfg, params["ln_f"], x)
+    logits = L.unembed(params["embed"], hidden) if with_logits else jnp.zeros(())
+    return ForwardResult(logits, hidden, gates, lb_total)

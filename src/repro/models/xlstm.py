@@ -1,0 +1,367 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential exponential gating).
+
+mLSTM training uses the parallel (attention-like) form with log-space
+cumulative forget gates and a row-wise stabilizer; decode uses the O(1)
+recurrent form (C, n, m state). sLSTM is inherently sequential
+(``jax.lax.scan`` over time, block-diagonal recurrent weights per head);
+its in-scan FLOPs are added analytically in roofline/analysis.py since XLA
+cost analysis counts while-bodies once.
+
+No KV cache exists in either block — WG-KV is inapplicable to this arch
+(DESIGN.md §4); the framework runs it with its native O(1) state.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, jax.Array]
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+class MLSTMState(NamedTuple):
+    conv: jax.Array  # [B, cw-1, dm] trailing conv inputs
+    c: jax.Array     # [B, H, dh, dh] matrix memory
+    n: jax.Array     # [B, H, dh] normalizer
+    m: jax.Array     # [B, H] stabilizer
+
+
+def _mdims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    dm = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    return dm, h, dm // h
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    dm, h, dh = _mdims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "norm": L.init_rmsnorm(d, dt),
+        "w_up_x": L.dense_init(ks[0], (d, dm), dt),
+        "w_up_z": L.dense_init(ks[1], (d, dm), dt),
+        "conv": (jax.random.normal(ks[2], (cfg.xlstm_conv_width, dm)) * 0.02).astype(dt),
+        "w_q": L.dense_init(ks[3], (dm, dm), dt),
+        "w_k": L.dense_init(ks[4], (dm, dm), dt),
+        "w_v": L.dense_init(ks[5], (dm, dm), dt),
+        "w_i": L.dense_init(ks[6], (dm, h), dt, scale=0.02),
+        "b_i": jnp.zeros((h,), dt),
+        "w_f": L.dense_init(ks[7], (dm, h), dt, scale=0.02),
+        # positive forget bias => long memory at init
+        "b_f": jnp.full((h,), 3.0, dt),
+        "out_norm": L.init_rmsnorm(dm, dt),
+        "w_down": L.dense_init(ks[8], (dm, d), dt),
+    }
+
+
+def _mlstm_proj(p, cfg, x, conv_state):
+    """Shared projections. x: [B, S, D]."""
+    dm, h, dh = _mdims(cfg)
+    xm = x @ p["w_up_x"].astype(x.dtype)             # [B,S,dm]
+    z = jax.nn.silu(x @ p["w_up_z"].astype(x.dtype))
+    cw = p["conv"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], cw - 1, dm), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), xm], 1)
+    xc = sum(xp[:, i:i + x.shape[1]] * p["conv"][i].astype(x.dtype) for i in range(cw))
+    xc = jax.nn.silu(xc)
+    heads = lambda y: y.reshape(y.shape[0], y.shape[1], h, dh).transpose(0, 2, 1, 3)
+    q = heads(xc @ p["w_q"].astype(x.dtype))
+    k = heads(xc @ p["w_k"].astype(x.dtype)) / (dh ** 0.5)
+    v = heads(xm @ p["w_v"].astype(x.dtype))
+    i_t = (xc @ p["w_i"].astype(x.dtype) + p["b_i"].astype(x.dtype))  # [B,S,H]
+    f_t = (xc @ p["w_f"].astype(x.dtype) + p["b_f"].astype(x.dtype))
+    return xm, z, q, k, v, i_t.astype(jnp.float32), f_t.astype(jnp.float32), xp[:, -(cw - 1):]
+
+
+def mlstm_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                state: MLSTMState | None = None
+                ) -> Tuple[jax.Array, MLSTMState]:
+    """Parallel-form forward (single chunk of the chunkwise formulation —
+    kept as the readable O(S^2) reference; ``mlstm_block_chunkwise`` is the
+    production path for long sequences)."""
+    if state is not None:
+        # the single-chunk quadratic derivation below assumes a fresh
+        # stream; delegate streaming continuation to the chunkwise form
+        return mlstm_block_chunkwise(p, cfg, x, state, chunk=x.shape[1])
+    xin = L.rmsnorm(p["norm"], x)
+    conv_state = state.conv if state is not None else None
+    xm, z, q, k, v, i_t, f_t, new_conv = _mlstm_proj(p, cfg, xin, conv_state)
+    b, s, d = xin.shape
+    dm, h, dh = _mdims(cfg)
+    logf = jax.nn.log_sigmoid(f_t).transpose(0, 2, 1)    # [B,H,S]
+    cum = jnp.cumsum(logf, axis=-1)
+    i_bh = i_t.transpose(0, 2, 1)                        # [B,H,S]
+    # log D_ij = i_j + cum_i - cum_j for j <= i
+    ld = i_bh[:, :, None, :] + cum[:, :, :, None] - cum[:, :, None, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    ld = jnp.where(causal[None, None], ld, -jnp.inf)
+    m_row = jnp.max(ld, axis=-1)                         # [B,H,S] stabilizer
+    dmat = jnp.exp(ld - m_row[..., None])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    w = scores * dmat
+    denom = jnp.maximum(jnp.abs(w.sum(-1)), jnp.exp(-m_row))  # [B,H,S]
+    hsa = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    hsa = hsa / denom[..., None]
+    hsa = hsa.transpose(0, 2, 1, 3).reshape(b, s, dm).astype(x.dtype)
+    out = L.rmsnorm(p["out_norm"], hsa) * z
+    y = out @ p["w_down"].astype(x.dtype)
+    # closed-form final recurrent state (for prefill -> decode handoff)
+    m_fin = jnp.max(i_bh + cum[:, :, -1:] - cum, axis=-1)          # [B,H]
+    wfin = jnp.exp(i_bh + cum[:, :, -1:] - cum - m_fin[..., None])  # [B,H,S]
+    c_fin = jnp.einsum("bhs,bhsd,bhse->bhde", wfin, k.astype(jnp.float32),
+                       v.astype(jnp.float32))
+    n_fin = jnp.einsum("bhs,bhsd->bhd", wfin, k.astype(jnp.float32))
+    if state is not None:
+        # fold in pre-existing state (prefill continuing a stream)
+        carry = jnp.exp(state.m + cum[:, :, -1] - m_fin)
+        c_fin = c_fin + carry[..., None, None] * state.c
+        n_fin = n_fin + carry[..., None] * state.n
+    new_state = MLSTMState(conv=new_conv, c=c_fin, n=n_fin, m=m_fin)
+    return x + y, new_state
+
+
+def _chunk_combine(s1, s2):
+    """Associative combine of stabilized (m, C, n, F) chunk states."""
+    m1, c1, n1, f1 = s1
+    m2, c2, n2, f2 = s2
+    f = f1 + f2
+    m = jnp.maximum(m1 + f2, m2)
+    w1 = jnp.exp(m1 + f2 - m)
+    w2 = jnp.exp(m2 - m)
+    c = w1[..., None, None] * c1 + w2[..., None, None] * c2
+    n = w1[..., None] * n1 + w2[..., None] * n2
+    return m, c, n, f
+
+
+def mlstm_block_chunkwise(p: Params, cfg: ModelConfig, x: jax.Array,
+                          state: MLSTMState | None = None, *,
+                          chunk: int = 512) -> Tuple[jax.Array, MLSTMState]:
+    """Chunkwise-parallel mLSTM: O(S/L * (L^2 + L*dh)*dh) instead of O(S^2*dh),
+    with the cross-chunk state recurrence evaluated by a log-depth
+    ``associative_scan`` (TPU-native; no hidden while-loop, exact roofline
+    accounting). Matches ``mlstm_block`` semantics exactly."""
+    xin = L.rmsnorm(p["norm"], x)
+    conv_state = state.conv if state is not None else None
+    xm, z, q, k, v, i_t, f_t, new_conv = _mlstm_proj(p, cfg, xin, conv_state)
+    b, s, d = xin.shape
+    dm, h, dh = _mdims(cfg)
+    nl = chunk
+    assert s % nl == 0, (s, nl)
+    nc = s // nl
+    logf = jax.nn.log_sigmoid(f_t).transpose(0, 2, 1).reshape(b, h, nc, nl)
+    i_bh = i_t.transpose(0, 2, 1).reshape(b, h, nc, nl)
+    qc = q.reshape(b, h, nc, nl, dh).astype(jnp.float32)
+    kc = k.reshape(b, h, nc, nl, dh).astype(jnp.float32)
+    vc = v.reshape(b, h, nc, nl, dh).astype(jnp.float32)
+    bcum = jnp.cumsum(logf, axis=-1)            # [B,H,nc,L] inclusive
+    f_tot = bcum[..., -1]                       # [B,H,nc]
+    # per-chunk stabilized state contribution
+    m_loc = jnp.max(i_bh + f_tot[..., None] - bcum, axis=-1)          # [B,H,nc]
+    w_loc = jnp.exp(i_bh + f_tot[..., None] - bcum - m_loc[..., None])  # [B,H,nc,L]
+    c_loc = jnp.einsum("bhcl,bhcld,bhcle->bhcde", w_loc, kc, vc)
+    n_loc = jnp.einsum("bhcl,bhcld->bhcd", w_loc, kc)
+    # prefix (exclusive) states across chunks
+    m_in, c_in, n_in, f_in = jax.lax.associative_scan(
+        _chunk_combine, (m_loc, c_loc, n_loc, f_tot), axis=2)
+    shift = lambda a, fill: jnp.concatenate(
+        [jnp.full_like(a[:, :, :1], fill), a[:, :, :-1]], axis=2)
+    m_prev = shift(m_in, -1e30)
+    c_prev = shift(c_in, 0.0)
+    n_prev = shift(n_in, 0.0)
+    if state is not None:
+        # fold the incoming stream state into every prefix
+        m0 = state.m[:, :, None]
+        mm = jnp.maximum(m0 + jnp.concatenate(
+            [jnp.zeros_like(f_in[:, :, :1]),
+             jnp.cumsum(f_tot, 2)[:, :, :-1]], 2), m_prev)
+        w0 = jnp.exp(m0 + jnp.concatenate(
+            [jnp.zeros_like(f_in[:, :, :1]),
+             jnp.cumsum(f_tot, 2)[:, :, :-1]], 2) - mm)
+        wp = jnp.exp(m_prev - mm)
+        c_prev = w0[..., None, None] * state.c[:, :, None] + wp[..., None, None] * c_prev
+        n_prev = w0[..., None] * state.n[:, :, None] + wp[..., None] * n_prev
+        m_prev = mm
+    # per-token stabilizers and outputs
+    intra_log = (i_bh[:, :, :, None, :] + bcum[..., :, None] - bcum[..., None, :])
+    causal = jnp.tril(jnp.ones((nl, nl), bool))
+    intra_log = jnp.where(causal[None, None, None], intra_log, -jnp.inf)
+    m_intra = jnp.max(intra_log, axis=-1)                      # [B,H,nc,L]
+    m_tot = jnp.maximum(m_prev[..., None] + bcum, m_intra)     # [B,H,nc,L]
+    w_intra = jnp.exp(intra_log - m_tot[..., None])            # [B,H,nc,L,L]
+    w_inter = jnp.exp(m_prev[..., None] + bcum - m_tot)        # [B,H,nc,L]
+    scores = jnp.einsum("bhcld,bhcmd->bhclm", qc, kc)          # [B,H,nc,L,L]
+    num = (jnp.einsum("bhclm,bhclm,bhcme->bhcle", scores, w_intra, vc)
+           + w_inter[..., None] * jnp.einsum("bhcld,bhcde->bhcle", qc, c_prev))
+    den = (jnp.einsum("bhclm,bhclm->bhcl", scores, w_intra)
+           + w_inter * jnp.einsum("bhcld,bhcd->bhcl", qc, n_prev))
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))
+    hsa = (num / den[..., None]).reshape(b, h, s, dh)
+    hsa = hsa.transpose(0, 2, 1, 3).reshape(b, s, dm).astype(x.dtype)
+    out = L.rmsnorm(p["out_norm"], hsa) * z
+    y = out @ p["w_down"].astype(x.dtype)
+    # final stream state = last inclusive prefix (+ incoming state)
+    m_fin, c_fin, n_fin = m_in[:, :, -1], c_in[:, :, -1], n_in[:, :, -1]
+    if state is not None:
+        ftot_all = jnp.sum(f_tot, axis=2)
+        mm = jnp.maximum(state.m + ftot_all, m_fin)
+        w0 = jnp.exp(state.m + ftot_all - mm)
+        wp = jnp.exp(m_fin - mm)
+        c_fin = w0[..., None, None] * state.c + wp[..., None, None] * c_fin
+        n_fin = w0[..., None] * state.n + wp[..., None] * n_fin
+        m_fin = mm
+    return x + y, MLSTMState(conv=new_conv, c=c_fin, n=n_fin, m=m_fin)
+
+
+def mlstm_auto(p: Params, cfg: ModelConfig, x: jax.Array,
+               state: MLSTMState | None = None
+               ) -> Tuple[jax.Array, MLSTMState]:
+    """Dispatch: quadratic parallel form for short sequences, chunkwise
+    (chunk=512) for long ones — keeps the materialized [.., L, L] tile
+    VMEM/HBM-friendly at 32k-500k tokens."""
+    s = x.shape[1]
+    if s > 1024 and s % 512 == 0:
+        return mlstm_block_chunkwise(p, cfg, x, state, chunk=512)
+    return mlstm_block(p, cfg, x, state)
+
+
+def mlstm_step(p: Params, cfg: ModelConfig, x_t: jax.Array,
+               state: MLSTMState) -> Tuple[jax.Array, MLSTMState]:
+    """O(1) recurrent decode step. x_t: [B, D]."""
+    xin = L.rmsnorm(p["norm"], x_t)[:, None]             # [B,1,D]
+    dm, h, dh = _mdims(cfg)
+    xm = xin @ p["w_up_x"].astype(xin.dtype)
+    z = jax.nn.silu(xin @ p["w_up_z"].astype(xin.dtype))
+    window = jnp.concatenate([state.conv.astype(xm.dtype), xm], 1)  # [B,cw,dm]
+    xc = jax.nn.silu(jnp.einsum("bcd,cd->bd", window, p["conv"].astype(xm.dtype)))[:, None]
+    heads = lambda y: y.reshape(y.shape[0], h, dh)
+    q = heads(xc[:, 0] @ p["w_q"].astype(xc.dtype)).astype(jnp.float32)
+    k = heads(xc[:, 0] @ p["w_k"].astype(xc.dtype)).astype(jnp.float32) / (dh ** 0.5)
+    v = heads(xm[:, 0] @ p["w_v"].astype(xm.dtype)).astype(jnp.float32)
+    i_t = (xc[:, 0] @ p["w_i"].astype(xc.dtype) + p["b_i"].astype(xc.dtype)).astype(jnp.float32)
+    f_t = (xc[:, 0] @ p["w_f"].astype(xc.dtype) + p["b_f"].astype(xc.dtype)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_t)                        # [B,H]
+    m_new = jnp.maximum(logf + state.m, i_t)
+    fprime = jnp.exp(logf + state.m - m_new)
+    iprime = jnp.exp(i_t - m_new)
+    c_new = fprime[..., None, None] * state.c + iprime[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = fprime[..., None] * state.n + iprime[..., None] * k
+    num = jnp.einsum("bhde,bhd->bhe", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)),
+                      jnp.exp(-m_new))
+    hsa = (num / den[..., None]).reshape(x_t.shape[0], dm).astype(x_t.dtype)
+    out = L.rmsnorm(p["out_norm"], hsa) * z[:, 0]
+    y = out @ p["w_down"].astype(x_t.dtype)
+    return x_t + y, MLSTMState(conv=window[:, 1:], c=c_new, n=n_new, m=m_new)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MLSTMState:
+    dm, h, dh = _mdims(cfg)
+    return MLSTMState(
+        conv=jnp.zeros((batch, cfg.xlstm_conv_width - 1, dm), dtype),
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, D]
+    n: jax.Array  # [B, D]
+    h: jax.Array  # [B, D]
+    m: jax.Array  # [B, D]
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 7)
+    dff = int(d * 4 / 3 / 2) * 2  # post-cell gated MLP (xLSTM: pf 4/3)
+    return {
+        "norm": L.init_rmsnorm(d, dt),
+        "w_in": L.dense_init(ks[0], (d, 4 * d), dt),   # z, i, f, o pre-acts
+        "r": L.dense_init(ks[1], (4, h, dh, dh), dt, scale=(dh ** -0.5)),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.zeros((d,)),
+                              jnp.full((d,), 3.0), jnp.zeros((d,))]).astype(dt),
+        "out_norm": L.init_rmsnorm(d, dt),
+        "w_up1": L.dense_init(ks[2], (d, dff), dt),
+        "w_up2": L.dense_init(ks[3], (d, dff), dt),
+        "w_down": L.dense_init(ks[4], (dff, d), dt),
+    }
+
+
+def _slstm_cell(p, cfg, pre, state: SLSTMState):
+    """pre: [B, 4D] input pre-activations (W x + b). One time step."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    hp = state.h.reshape(-1, h, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hp.astype(p["r"].dtype), p["r"])
+    rec = rec.reshape(4, -1, d).astype(jnp.float32)
+    z_t, i_t, f_t, o_t = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    z_t = jnp.tanh(z_t + rec[0])
+    i_t = i_t + rec[1]
+    f_t = jax.nn.log_sigmoid(f_t + rec[2])
+    o_t = jax.nn.sigmoid(o_t + rec[3])
+    m_new = jnp.maximum(f_t + state.m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(f_t + state.m - m_new)
+    c_new = fp * state.c + ip * z_t
+    n_new = jnp.maximum(fp * state.n + ip, 1e-6)
+    h_new = o_t * c_new / n_new
+    return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                state: SLSTMState | None = None
+                ) -> Tuple[jax.Array, SLSTMState]:
+    """Sequential forward over time. x: [B, S, D]."""
+    b, s, d = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    xin = L.rmsnorm(p["norm"], x)
+    pre = xin @ p["w_in"].astype(x.dtype) + p["b"].astype(x.dtype)  # [B,S,4D]
+
+    def step(st, pre_t):
+        st = _slstm_cell(p, cfg, pre_t, st)
+        return st, st.h
+
+    final, hs = jax.lax.scan(step, state, pre.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)                      # [B,S,D]
+    out = L.rmsnorm(p["out_norm"], hs)
+    y = (jax.nn.gelu(out @ p["w_up1"].astype(x.dtype))
+         * (out @ p["w_up2"].astype(x.dtype))) @ p["w_down"].astype(x.dtype)
+    return x + y, final
+
+
+def slstm_step(p: Params, cfg: ModelConfig, x_t: jax.Array,
+               state: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+    xin = L.rmsnorm(p["norm"], x_t)
+    pre = xin @ p["w_in"].astype(x_t.dtype) + p["b"].astype(x_t.dtype)
+    st = _slstm_cell(p, cfg, pre, state)
+    out = L.rmsnorm(p["out_norm"], st.h.astype(x_t.dtype))
+    y = (jax.nn.gelu(out @ p["w_up1"].astype(x_t.dtype))
+         * (out @ p["w_up2"].astype(x_t.dtype))) @ p["w_down"].astype(x_t.dtype)
+    return x_t + y, st
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z + 1e-6, h=z, m=z - 1e30)

@@ -1,0 +1,3 @@
+from repro.roofline import hlo_parse  # noqa: F401
+
+# analysis is imported lazily (it pulls launch.steps); hlo_parse is pure.

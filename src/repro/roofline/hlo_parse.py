@@ -1,0 +1,128 @@
+"""Parse collective ops out of compiled HLO text and sum their bytes.
+
+Collectives are inserted by the SPMD partitioner, so they only exist in
+``compiled.as_text()`` (post-optimization HLO). For each op we count the
+bytes a chip moves over ICI (ring-algorithm accounting):
+
+  all-gather        — output bytes x (n-1)/n        (recv full shard set)
+  reduce-scatter    — input bytes  x (n-1)/n
+  all-reduce        — 2 x output bytes x (n-1)/n    (RS + AG)
+  all-to-all        — output bytes x (n-1)/n
+  collective-permute— output bytes
+
+NOTE: ops inside ``while`` bodies appear once in the text but execute
+trip-count times; roofline/analysis.py removes this ambiguity by comparing
+UNROLLED n_repeats=1 vs n_repeats=2 lowering (per-layer diff), so this
+parser is only ever pointed at straight-line (unrolled) entry computations
+or used for schedule inspection.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$")
+_REPL_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_REPL_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _REPL_GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPL_GROUPS_RE.search(line)
+    if m:
+        body = m.group(1)
+        first = body.split("}")[0].lstrip("{")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return total_devices
+
+
+def parse_collectives(hlo_text: str, total_devices: int,
+                      bf16_wire: bool = True
+                      ) -> Tuple[float, Dict[str, Dict[str, float]]]:
+    """Returns (per_chip_ici_bytes, per-kind {count, bytes}).
+
+    ``bf16_wire``: XLA:CPU computes bf16 matmuls in f32 and reduces the f32
+    (verified empirically) — on the TPU target those tensors travel as
+    bf16. Large (>=1 MiB) f32 collectives of a bf16 model are therefore
+    counted at half width. Small f32 collectives (loss scalars, gate stats)
+    are left as-is.
+    """
+    per_kind: Dict[str, Dict[str, float]] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:   # async pair: count the -start only
+            continue
+        # result type(s) sit between "=" and the op keyword; the op name on
+        # the LHS may itself contain the kind string (%all-reduce.5 = ...)
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        head = rhs.split(kind)[0]
+        shapes = _SHAPE_RE.findall(head)
+        if not shapes:
+            continue
+        if f"{kind}-start(" in line and len(shapes) > 1:
+            # async start: tuple is (input buffer, output buffer, ...);
+            # only the output moves on the wire
+            shapes = shapes[-1:]
+        out_bytes = 0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes = n * _DTYPE_BYTES.get(dt, 4)
+            if bf16_wire and dt == "f32" and nbytes >= 2 ** 20:
+                nbytes //= 2
+            out_bytes += nbytes
+        if out_bytes == 0:
+            continue
+        g = _group_size(line, total_devices)
+        ring = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-gather":
+            moved = out_bytes * ring
+        elif kind == "reduce-scatter":
+            moved = out_bytes * (g - 1) if g > 1 else 0.0  # input = out*g
+        elif kind == "all-reduce":
+            moved = 2.0 * out_bytes * ring
+        elif kind == "all-to-all":
+            moved = out_bytes * ring
+        else:  # collective-permute
+            moved = float(out_bytes)
+        k = per_kind.setdefault(kind, {"count": 0, "bytes": 0.0})
+        k["count"] += 1
+        k["bytes"] += moved
+        total += moved
+    return total, per_kind

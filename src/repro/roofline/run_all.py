@@ -1,0 +1,55 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ must precede all other imports (jax locks device count on first init).
+
+"""Roofline sweep: L1/L2 differenced terms for every (arch x shape) on the
+single-pod mesh. Writes benchmarks/artifacts/roofline.json.
+
+    PYTHONPATH=src python -m repro.roofline.run_all [--arch A] [--shape S]
+"""
+import argparse
+import traceback
+
+from repro.configs import ARCH_NAMES
+from repro.launch.dryrun import run_dryrun
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import analyze_pair, append_roofline
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--wgkv", default="auto", choices=["auto", "on", "off"])
+    args = ap.parse_args()
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = SHAPES if args.shape == "all" else [args.shape]
+    wg = None if args.wgkv == "auto" else (args.wgkv == "on")
+    mesh = make_production_mesh(multi_pod=False)
+    for arch in archs:
+        for shp in shapes:
+            try:
+                rec = analyze_pair(arch, shp, use_wgkv=wg, mesh=mesh,
+                                   run_dryrun=run_dryrun)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shp, "wgkv": wg,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-1500:]}
+            append_roofline(rec)
+            if "error" in rec:
+                print(f"[roofline] {arch} x {shp}: ERROR {rec['error']}",
+                      flush=True)
+            else:
+                ur = rec.get("useful_ratio") or 0.0
+                print(f"[roofline] {arch} x {shp}: {rec['bottleneck']} "
+                      f"c={rec['compute_s']:.4f}s m={rec['memory_s']:.4f}s "
+                      f"x={rec['collective_s']:.4f}s ratio={ur:.2f}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

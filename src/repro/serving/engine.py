@@ -1,0 +1,289 @@
+"""Serving engine: batched requests over the WG-KV dual cache, with the
+paged physical layer (serving/paged.py) mirroring every logical cache write
+— page tables, lazy-promotion page appends, ring-slot overwrites — exactly
+as §4.1/§4.3 of the paper describe, plus Quest/SnapKV composition flags.
+
+The model math runs through the jitted decode path (models/inference.py);
+the engine owns request lifecycle (continuous-batching lite: requests join
+free slots, finish independently) and the logical->physical mirroring. The
+``verify_paged()`` method recomputes one layer's decode attention from the
+*physical pool* via the paged_decode Pallas kernel and asserts it matches
+the logical path — the systems-level correctness check that theoretical
+paging actually serves the right bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.dual_cache import DualCache
+from repro.kernels.ops import paged_decode_attention
+from repro.models import inference as I
+from repro.serving import paged
+from repro.serving.sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Fixed-slot batched serving engine (slots = max concurrent requests)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 capacity: int = 4096, opts: Optional[I.DecodeOptions] = None,
+                 pool_pages: int = 4096, eos: Optional[int] = None,
+                 temperature: float = 0.0, seed: int = 0,
+                 mirror_paged: bool = True):
+        assert cfg.has_attention_cache, "engine serves KV-cache archs"
+        self.params, self.cfg = params, cfg
+        self.slots = slots
+        self.capacity = capacity
+        self.opts = opts or I.DecodeOptions()
+        self.eos = eos
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.requests: Dict[int, Request] = {}
+        self.slot_rid: List[Optional[int]] = [None] * slots
+        self._next_rid = 0
+        self.caches = None
+        self.mirror = mirror_paged
+        if mirror_paged:
+            self.pool = paged.PagedKVPool(pool_pages, cfg.head_dim)
+        self._decode = jax.jit(functools.partial(
+            I.decode_step, cfg=cfg, opts=self.opts))
+        self.stats = {"steps": 0, "evict_triggers": 0.0}
+
+    # ------------------------------------------------------------------
+    def add_request(self, prompt: List[int], max_new: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = Request(rid, list(prompt), max_new)
+        return rid
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_rid) if r is None]
+
+    # ------------------------------------------------------------------
+    def _prefill_one(self, prompt: List[int]):
+        """Prefill a single request: budgeted vertical-slash prefill on the
+        largest window-multiple prefix, then teacher-forced decode steps for
+        the ragged tail (keeps arbitrary prompt lengths exact)."""
+        cfg = self.cfg
+        w_max = cfg.wgkv.w_local
+        if any(bt == "local_attn" for bt in cfg.block_pattern + cfg.stem_pattern):
+            w_max = max(w_max, cfg.sliding_window)
+        n0 = (len(prompt) // w_max) * w_max
+        budget = cfg.wgkv.global_budget(self.capacity)
+        if n0 >= w_max:
+            toks = jnp.asarray(prompt[:n0], jnp.int32)[None]
+            _, caches = I.prefill(self.params, cfg, toks, budget=budget,
+                                  max_len=self.capacity, opts=self.opts)
+        else:
+            from repro.launch.specs import build_decode_caches
+            caches = build_decode_caches(cfg, 1, self.capacity,
+                                         use_wgkv=True, prefilled=0)
+            if self.opts.evict_hard_budget is not None:
+                caches["obs"] = I._init_obs_tree(cfg, 1, self.opts)
+        for tok in prompt[n0:]:
+            _, caches, _ = self._decode(
+                self.params, token=jnp.asarray([tok], jnp.int32),
+                caches=caches)
+        return caches
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        """Prefill one request and splice its caches into the batch tree."""
+        caches = self._prefill_one(req.prompt)
+
+        def _baxis(path) -> int:
+            # stacked per-superblock caches carry [n_repeats, B, ...];
+            # the eviction observation tree is [n_repeats, n_attn, B, ...]
+            keys = [getattr(k, "key", None) for k in path]
+            if "obs" in keys:
+                return 2
+            return 1 if "blocks" in keys else 0
+
+        if self.caches is None:
+            self.caches = jax.tree_util.tree_map_with_path(
+                lambda p, x: jnp.repeat(jnp.zeros_like(x), self.slots,
+                                        axis=_baxis(p)),
+                caches)
+        self.caches = jax.tree_util.tree_map_with_path(
+            lambda p, full, one: jax.lax.dynamic_update_index_in_dim(
+                full, jnp.take(one, 0, axis=_baxis(p)), slot, _baxis(p)),
+            self.caches, caches)
+        if self.mirror:
+            self._mirror_prefill(slot, caches)
+
+    def _mirror_prefill(self, slot: int, caches) -> None:
+        """Copy the logical dual caches into the physical paged pool."""
+        for lkey, dc in self._iter_dual(caches):
+            for h in range(self.cfg.n_kv_heads):
+                gkey = (slot, lkey, h, "global")
+                self.pool.free_stream(gkey)
+                cnt = int(dc.gcnt[0, h])
+                self.pool.bulk_append(
+                    gkey, np.asarray(dc.gk[0, h, :cnt], np.float32),
+                    np.asarray(dc.gv[0, h, :cnt], np.float32))
+                lkey_ = (slot, lkey, h, "local")
+                self.pool.free_stream(lkey_)
+                w = dc.w_local
+                self.pool.bulk_append(
+                    lkey_, np.asarray(dc.lk[0, h], np.float32),
+                    np.asarray(dc.lv[0, h], np.float32))
+
+    def _iter_dual(self, caches) -> List[Tuple[Tuple, DualCache]]:
+        """Yield (layer-key, DualCache[batch=...]) pairs from a cache tree."""
+        out = []
+        blocks = caches["blocks"]
+        for i, bt in enumerate(self.cfg.block_pattern):
+            node = blocks[f"b{i}"]
+            if isinstance(node, dict) and "self" in node:
+                node = node["self"]
+            if isinstance(node, DualCache):
+                for r in range(node.gk.shape[0] if node.gk.ndim == 5 else 1):
+                    if node.gk.ndim == 5:  # stacked [n_repeats, B, ...]
+                        out.append(((r, i), jax.tree.map(lambda x: x[r], node)))
+                    else:
+                        out.append(((0, i), node))
+        return out
+
+    def _mirror_decode(self, before, after) -> None:
+        """Apply one decode step's logical cache delta to the pool."""
+        for (lkey, dcb), (_, dca) in zip(self._iter_dual(before),
+                                         self._iter_dual(after)):
+            for slot, rid in enumerate(self.slot_rid):
+                if rid is None:
+                    continue
+                for h in range(self.cfg.n_kv_heads):
+                    # promotion: gcnt increased -> append promoted token page
+                    cb, ca = int(dcb.gcnt[slot, h]), int(dca.gcnt[slot, h])
+                    if ca > cb:
+                        self.pool.append(
+                            (slot, lkey, h, "global"),
+                            np.asarray(dca.gk[slot, h, ca - 1], np.float32),
+                            np.asarray(dca.gv[slot, h, ca - 1], np.float32))
+                    # ring write: slot ptr_before overwritten
+                    p = int(dcb.ptr[slot])
+                    self.pool.overwrite(
+                        (slot, lkey, h, "local"), p,
+                        np.asarray(dca.lk[slot, h, p], np.float32),
+                        np.asarray(dca.lv[slot, h, p], np.float32))
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """Admit pending requests, run one decode step, return {rid: token}."""
+        pending = [r for r in self.requests.values()
+                   if not r.done and r.rid not in self.slot_rid]
+        for slot in self._free_slots():
+            if not pending:
+                break
+            req = pending.pop(0)
+            self.slot_rid[slot] = req.rid
+            self._prefill_slot(slot, req)
+        if all(r is None for r in self.slot_rid) or self.caches is None:
+            return {}
+        # last token per slot (prompt tail or last generated)
+        toks = []
+        for rid in self.slot_rid:
+            if rid is None:
+                toks.append(0)
+            else:
+                r = self.requests[rid]
+                toks.append(r.out[-1] if r.out else r.prompt[-1])
+        before = self.caches
+        logits, self.caches, st = self._decode(
+            self.params, token=jnp.asarray(toks, jnp.int32),
+            caches=self.caches)
+        self.stats["steps"] += 1
+        self.stats["evict_triggers"] += float(st["evict_triggers"])
+        if self.mirror:
+            self._mirror_decode(before, self.caches)
+        self.key, sk = jax.random.split(self.key)
+        nxt = sample(sk, logits, temperature=self.temperature)
+        emitted: Dict[int, int] = {}
+        for slot, rid in enumerate(self.slot_rid):
+            if rid is None:
+                continue
+            req = self.requests[rid]
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            emitted[rid] = tok
+            if len(req.out) >= req.max_new or (self.eos is not None
+                                               and tok == self.eos):
+                req.done = True
+                self.slot_rid[slot] = None
+                if self.mirror:
+                    for lkey, _ in self._iter_dual(self.caches):
+                        for h in range(self.cfg.n_kv_heads):
+                            self.pool.free_stream((slot, lkey, h, "global"))
+                            self.pool.free_stream((slot, lkey, h, "local"))
+        return emitted
+
+    def run(self, max_steps: int = 256) -> None:
+        for _ in range(max_steps):
+            self.step()
+            if all(r.done for r in self.requests.values()):
+                break
+
+    # ------------------------------------------------------------------
+    def verify_paged(self, layer_repeat: int = 0, block: int = 0,
+                     atol: float = 2e-3) -> float:
+        """Recompute one layer's decode attention for all live slots from
+        the PHYSICAL pool via the paged_decode kernel and compare with the
+        logical dual-cache contents. Returns max abs deviation."""
+        assert self.mirror and self.caches is not None
+        live = [s for s, r in enumerate(self.slot_rid) if r is not None]
+        if not live:
+            return 0.0
+        node = self.caches["blocks"][f"b{block}"]
+        if isinstance(node, dict):
+            node = node["self"]
+        dc: DualCache = jax.tree.map(lambda x: x[layer_repeat], node)
+        worst = 0.0
+        for slot in live:
+            for h in range(self.cfg.n_kv_heads):
+                gk, gv = self.pool.gather((slot, (layer_repeat, block), h, "global"))
+                cnt = int(dc.gcnt[slot, h])
+                logical = np.asarray(dc.gk[slot, h, :cnt], np.float32)
+                if cnt:
+                    worst = max(worst, float(np.abs(gk[:cnt] - logical).max()))
+                lk, _ = self.pool.gather((slot, (layer_repeat, block), h, "local"))
+                worst = max(worst, float(
+                    np.abs(lk - np.asarray(dc.lk[slot, h], np.float32)).max()))
+        # kernel-level check: paged attention over global streams
+        keys = [(s, (layer_repeat, block), h, "global")
+                for s in live for h in range(self.cfg.n_kv_heads)]
+        kp, vp, tbl, lens = self.pool.kernel_args(keys)
+        if int(lens.max()) > 0:
+            hd = self.cfg.head_dim
+            q = jnp.ones((len(keys), hd), jnp.float32) / hd
+            from repro.kernels.paged_decode import paged_decode
+            out = paged_decode(q, kp, vp, tbl, lens)
+            # oracle from logical cache
+            i = 0
+            for s in live:
+                for h in range(self.cfg.n_kv_heads):
+                    cnt = int(dc.gcnt[s, h])
+                    if cnt:
+                        kk = np.asarray(dc.gk[s, h, :cnt], np.float32)
+                        vv = np.asarray(dc.gv[s, h, :cnt], np.float32)
+                        lg = (np.ones(hd) / hd) @ kk.T / np.sqrt(hd)
+                        w = np.exp(lg - lg.max())
+                        w /= w.sum()
+                        oracle = w @ vv
+                        worst = max(worst, float(
+                            np.abs(np.asarray(out[i]) - oracle).max()))
+                    i += 1
+        return worst

@@ -1,0 +1,17 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(key: jax.Array, logits: jax.Array, *, temperature: float = 0.0,
+           top_k: int = 0) -> jax.Array:
+    """logits: [B, V] -> tokens [B]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,297 @@
+"""Logical-axis sharding rules with divisibility fallback (MaxText-style).
+
+Mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi-pod.
+  * "model"        — tensor parallel: attention heads / d_ff / experts
+  * "data" (+pod)  — batch parallel + FSDP-style weight sharding
+Several assigned archs have head/expert counts not divisible by 16 (phi3
+40H, smollm 15H, granite 40e); rather than padding, each tensor dim is
+sharded only when divisible, falling back to the next preference (e.g.
+row-parallel on d_model for attention projections) or replication. The
+roofline §Perf pass quantifies what the fallback costs and hillclimbs it
+(head padding) for the worst pair.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+# ==========================================================================
+# activation-sharding pinning (prevents depth-dependent SPMD propagation —
+# without this, XLA picks different activation layouts at different layer
+# counts and the L1/L2 roofline diff is meaningless)
+# ==========================================================================
+import contextlib
+import threading
+
+_ACT = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes_or_none, *, expert_ax="__unset__"):
+    """Enable residual-stream sharding constraints inside model code.
+    ``batch_axes_or_none``: mesh axes for the batch dim (None = pinned
+    replicated). ``expert_ax``: mesh axis for the MoE expert dim (None =
+    replicated experts, e.g. granite's 40e). Used by launch bundles; tests
+    run without the context (no-op)."""
+    prev = getattr(_ACT, "axes", "off")
+    prev_e = getattr(_ACT, "expert_ax", None)
+    _ACT.axes = batch_axes_or_none
+    if expert_ax != "__unset__":
+        _ACT.expert_ax = expert_ax
+    try:
+        yield
+    finally:
+        _ACT.axes = prev
+        _ACT.expert_ax = prev_e
+
+
+def constrain_tokens(x):
+    """Pin an activation whose leading dim is batch: [B, ...]."""
+    axes = getattr(_ACT, "axes", "off")
+    if axes == "off" or x is None:
+        return x
+    spec = P(axes, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_moe(x, kind: str):
+    """Pin MoE internals (XLA otherwise replicates the group dim across
+    data in the backward pass — §Perf iteration 1). kinds:
+      dispatch — [G, E, C, D] -> P(batch_axes, expert_ax, None, None)
+      grouped  — [G, T_g, ...] -> P(batch_axes, None, ...)
+    """
+    axes = getattr(_ACT, "axes", "off")
+    if axes == "off" or x is None:
+        return x
+    if kind == "dispatch":
+        e_ax = getattr(_ACT, "expert_ax", None)
+        spec = P(axes, e_ax, *(None,) * (x.ndim - 2))
+    else:
+        spec = P(axes, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % _axsize(mesh, axes) == 0
+
+
+def pick(dim: int, mesh: Mesh, *prefs):
+    """First preference (an axis name, tuple of names, or None) that divides
+    ``dim``; None (replicate) if none fit."""
+    for p in prefs:
+        if p is None:
+            return None
+        if _fits(dim, mesh, p):
+            return p
+    return None
+
+
+# ==========================================================================
+# parameter shardings (path-based; mirrors models/* param trees)
+# ==========================================================================
+def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+                cfg: ModelConfig) -> P:
+    fa = fsdp_axes(mesh)
+    name = path[-1]
+    # stacked super-block params carry a leading n_repeats axis
+    stacked = "blocks" in path
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+
+    def spec(*dims):
+        return P(*(lead + tuple(dims)))
+
+    if len(core) == 0:
+        return spec()
+    in_gate = "gate" in path
+    if in_gate:
+        # Write-Gate MLP: tiny (~0.4% params) — replicate
+        return spec(*(None,) * len(core))
+    if name in ("tok", "unembed"):
+        v_or_d, d_or_v = core
+        return spec(pick(v_or_d, mesh, fa, "data"), pick(d_or_v, mesh, "model"))
+    if name in ("w_q", "w_k", "w_v"):
+        din, dout = core
+        # column-parallel over heads when divisible, else row-parallel
+        out_ax = pick(dout, mesh, "model")
+        in_ax = pick(din, mesh, fa, "data") if out_ax else pick(din, mesh, "model", fa)
+        if out_ax and in_ax == out_ax:
+            in_ax = None
+        return spec(in_ax, out_ax)
+    if name == "w_o":
+        din, dout = core
+        in_ax = pick(din, mesh, "model")
+        out_ax = pick(dout, mesh, fa, "data")
+        return spec(in_ax, out_ax)
+    if name in ("w_gate", "w_up", "w_down", "router") and "moe" in path:
+        if name == "router":
+            d, e = core
+            return spec(pick(d, mesh, fa), pick(e, mesh, "model"))
+        e, a, b = core
+        e_ax = pick(e, mesh, "model")
+        if e_ax:
+            return spec(e_ax, pick(a, mesh, fa), None)
+        # experts not divisible (granite 40e): shard the expert FFN width
+        if name == "w_down":
+            return spec(None, pick(a, mesh, "model"), pick(b, mesh, fa))
+        return spec(None, pick(a, mesh, fa), pick(b, mesh, "model"))
+    if name in ("w_gate", "w_up"):        # dense SwiGLU
+        d, f = core
+        return spec(pick(d, mesh, fa, "data"), pick(f, mesh, "model"))
+    if name == "w_down":
+        f, d = core
+        return spec(pick(f, mesh, "model"), pick(d, mesh, fa, "data"))
+    if name in ("w_in",):                  # gelu mlp / slstm input
+        d, f = core
+        return spec(pick(d, mesh, fa, "data"), pick(f, mesh, "model"))
+    if name == "w_out" and len(core) == 2:
+        f, d = core
+        return spec(pick(f, mesh, "model"), pick(d, mesh, fa, "data"))
+    if name in ("w_gelu", "w_x", "w_up_x", "w_up_z", "w_up1", "w_up2"):
+        d, f = core
+        return spec(pick(d, mesh, fa, "data"), pick(f, mesh, "model"))
+    if name in ("conv",):
+        cw, dr = core
+        return spec(None, pick(dr, mesh, "model"))
+    if name in ("w_r", "w_i") and len(core) == 3:  # rglru block-diag [H,dh,dh]
+        h, dh, _ = core
+        return spec(pick(h, mesh, "model"), None, None)
+    if name == "r" and len(core) == 4:     # slstm recurrent [4,H,dh,dh]
+        _, h, dh, _ = core
+        return spec(None, pick(h, mesh, "model"), None, None)
+    if len(core) == 2 and min(core) >= 512:
+        a, b = core
+        return spec(pick(a, mesh, fa, "data"), pick(b, mesh, "model"))
+    if len(core) == 1 and core[0] >= 4096:
+        return spec(pick(core[0], mesh, "model"))
+    return spec(*(None,) * len(core))
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(getattr(k, "idx", k)))
+    return tuple(out)
+
+
+def param_shardings(params: Any, mesh: Mesh, cfg: ModelConfig, *,
+                    replicate_fsdp: bool = False):
+    """NamedSharding tree matching ``params``.
+
+    ``replicate_fsdp``: drop the FSDP ("data"/"pod") axes from every param
+    spec — weights replicated across data, sharded only over "model".
+    For inference of models that fit HBM this removes the per-step
+    weight all-gathers (decode §Perf iteration); training and big-MoE
+    inference keep FSDP.
+    """
+
+    def strip(spec: P) -> P:
+        def fix(ax):
+            if ax is None:
+                return None
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            kept = tuple(a for a in axes if a == "model")
+            return kept[0] if len(kept) == 1 else (kept if kept else None)
+
+        return P(*(fix(a) for a in spec))
+
+    def walk(path, leaf):
+        spec = _param_spec(_path_keys(path), tuple(leaf.shape), mesh, cfg)
+        if replicate_fsdp:
+            spec = strip(spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+# ==========================================================================
+# activation / cache shardings
+# ==========================================================================
+def tokens_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    ba = pick(batch, mesh, batch_axes(mesh), "data")
+    return P(ba, *(None,) * extra_dims)
+
+
+def _cache_leaf_spec(path: Tuple[str, ...], shape, mesh: Mesh,
+                     cfg: ModelConfig, seq_shard: bool) -> P:
+    """Cache trees: DualCache/DenseCache/recurrent states, possibly stacked
+    with a leading n_repeats axis. When ``seq_shard`` (long_500k, batch=1)
+    the long token axis goes to "data" (context-parallel decode)."""
+    fa = batch_axes(mesh)
+    stacked = "blocks" in path
+    lead = (None,) if stacked else ()
+    core = tuple(shape[1:]) if stacked else tuple(shape)
+
+    def spec(*dims):
+        return P(*(lead + tuple(dims)))
+
+    if len(core) == 0:
+        return spec()
+    b = core[0]
+    b_ax = pick(b, mesh, fa, "data")
+    name = path[-1]
+    if name in ("gk", "gv", "k", "v") and len(core) == 4:
+        _, h, s, hd = core
+        if b_ax is None and seq_shard:
+            return spec(None, pick(h, mesh, "model"), pick(s, mesh, "data"), None)
+        return spec(b_ax, pick(h, mesh, "model"), None, None)
+    if name in ("gpos",) and len(core) == 3:
+        _, h, s = core
+        if b_ax is None and seq_shard:
+            return spec(None, pick(h, mesh, "model"), pick(s, mesh, "data"))
+        return spec(b_ax, pick(h, mesh, "model"), None)
+    if name in ("lk", "lv") and len(core) == 4:
+        _, h, w, hd = core
+        return spec(b_ax, pick(h, mesh, "model"), None, None)
+    if name in ("lg",) and len(core) == 3:
+        return spec(b_ax, pick(core[1], mesh, "model"), None)
+    if name == "c" and len(core) == 4:  # mLSTM matrix memory [B,H,dh,dh]
+        return spec(b_ax, pick(core[1], mesh, "model"), None, None)
+    if name == "conv" and len(core) == 3:  # [B,cw-1,dr]
+        return spec(b_ax, None, pick(core[2], mesh, "model"))
+    if name == "h" and len(core) == 2:  # rglru state [B,dr]
+        return spec(b_ax, pick(core[1], mesh, "model"))
+    if len(core) >= 2:
+        return spec(b_ax, *(None,) * (len(core) - 1))
+    return spec(b_ax)
+
+
+def cache_shardings(caches: Any, mesh: Mesh, cfg: ModelConfig, *,
+                    seq_shard: bool = False):
+    def walk(path, leaf):
+        return NamedSharding(
+            mesh,
+            _cache_leaf_spec(_path_keys(path), tuple(leaf.shape), mesh, cfg,
+                             seq_shard))
+
+    return jax.tree_util.tree_map_with_path(walk, caches)

@@ -1,0 +1,1 @@
+from repro.training import checkpoint, optimizer, trainer  # noqa: F401

@@ -1,0 +1,56 @@
+"""Minimal npz checkpointing for param / gate / optimizer pytrees."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flatten(v, prefix + (k,))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, prefix + (str(i),))
+    else:
+        yield "/".join(prefix), tree
+
+
+def save(path: str, tree: Any, meta: Dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = dict(_flatten(tree))
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(path, **arrays)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (same treedef)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+
+    def rebuild(tree, prefix=()):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, prefix + (k,)) for k, v in tree.items()}
+        if isinstance(tree, tuple):
+            return tuple(rebuild(v, prefix + (str(i),)) for i, v in enumerate(tree))
+        if isinstance(tree, list):
+            return [rebuild(v, prefix + (str(i),)) for i, v in enumerate(tree)]
+        key = "/".join(prefix)
+        arr = data[key]
+        return jnp.asarray(arr, dtype=tree.dtype if hasattr(tree, "dtype") else None)
+
+    return rebuild(like)
+
+
+def load_meta(path: str) -> Dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

@@ -1,0 +1,48 @@
+"""Pure-JAX AdamW with cosine schedule + linear warmup (paper Appendix C:
+AdamW, wd 0.01, peak lr 1e-3, 10% warmup, cosine decay)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, warmup_frac: float = 0.1):
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / warmup
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def adamw_init(params: Any) -> AdamWState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(jnp.zeros((), jnp.int32), z, jax.tree.map(jnp.zeros_like, params))
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any, *, lr,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.01) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    b1t = 1.0 - b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - b2 ** step.astype(jnp.float32)
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v, grads)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr_t * ((m_ / b1t) / (jnp.sqrt(v_ / b2t) + eps)
+                                      + weight_decay * p),
+        params, m, v)
+    return new_params, AdamWState(step, m, v)

@@ -1,0 +1,158 @@
+"""Gate-only distillation trainer (paper §3.3, Appendix C).
+
+The backbone is FROZEN: only Write-Gate MLP parameters are optimized. We
+extract the gate sub-leaves into a flat dict so (a) grads/Adam moments
+exist only for ~0.4% of parameters and (b) XLA never emits dW matmuls for
+the backbone (it is a closed-over constant, not a differentiated input).
+
+    L_total = || h_gated - h_teacher ||^2  +  lambda * L_sparsity(g)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.losses import total_loss
+from repro.models import transformer as T
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+
+GateDict = Dict[str, jax.Array]
+
+
+# ==========================================================================
+# gate-parameter extraction / injection
+# ==========================================================================
+def _walk_paths(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk_paths(v, prefix + (k,))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            yield from _walk_paths(v, prefix + (str(i),))
+    else:
+        yield prefix, tree
+
+
+def get_gates(params) -> GateDict:
+    out = {}
+    for path, leaf in _walk_paths(params):
+        if "gate" in path:
+            out["/".join(path)] = leaf
+    return out
+
+
+def set_gates(params, gates: GateDict):
+    def rebuild(tree, prefix=()):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, prefix + (k,)) for k, v in tree.items()}
+        if isinstance(tree, tuple):
+            return tuple(rebuild(v, prefix + (str(i),)) for i, v in enumerate(tree))
+        if isinstance(tree, list):
+            return [rebuild(v, prefix + (str(i),)) for i, v in enumerate(tree)]
+        key = "/".join(prefix)
+        return gates.get(key, tree) if "gate" in prefix else tree
+
+    return rebuild(params)
+
+
+# ==========================================================================
+# loss / step
+# ==========================================================================
+def distill_loss_fn(gates: GateDict, params, cfg: ModelConfig, batch,
+                    *, lam: float, moe_groups: int = 1,
+                    q_chunk: Optional[int] = None, remat: bool = False,
+                    scan_unroll: bool = False):
+    """batch: {"tokens": [B,S], "loss_mask": [B,S] or None, ...}."""
+    p = set_gates(params, gates)
+    kw = {}
+    if "enc_embeds" in batch:
+        kw["enc_embeds"] = batch["enc_embeds"]
+    if "positions" in batch:
+        kw["positions"] = batch["positions"]
+    if "embeds" in batch:
+        kw["embeds"] = batch["embeds"]
+    teacher = T.forward(p, cfg, batch.get("tokens"), mode="teacher",
+                        with_logits=False, moe_groups=moe_groups,
+                        q_chunk=q_chunk, remat=remat,
+                        scan_unroll=scan_unroll, **kw)
+    student = T.forward(p, cfg, batch.get("tokens"), mode="gated",
+                        with_logits=False, moe_groups=moe_groups,
+                        q_chunk=q_chunk, remat=remat,
+                        scan_unroll=scan_unroll, **kw)
+    h_t = jax.lax.stop_gradient(teacher.hidden)
+    loss, aux = total_loss(student.hidden, h_t, student.gates, lam,
+                           batch.get("loss_mask"))
+    return loss, aux
+
+
+class TrainState(NamedTuple):
+    gates: GateDict
+    opt: AdamWState
+
+
+def init_train_state(params) -> TrainState:
+    # copy: train steps donate the state; without the copy the first step
+    # would delete the gate buffers still referenced by ``params``
+    gates = jax.tree.map(jnp.copy, get_gates(params))
+    return TrainState(gates, adamw_init(gates))
+
+
+def train_step(state: TrainState, params, cfg: ModelConfig, batch, *,
+               lr, lam: Optional[float] = None, moe_groups: int = 1,
+               q_chunk: Optional[int] = None, remat: bool = False,
+               scan_unroll: bool = False
+               ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    lam = cfg.wgkv.lam if lam is None else lam
+    (loss, aux), grads = jax.value_and_grad(distill_loss_fn, has_aux=True)(
+        state.gates, params, cfg, batch, lam=lam, moe_groups=moe_groups,
+        q_chunk=q_chunk, remat=remat, scan_unroll=scan_unroll)
+    new_gates, new_opt = adamw_update(grads, state.opt, state.gates, lr=lr)
+    metrics = dict(aux, loss=loss)
+    return TrainState(new_gates, new_opt), metrics
+
+
+def make_train_step(cfg: ModelConfig, *, lr, lam=None, moe_groups=1,
+                    q_chunk=None, remat=False, scan_unroll=False, donate=True):
+    fn = functools.partial(train_step, cfg=cfg, lr=lr, lam=lam,
+                           moe_groups=moe_groups, q_chunk=q_chunk,
+                           remat=remat, scan_unroll=scan_unroll)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+# ==========================================================================
+# standard LM training (for WG-KV-inapplicable archs, e.g. xlstm — no gates
+# to distill; train_4k exercises full-parameter training instead)
+# ==========================================================================
+class LMTrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_lm_train_state(params) -> "LMTrainState":
+    return LMTrainState(params, adamw_init(params))
+
+
+def lm_loss_fn(params, cfg: ModelConfig, batch, *, moe_groups=1,
+               q_chunk=None, remat=False, scan_unroll=False):
+    kw = {k: batch[k] for k in ("enc_embeds", "positions", "embeds")
+          if k in batch}
+    out = T.forward(params, cfg, batch.get("tokens"), mode="teacher",
+                    moe_groups=moe_groups, q_chunk=q_chunk, remat=remat,
+                    scan_unroll=scan_unroll, **kw)
+    from repro.data.synthetic import lm_loss
+    ll = lm_loss(out.logits, batch["tokens"], batch.get("loss_mask"))
+    return ll + 0.01 * out.lb_loss, {"lm_loss": ll, "lb_loss": out.lb_loss}
+
+
+def lm_train_step(state: "LMTrainState", cfg: ModelConfig, batch, *, lr,
+                  moe_groups=1, q_chunk=None, remat=False, scan_unroll=False
+                  ) -> Tuple["LMTrainState", Dict[str, jax.Array]]:
+    (loss, aux), grads = jax.value_and_grad(lm_loss_fn, has_aux=True)(
+        state.params, cfg, batch, moe_groups=moe_groups, q_chunk=q_chunk,
+        remat=remat, scan_unroll=scan_unroll)
+    new_params, new_opt = adamw_update(grads, state.opt, state.params, lr=lr)
+    return LMTrainState(new_params, new_opt), dict(aux, loss=loss)

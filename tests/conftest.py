@@ -1,0 +1,30 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device. (The multi-device dry-run tests
+# spawn subprocesses with XLA_FLAGS; never set it here.)
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def small_wgkv(**kw):
+    from repro.configs.base import WGKVConfig
+
+    defaults = dict(enabled=True, w_local=16, tau=0.1, gate_hidden=32,
+                    global_budget_frac=1.0, sink=4)
+    defaults.update(kw)
+    return WGKVConfig(**defaults)
+
+
+def make_cfg(arch: str = "qwen3-0.6b", **wgkv_kw):
+    """Reduced fp32 config with a small WG-KV window for fast CPU tests."""
+    from repro.configs import get_reduced_config
+
+    cfg = get_reduced_config(arch).replace(dtype="float32")
+    if cfg.wgkv.enabled:
+        cfg = cfg.replace(wgkv=small_wgkv(**wgkv_kw))
+    return cfg.replace(sliding_window=min(cfg.sliding_window, 32))

@@ -1,0 +1,140 @@
+"""Selection (Quest) + Eviction (SnapKV) composition with Admission."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_cfg
+from repro.core import selection as SEL
+from repro.core.dual_cache import init_dual_cache, lazy_promote_and_write
+from repro.core.eviction import (evict_global, init_obs, maybe_evict,
+                                 push_query, snap_scores)
+from repro.models import inference as I
+from repro.models import transformer as T
+
+
+# ==========================================================================
+# Quest selection
+# ==========================================================================
+def test_page_meta_bounds(key):
+    k = jax.random.normal(key, (1, 2, 64, 8))
+    valid = jnp.ones((1, 2, 64), bool)
+    meta = SEL.build_page_meta(k, valid)
+    kn = np.asarray(k).reshape(1, 2, 4, 16, 8)
+    np.testing.assert_allclose(np.asarray(meta.kmin), kn.min(3), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(meta.kmax), kn.max(3), atol=1e-6)
+
+
+def test_quest_upper_bound_property(key):
+    """ub(page) >= actual q.k for every key in the page (the Quest bound)."""
+    ks = jax.random.split(key, 2)
+    k = jax.random.normal(ks[0], (1, 1, 64, 16))
+    q = jax.random.normal(ks[1], (1, 2, 16))  # 2 q heads, 1 kv head
+    meta = SEL.build_page_meta(k, jnp.ones((1, 1, 64), bool))
+    ub = SEL.page_upper_bound(q, meta)  # [1,1,4] (mean over group)
+    scores = jnp.einsum("bgd,bhkd->bghk", q[:, :], k[:, 0:1])  # per q head
+    page_scores = scores.reshape(1, 2, 1, 4, 16).max(-1).mean(1)
+    assert (np.asarray(ub) >= np.asarray(page_scores)[:, 0] - 1e-4).all()
+
+
+def test_quest_selection_improves_with_budget(key):
+    """Attention out with selected pages -> full attention as budget grows."""
+    cfg = make_cfg("qwen3-0.6b", global_budget_frac=1.0)
+    params = T.init_model(key, cfg)
+    toks = jax.random.randint(key, (1, 96), 0, cfg.vocab_size)
+    _, caches0 = I.prefill(params, cfg, toks[:, :64], budget=64)
+    full_logits, _, _ = I.decode_step(params, cfg, toks[:, 64], caches0)
+    errs = []
+    for pages in (1, 2, 4):
+        opts = I.DecodeOptions(quest_pages=pages)
+        lg, _, _ = I.decode_step(params, cfg, toks[:, 64], caches0, opts=opts)
+        errs.append(float(jnp.abs(lg - full_logits).max()))
+    assert errs[-1] <= errs[0] + 1e-5
+    assert errs[-1] == min(errs)
+
+
+# ==========================================================================
+# SnapKV eviction
+# ==========================================================================
+def _filled_cache(key, b=1, h=2, hd=8, w=4, budget=16, steps=20, tau=0.0):
+    cache = init_dual_cache(b, h, hd, w_local=w, budget=budget)
+    ks = jax.random.normal(key, (steps, b, h, hd))
+    for t in range(steps):
+        g = jnp.ones((b, h))  # admit everything
+        cache = lazy_promote_and_write(cache, ks[t], ks[t], g, tau=0.5)
+    return cache
+
+
+def test_evict_keeps_top_scored(key):
+    cache = _filled_cache(key)
+    c = cache.budget
+    scores = jnp.arange(c, dtype=jnp.float32)[None, None].repeat(2, 1)
+    gvalid = jnp.arange(c)[None, None] < cache.gcnt[..., None]
+    scores = jnp.where(gvalid, scores, -jnp.inf)
+    before = int(cache.gcnt[0, 0])
+    ev = evict_global(cache, scores, evict_frac=0.25)
+    after = int(ev.gcnt[0, 0])
+    n_ev = max(int(before * 0.25), 1)
+    assert after == before - n_ev
+    # lowest-scored (earliest slots here) were dropped; order preserved
+    kept_pos = np.asarray(ev.gpos[0, 0])[:after]
+    orig_pos = np.asarray(cache.gpos[0, 0])[:before]
+    assert kept_pos.tolist() == orig_pos[n_ev:].tolist()
+
+
+def test_maybe_evict_trigger_threshold(key):
+    cache = _filled_cache(key)
+    obs = init_obs(1, 4, 8, w_obs=8)
+    obs = push_query(obs, jax.random.normal(key, (1, 4, 8)))
+    cnt = int(cache.gcnt[0, 0])
+    c2, trig = maybe_evict(cache, obs, hard_budget=cnt + 5)
+    assert not bool(np.asarray(trig).any())
+    assert int(c2.gcnt[0, 0]) == cnt
+    c3, trig = maybe_evict(cache, obs, hard_budget=cnt)
+    assert bool(np.asarray(trig).all())
+    assert int(c3.gcnt[0, 0]) < cnt
+
+
+def test_snap_scores_prefer_attended(key):
+    """Keys similar to observed queries score higher."""
+    hd = 8
+    q = jnp.ones((1, 2, hd)) / np.sqrt(hd)
+    obs = init_obs(1, 2, hd, w_obs=4)
+    for _ in range(3):
+        obs = push_query(obs, q)
+    k = jnp.concatenate([
+        jnp.ones((1, 1, 4, hd)),           # aligned with queries
+        -jnp.ones((1, 1, 4, hd)),          # anti-aligned
+    ], axis=2)
+    valid = jnp.ones((1, 1, 8), bool)
+    s = np.asarray(snap_scores(obs, k, valid, w_pool=1))
+    assert s[0, 0, :4].min() > s[0, 0, 4:].max()
+
+
+def test_admission_reduces_eviction_pressure(key):
+    """Paper Fig. 2b: with admission, fewer promotions reach the global
+    cache, so a hard budget triggers eviction less often."""
+    cfg = make_cfg("qwen3-0.6b", global_budget_frac=0.5)
+    params = T.init_model(key, cfg)
+    toks = jax.random.randint(key, (1, 200), 0, cfg.vocab_size)
+    budget = 48
+
+    def run(tau_override):
+        import dataclasses
+        import functools
+
+        cfg2 = cfg if tau_override is None else cfg.replace(
+            wgkv=dataclasses.replace(cfg.wgkv, tau=tau_override))
+        opts = I.DecodeOptions(evict_hard_budget=budget, w_obs=16)
+        _, caches = I.prefill(params, cfg2, toks[:, :64], budget=64,
+                              opts=opts)
+        step = jax.jit(functools.partial(I.decode_step, cfg=cfg2, opts=opts))
+        trig = 0.0
+        for t in range(64, 144):
+            _, caches, st = step(params, token=toks[:, t], caches=caches)
+            trig += float(st["evict_triggers"])
+        return trig
+
+    trig_admit_all = run(0.0)       # admission off (everything promoted)
+    trig_gated = run(0.9)           # aggressive admission filter
+    assert trig_gated <= trig_admit_all

@@ -1,0 +1,102 @@
+"""Assigned-architecture configs: exact numbers from the assignment table."""
+import pytest
+
+from repro.configs import (ARCH_NAMES, all_configs, get_config,
+                           get_reduced_config, get_shape, shape_applicable)
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+    "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+    "whisper-medium": (24, 1024, 16, 16, 4096, 51865),  # 24 dec (+24 enc)
+}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_exact_assignment_numbers(name):
+    cfg = get_config(name)
+    l, d, h, kv, ff, v = EXPECTED[name]
+    assert cfg.n_repeats * len(cfg.block_pattern) + len(cfg.stem_pattern) == l
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source  # every config cites its source
+
+
+def test_moe_configs():
+    q = get_config("qwen3-moe-235b-a22b")
+    assert q.moe.n_experts == 128 and q.moe.top_k == 8
+    g = get_config("granite-moe-3b-a800m")
+    assert g.moe.n_experts == 40 and g.moe.top_k == 8
+
+
+def test_param_scale_sanity():
+    """Backbone param counts should land near the models' nameplates."""
+    import math
+
+    expect = {
+        "recurrentgemma-9b": (7e9, 12e9),
+        "xlstm-350m": (0.25e9, 0.6e9),
+        "phi3-medium-14b": (12e9, 16e9),
+        "qwen2-vl-7b": (6e9, 9e9),
+        "phi4-mini-3.8b": (3e9, 5e9),
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "qwen3-moe-235b-a22b": (2.1e11, 2.6e11),
+        "smollm-360m": (0.28e9, 0.45e9),
+        "granite-moe-3b-a800m": (2.2e9, 4e9),
+        "whisper-medium": (0.5e9, 1.1e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B"
+
+
+def test_active_params_moe():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    act = cfg.active_param_count()
+    tot = cfg.param_count()
+    assert act < tot * 0.25
+    assert 1.5e10 <= act <= 3e10  # ~22B active
+
+
+def test_reduced_configs_small():
+    for name in ARCH_NAMES:
+        r = get_reduced_config(name)
+        assert r.d_model <= 512
+        assert r.n_repeats * len(r.block_pattern) + len(r.stem_pattern) <= 4
+        if r.moe:
+            assert r.moe.n_experts <= 4
+
+
+def test_shape_applicability():
+    long = get_shape("long_500k")
+    ok, _ = shape_applicable(get_config("whisper-medium"), long)
+    assert not ok  # documented skip
+    ok, _ = shape_applicable(get_config("xlstm-350m"), long)
+    assert ok
+    ok, _ = shape_applicable(get_config("phi3-medium-14b"), long)
+    assert ok  # via WG-KV budgeted cache
+    # full-attention arch with WG-KV disabled cannot run long_500k
+    cfg = get_config("phi3-medium-14b")
+    from repro.configs.base import WGKVConfig
+    ok, _ = shape_applicable(cfg.replace(wgkv=WGKVConfig(enabled=False)), long)
+    assert not ok
+
+
+def test_gate_overhead_fraction():
+    """Paper: gate params ~= 0.4% of total."""
+    from repro.core.gate import gate_param_count
+
+    for name in ("phi3-medium-14b", "qwen3-0.6b", "qwen2-vl-7b"):
+        cfg = get_config(name)
+        frac = gate_param_count(cfg) * cfg.n_layers / cfg.param_count()
+        assert frac < 0.01, f"{name}: gate overhead {frac:.3%}"

@@ -1,0 +1,177 @@
+"""Hypothesis property tests on the WG-KV core invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import masks as M
+from repro.core.admission import normalized_cache_size, select_global
+from repro.core.dual_cache import (cache_kv_for_attention, init_dual_cache,
+                                   lazy_promote_and_write, prefill_populate)
+
+hypothesis.settings.register_profile(
+    "ci", settings(max_examples=25, deadline=None))
+hypothesis.settings.load_profile("ci")
+
+
+# ==========================================================================
+# masks (paper §3.2)
+# ==========================================================================
+@given(st.integers(2, 24), st.integers(1, 12), st.integers(0, 3))
+def test_gate_one_recovers_full_attention(s, w, seed):
+    """g == 1 => write-gated bias == plain causal mask (zero bias)."""
+    g = jnp.ones((1, 1, s))
+    bias = M.write_gate_bias(g, s, w, eps=0.0)
+    causal = M.causal_mask(s, s)
+    assert np.allclose(np.where(causal, np.asarray(bias[0, 0]), 0.0), 0.0)
+    assert np.all(np.asarray(bias[0, 0])[~np.asarray(causal)] <= M.NEG_INF)
+
+
+@given(st.integers(2, 24), st.integers(1, 12))
+def test_gate_zero_recovers_local_attention(s, w):
+    """g == 0 => only the local window survives the softmax."""
+    g = jnp.zeros((1, 1, s))
+    bias = M.write_gate_bias(g, s, w, eps=1e-9)
+    local = M.local_window_mask(s, s, w)
+    b = np.asarray(bias[0, 0])
+    assert np.allclose(b[np.asarray(local)], 0.0)
+    outside = np.asarray(M.causal_mask(s, s) & ~local)
+    if outside.any():
+        assert (b[outside] < -15).all()
+
+
+@given(st.integers(4, 16), st.integers(1, 8), st.integers(0, 5))
+def test_log_space_equals_multiplicative(s, w, seed):
+    """softmax(qk + log m) == (exp(qk) * m) / sum — the paper's log-space
+    transformation is exact."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    logits = jax.random.normal(k1, (s, s))
+    g = jax.nn.sigmoid(jax.random.normal(k2, (s,)))
+    causal = M.causal_mask(s, s)
+    local = M.local_window_mask(s, s, w)
+    m = jnp.where(local, 1.0, g[None, :]) * causal
+    # multiplicative form
+    e = jnp.exp(logits) * m
+    ref = e / e.sum(-1, keepdims=True)
+    # log-space form
+    bias = M.write_gate_bias(g[None, None], s, w, eps=0.0)[0, 0]
+    out = jax.nn.softmax(logits + bias, -1)
+    assert np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@given(st.integers(4, 32), st.integers(1, 8), st.floats(0.0, 1.0))
+def test_vertical_slash_mask_structure(s, w, tau):
+    g = jax.random.uniform(jax.random.PRNGKey(0), (1, 1, s))
+    mask = np.asarray(M.vertical_slash_mask(g, tau, s, w)[0, 0])
+    gn = np.asarray(g[0, 0])
+    for i in range(s):
+        for j in range(s):
+            expect = (j <= i) and ((i - j < w) or (gn[j] >= tau))
+            assert mask[i, j] == expect
+
+
+# ==========================================================================
+# admission (budgeted selection)
+# ==========================================================================
+@given(st.integers(8, 64), st.integers(1, 16), st.integers(0, 4),
+       st.integers(0, 6))
+def test_select_global_invariants(s, budget, sink, seed):
+    g = jax.random.uniform(jax.random.PRNGKey(seed), (2, 3, s))
+    sel = select_global(g, budget=budget, tau=0.5, sink=sink)
+    idx, valid, count = map(np.asarray, sel)
+    assert (count <= budget).all()
+    assert (count == valid.sum(-1)).all()
+    # valid indices are sorted ascending and admissible
+    gn = np.asarray(g)
+    for b in range(2):
+        for h in range(3):
+            ids = idx[b, h][valid[b, h]]
+            assert (np.diff(ids) > 0).all() if len(ids) > 1 else True
+            for j in ids:
+                assert gn[b, h, j] >= 0.5 or j < sink
+            # budget permitting, every sink is selected
+            if sink and count[b, h] < budget:
+                assert set(range(min(sink, s))) <= set(ids.tolist())
+
+
+@given(st.integers(8, 48), st.integers(2, 8))
+def test_exclusion_window(s, w):
+    g = jnp.ones((1, 1, s))
+    sel = select_global(g, budget=s, tau=0.1, exclude_from=s - w)
+    ids = np.asarray(sel.idx[0, 0])[np.asarray(sel.valid[0, 0])]
+    assert (ids < s - w).all()
+
+
+@given(st.floats(0.05, 0.95), st.floats(0.05, 0.95))
+def test_cache_size_monotone_in_tau(t1, t2):
+    """Normalized cache size is monotone non-increasing in tau."""
+    g = jax.random.uniform(jax.random.PRNGKey(1), (1, 2, 64))
+    lo, hi = min(t1, t2), max(t1, t2)
+    s_lo = np.asarray(normalized_cache_size(g, lo, 8))
+    s_hi = np.asarray(normalized_cache_size(g, hi, 8))
+    assert (s_hi <= s_lo + 1e-6).all()
+
+
+# ==========================================================================
+# dual cache + lazy promotion (paper §4.3, Fig. 6d)
+# ==========================================================================
+@given(st.integers(2, 6), st.integers(4, 12), st.integers(3, 30),
+       st.integers(0, 4))
+def test_ring_and_promotion_invariants(w, budget, steps, seed):
+    key = jax.random.PRNGKey(seed)
+    b, h, hd = 1, 2, 4
+    cache = init_dual_cache(b, h, hd, w_local=w, budget=budget)
+    tau = 0.5
+    gs = jax.random.uniform(key, (steps, b, h))
+    for t in range(steps):
+        k = jnp.full((b, h, hd), float(t))
+        cache = lazy_promote_and_write(cache, k, k, gs[t], tau=tau)
+    # ring holds exactly the last min(steps, w) tokens
+    lpos = np.asarray(cache.lpos[0])
+    expect_ring = set(range(max(0, steps - w), steps))
+    assert set(lpos[lpos >= 0].tolist()) == expect_ring
+    # promoted tokens: exited ring AND g >= tau (up to budget, in order)
+    gn = np.asarray(gs)[:, 0]
+    for hh in range(h):
+        exited = [t for t in range(max(0, steps - w)) if gn[t, hh] >= tau]
+        cnt = int(cache.gcnt[0, hh])
+        kept = exited[:budget]
+        assert cnt == len(kept)
+        assert np.asarray(cache.gpos[0, hh])[:cnt].tolist() == kept
+        assert int(cache.overflow[0, hh]) == len(exited) - len(kept)
+        # promoted K values carry the right token payload
+        gk = np.asarray(cache.gk[0, hh])[:cnt]
+        assert np.allclose(gk[:, 0], kept)
+    # attention view marks exactly (gcnt + ring) entries valid
+    _, _, valid = cache_kv_for_attention(cache)
+    v = np.asarray(valid[0])
+    for hh in range(h):
+        assert v[hh].sum() == int(cache.gcnt[0, hh]) + min(steps, w)
+
+
+@given(st.integers(1, 3))
+def test_prefill_populate_matches_streaming(seed):
+    """Prefilling S tokens == streaming them one-by-one through the ring."""
+    key = jax.random.PRNGKey(seed)
+    b, h, hd, w, budget, s = 1, 2, 4, 4, 8, 12
+    tau, sink = 0.5, 1
+    ks = jax.random.normal(key, (b, h, s, hd))
+    vs = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s, hd))
+    g = jax.random.uniform(jax.random.fold_in(key, 2), (b, h, s))
+    g = g.at[:, :, :sink].set(1.0)  # sinks admitted in both paths
+    c1 = init_dual_cache(b, h, hd, w_local=w, budget=budget)
+    c1 = prefill_populate(c1, ks, vs, g, tau=tau, sink=sink)
+    c2 = init_dual_cache(b, h, hd, w_local=w, budget=budget)
+    for t in range(s):
+        c2 = lazy_promote_and_write(c2, ks[:, :, t], vs[:, :, t],
+                                    g[:, :, t], tau=tau)
+    assert np.array_equal(np.asarray(c1.gcnt), np.asarray(c2.gcnt))
+    assert np.array_equal(np.asarray(c1.gpos), np.asarray(c2.gpos))
+    assert np.allclose(np.asarray(c1.gk), np.asarray(c2.gk), atol=1e-6)
+    assert np.array_equal(np.asarray(c1.lpos), np.asarray(c2.lpos))
+    assert np.allclose(np.asarray(c1.lk), np.asarray(c2.lk), atol=1e-6)
+    assert int(c1.ptr[0]) == int(c2.ptr[0])

@@ -1,0 +1,292 @@
+"""Substrate tests: MoE dispatch, recurrent blocks, optimizer, checkpoint,
+data pipeline, sharding rules."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_cfg
+from repro.configs import ARCH_NAMES, get_config, get_reduced_config
+
+
+# ==========================================================================
+# MoE
+# ==========================================================================
+def test_moe_nodrop_equals_dense(key):
+    """With capacity >= all tokens, argsort dispatch == explicit per-token
+    expert mixture."""
+    from repro.models import moe as MoE
+
+    cfg = get_reduced_config("granite-moe-3b-a800m").replace(dtype="float32")
+    cfg = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    p = MoE.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model)) * 0.5
+    y, aux = MoE.moe_ffn(p, cfg, x)
+    # dense reference
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    tw, ti = jax.lax.top_k(probs, cfg.moe.top_k)
+    tw = tw / tw.sum(-1, keepdims=True)
+    h = jnp.einsum("bsd,edf->bsef", x, p["w_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    yo = jnp.einsum("bsef,efd->bsed", jax.nn.silu(h) * u, p["w_down"])
+    ref = jnp.zeros_like(x)
+    for kk in range(cfg.moe.top_k):
+        sel = jnp.take_along_axis(yo, ti[..., kk][..., None, None], 2)[..., 0, :]
+        ref = ref + tw[..., kk][..., None] * sel
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+    assert float(aux["router_drop_frac"]) == 0.0
+
+
+def test_moe_capacity_drops_counted(key):
+    from repro.models import moe as MoE
+
+    cfg = get_reduced_config("granite-moe-3b-a800m").replace(dtype="float32")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=0.5))
+    p = MoE.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 32, cfg.d_model))
+    y, aux = MoE.moe_ffn(p, cfg, x)
+    assert 0.0 < float(aux["router_drop_frac"]) < 1.0
+    assert float(aux["lb_loss"]) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz
+
+
+def test_moe_groups_consistent(key):
+    """Group count must not change results when routing is drop-free."""
+    from repro.models import moe as MoE
+
+    cfg = get_reduced_config("qwen3-moe-235b-a22b").replace(dtype="float32")
+    cfg = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    p = MoE.init_moe(key, cfg)
+    x = jax.random.normal(key, (4, 8, cfg.d_model))
+    y1, _ = MoE.moe_ffn(p, cfg, x, groups=1)
+    y2, _ = MoE.moe_ffn(p, cfg, x, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+# ==========================================================================
+# recurrent blocks
+# ==========================================================================
+def test_rglru_block_vs_step(key):
+    from repro.models import rglru as RG
+
+    cfg = get_reduced_config("recurrentgemma-9b").replace(dtype="float32")
+    p = RG.init_rglru(key, cfg)
+    x = jax.random.normal(key, (2, 24, cfg.d_model)) * 0.5
+    y_full, st_full = RG.rglru_block(p, cfg, x)
+    st = RG.init_rglru_state(cfg, 2)
+    outs = []
+    for t in range(24):
+        y, st = RG.rglru_step(p, cfg, x[:, t], st)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(y_full), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st.h), np.asarray(st_full.h),
+                               atol=2e-5)
+
+
+def test_rglru_streaming_split(key):
+    from repro.models import rglru as RG
+
+    cfg = get_reduced_config("recurrentgemma-9b").replace(dtype="float32")
+    p = RG.init_rglru(key, cfg)
+    x = jax.random.normal(key, (1, 32, cfg.d_model))
+    y_full, _ = RG.rglru_block(p, cfg, x)
+    y1, st = RG.rglru_block(p, cfg, x[:, :16])
+    y2, _ = RG.rglru_block(p, cfg, x[:, 16:], st)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full),
+        atol=2e-5)
+
+
+def test_mlstm_three_forms_agree(key):
+    from repro.models import xlstm as XL
+
+    cfg = get_reduced_config("xlstm-350m").replace(dtype="float32")
+    p = XL.init_mlstm(key, cfg)
+    x = jax.random.normal(key, (2, 64, cfg.d_model)) * 0.5
+    y_quad, _ = XL.mlstm_block(p, cfg, x)
+    y_ch, _ = XL.mlstm_block_chunkwise(p, cfg, x, chunk=16)
+    st = XL.init_mlstm_state(cfg, 2)
+    outs = []
+    for t in range(64):
+        y, st = XL.mlstm_step(p, cfg, x[:, t], st)
+        outs.append(y)
+    y_step = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_ch), np.asarray(y_quad), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_quad), atol=2e-5)
+
+
+def test_slstm_block_vs_step(key):
+    from repro.models import xlstm as XL
+
+    cfg = get_reduced_config("xlstm-350m").replace(dtype="float32")
+    p = XL.init_slstm(key, cfg)
+    x = jax.random.normal(key, (2, 24, cfg.d_model)) * 0.5
+    y_full, st_full = XL.slstm_block(p, cfg, x)
+    st = XL.init_slstm_state(cfg, 2)
+    outs = []
+    for t in range(24):
+        y, st = XL.slstm_step(p, cfg, x[:, t], st)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(y_full), atol=2e-5)
+
+
+# ==========================================================================
+# optimizer / checkpoint
+# ==========================================================================
+def test_adamw_converges_quadratic():
+    from repro.training.optimizer import adamw_init, adamw_update
+
+    p = {"x": jnp.asarray(5.0)}
+    st = adamw_init(p)
+    for _ in range(300):
+        g = {"x": 2 * p["x"]}
+        p, st = adamw_update(g, st, p, lr=0.1, weight_decay=0.0)
+    assert abs(float(p["x"])) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    from repro.training.optimizer import cosine_schedule
+
+    lr = cosine_schedule(1e-3, 100, warmup_frac=0.1)
+    assert float(lr(0)) < float(lr(10))
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < 1e-5
+
+
+def test_checkpoint_roundtrip(key):
+    from repro.models import transformer as T
+    from repro.training import checkpoint as C
+    from repro.training import trainer as TR
+
+    cfg = make_cfg("smollm-360m")
+    params = T.init_model(key, cfg)
+    gates = TR.get_gates(params)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "g.npz")
+        C.save(path, gates, meta={"arch": cfg.name})
+        like = jax.tree.map(jnp.zeros_like, gates)
+        back = C.restore(path, like)
+        assert C.load_meta(path)["arch"] == cfg.name
+    for k in gates:
+        np.testing.assert_allclose(np.asarray(gates[k]), np.asarray(back[k]))
+
+
+def test_trainer_freezes_backbone(key):
+    """Gate-only training: backbone params receive no updates, gates do."""
+    from repro.models import transformer as T
+    from repro.training import trainer as TR
+
+    cfg = make_cfg("smollm-360m")
+    params = T.init_model(key, cfg)
+    state = TR.init_train_state(params)
+    toks = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
+    state2, _ = TR.train_step(state, params, cfg, {"tokens": toks}, lr=1e-2)
+    merged = TR.set_gates(params, state2.gates)
+    # backbone identical
+    w0 = params["blocks"]["b0"]["attn"]["w_q"]
+    assert merged["blocks"]["b0"]["attn"]["w_q"] is w0
+    # gates moved
+    g0 = params["blocks"]["b0"]["attn"]["gate"]["w1"]
+    g1 = merged["blocks"]["b0"]["attn"]["gate"]["w1"]
+    assert not np.allclose(np.asarray(g0), np.asarray(g1))
+
+
+def test_training_reduces_loss_and_sparsifies(key):
+    from repro.launch.train import run_training
+
+    cfg = make_cfg("smollm-360m")
+    params, state, hist = run_training(cfg, steps=25, batch=2, seq=96,
+                                       lam=0.3, verbose=False)
+    # sparsity pressure trades a little distill loss for a much smaller
+    # cache: total loss must drop, gates must sparsify, distill stays sane
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert hist[-1]["mean_gate"] < 0.6  # pushed down from the ~0.73 init
+    assert hist[-1]["distill"] < hist[0]["distill"] * 3
+
+
+# ==========================================================================
+# data pipeline
+# ==========================================================================
+def test_needle_task_structure(key):
+    from repro.data.synthetic import needle_task
+
+    b = needle_task(key, 4, 128, 512, payload=3)
+    toks = np.asarray(b["tokens"])
+    ans = np.asarray(b["answer"])
+    npos = np.asarray(b["needle_pos"])
+    qpos = int(b["query_pos"])
+    for i in range(4):
+        assert toks[i, npos[i]] == 511          # needle marker
+        assert (toks[i, npos[i] + 1: npos[i] + 4] == ans[i]).all()
+        assert toks[i, qpos] == 511             # query = needle marker
+        assert (toks[i, qpos + 1: qpos + 4] == ans[i]).all()
+    assert np.asarray(b["loss_mask"]).sum() == 4 * 3
+
+
+def test_token_stream_range(key):
+    from repro.data.synthetic import token_stream
+
+    t = np.asarray(token_stream(key, 2, 256, 1000))
+    assert t.min() >= 0 and t.max() < 1000 - 8
+
+
+# ==========================================================================
+# sharding rules
+# ==========================================================================
+def _check_spec_divides(shape, spec, mesh):
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        assert dim % n == 0, (shape, spec)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_shardings_divisible(name):
+    import jax
+
+    from repro.launch.steps import param_structs
+    from repro.sharding import rules
+
+    cfg = get_config(name)
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices() * 1).reshape(1, 1), ("data", "model"))
+    # use abstract mesh shape (16,16) via a fake: check divisibility logic
+    # against the real production sizes by calling the spec fn directly
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    pstruct = param_structs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(pstruct)[0]
+    for path, leaf in flat:
+        keys = rules._path_keys(path)
+        spec = rules._param_spec(keys, tuple(leaf.shape), FakeMesh(), cfg)
+        _check_spec_divides(leaf.shape, spec, FakeMesh())
+
+
+def test_pick_fallback():
+    from repro.sharding import rules
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    m = FakeMesh()
+    assert rules.pick(40, m, "model") is None          # 40 % 16 != 0
+    assert rules.pick(48, m, "model") == "model"
+    assert rules.pick(40, m, "model", ("data",)) is None
+    assert rules.pick(64, m, "model", "data") == "model"
