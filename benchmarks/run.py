@@ -13,6 +13,7 @@
 #   fig12  local-cache ablation                  (paper Fig. 12)
 #   fig13  input-dependent admission patterns    (paper Fig. 13)
 #   roofline  dry-run derived TPU roofline table (paper Fig. 8 analogue)
+#   serving   continuous-batching orchestrator throughput (BENCH_serving.json)
 import argparse
 import sys
 import time
@@ -28,6 +29,7 @@ MODULES = {
     "fig12": "benchmarks.bench_fig12_local_cache",
     "fig13": "benchmarks.bench_fig13_patterns",
     "roofline": "benchmarks.bench_roofline",
+    "serving": "benchmarks.bench_serving",
 }
 
 

@@ -1,16 +1,34 @@
-"""Serve a long-context batch through the WG-KV engine: dual cache + paged
-physical memory + continuous batching, with live cache statistics.
+"""Serve a long-context batch through the continuous-batching orchestrator:
+dual cache + paged physical memory + chunked prefill + token streaming.
 
     PYTHONPATH=src python examples/serve_longcontext.py
+
+serving
+-------
+The orchestrator wraps the JetStream-style engine backend
+(prefill/insert/generate) with a request queue, a chunked-prefill
+scheduler, per-request token streams, and latency telemetry::
+
+    from repro.serving.engine import Engine
+    from repro.serving.orchestrator import Orchestrator, SchedulerConfig
+
+    eng = Engine(params, cfg, slots=3, capacity=512)
+    orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=64),
+                        max_pending=32)           # queue backpressure
+    rid = orch.submit(prompt, max_new=24,
+                      on_token=lambda rid, tok, last: ...)  # streaming
+    orch.run()                                    # tick until drained
+    orch.tokens(rid)                              # full decoded output
+    orch.telemetry.report()                       # TTFT/TPOT/throughput/
+                                                  # admission/pool-util
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_reduced_config
 from repro.configs.base import WGKVConfig
-from repro.models import inference as I
 from repro.models import transformer as T
 from repro.serving.engine import Engine
+from repro.serving.orchestrator import Orchestrator, SchedulerConfig
 
 cfg = get_reduced_config("phi4-mini-3.8b").replace(
     dtype="float32",
@@ -20,24 +38,34 @@ params = T.init_model(jax.random.PRNGKey(0), cfg)
 
 eng = Engine(params, cfg, slots=3, capacity=512, pool_pages=8192,
              temperature=0.0)
+orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=64))
+
 key = jax.random.PRNGKey(7)
 for i, plen in enumerate((320, 196, 96, 256)):  # ragged prompts
     key, k = jax.random.split(key)
     prompt = jax.random.randint(k, (plen,), 0, cfg.vocab_size - 8).tolist()
-    eng.add_request(prompt, max_new=24)
-    print(f"queued request {i}: prompt_len={plen}")
+    stream_cb = (lambda r, tok, last:
+                 print(f"  stream rid={r} tok={tok}"
+                       + (" <eor>" if last else ""))) if plen == 96 else None
+    rid = orch.submit(prompt, max_new=24, on_token=stream_cb)
+    print(f"queued request {rid}: prompt_len={plen}")
 
 step = 0
-while not all(r.done for r in eng.requests.values()) and step < 200:
-    emitted = eng.step()
+verified = None
+while not orch.queue.all_done() and step < 400:
+    orch.tick()
     step += 1
     if step % 8 == 0:
-        live = sum(1 for r in eng.slot_rid if r is not None)
-        print(f"step {step:3d}: live={live} pool_pages={eng.pool.pages_in_use} "
-              f"pool_util={eng.pool.utilization():.2f} emitted={emitted}")
+        live = sum(eng.live)
+        print(f"tick {step:3d}: live={live} pool_pages={eng.pool.pages_in_use} "
+              f"pool_util={eng.pool.utilization():.2f}")
+    if verified is None and any(eng.live):
+        verified = eng.verify_paged()  # check while caches are resident
 
 print("\nresults:")
-for rid, r in eng.requests.items():
+for rid, r in orch.queue.requests.items():
     print(f"  req {rid}: generated {len(r.out)} tokens, first 8 = {r.out[:8]}")
-print(f"\npaged-vs-logical verification: max deviation = {eng.verify_paged():.2e}")
+print("\ntelemetry:")
+print(orch.telemetry.report())
+print(f"\npaged-vs-logical verification (live batch): {verified:.2e}")
 print(f"pool pages still allocated (should be 0): {eng.pool.pages_in_use}")

@@ -126,6 +126,48 @@ def build_decode_caches(cfg: ModelConfig, batch: int, capacity: int, *,
     return caches
 
 
+# ==========================================================================
+# batched cache splice helpers (serving: batch-1 prefill -> slot insert)
+# ==========================================================================
+def cache_batch_axis(path) -> int:
+    """Batch axis of a decode-cache leaf given its tree path: stacked
+    per-superblock caches carry [n_repeats, B, ...]; the eviction
+    observation tree is [n_repeats, n_attn, B, ...]; everything else
+    (``t``, stem caches) is batch-leading."""
+    keys = [getattr(k, "key", None) for k in path]
+    if "obs" in keys:
+        return 2
+    return 1 if "blocks" in keys else 0
+
+
+def alloc_batched_caches(caches_one: Any, slots: int) -> Any:
+    """Zeroed batch-``slots`` cache tree shaped like a batch-1 tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: jnp.repeat(jnp.zeros_like(x), slots,
+                                axis=cache_batch_axis(p)),
+        caches_one)
+
+
+def splice_caches(batch_tree: Any, one_tree: Any, slot: int) -> Any:
+    """Write a batch-1 cache tree into batch row ``slot`` of the batch
+    tree (the JetStream ``insert`` primitive)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, full, one: jax.lax.dynamic_update_index_in_dim(
+            full, jnp.take(one, 0, axis=cache_batch_axis(p)), slot,
+            cache_batch_axis(p)),
+        batch_tree, one_tree)
+
+
+def extract_slot_caches(batch_tree: Any, slot: int) -> Any:
+    """Read batch row ``slot`` back out as a batch-1 cache tree (inverse
+    of :func:`splice_caches`; used for slot migration / tests)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, full: jnp.expand_dims(
+            jnp.take(full, slot, axis=cache_batch_axis(p)),
+            cache_batch_axis(p)),
+        batch_tree)
+
+
 def decode_cache_structs(cfg: ModelConfig, shape: InputShape, *,
                          use_wgkv: bool) -> Any:
     b, s = shape.global_batch, shape.seq_len

@@ -215,12 +215,14 @@ def _attn_block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *,
     self_cache = cache["self"] if bt == "attn_cross" else cache
     window = cfg.sliding_window if bt == "local_attn" else None
     trig = jnp.zeros((), jnp.float32)
+    adm = None
     if isinstance(self_cache, DualCache):
         sel_fn = None
         if opts.quest_pages is not None:
             sel_fn = lambda cache, q: _quest_mask(cfg, cache, q, opts.quest_pages)
         h, new_cache, g_new = A.attn_decode_wgkv(
             p["attn"], cfg, xin, self_cache, token_select_fn=sel_fn)
+        adm = (g_new >= cfg.wgkv.tau).mean(axis=-1)  # per-row [B]
         if opts.evict_hard_budget is not None and obs is not None:
             q_obs = A._heads((xin[:, None] @ p["attn"]["w_q"].astype(xin.dtype)),
                              cfg.n_heads, cfg.head_dim)[:, :, 0]
@@ -246,7 +248,7 @@ def _attn_block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *,
         x_t = x_t + L.gelu_mlp(p["mlp"], _norm(cfg, p["ln2"], x_t[:, None]))[:, 0]
     else:
         x_t = x_t + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x_t[:, None]))[:, 0]
-    return x_t, new_cache, obs, trig
+    return x_t, new_cache, obs, trig, adm
 
 
 def _block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *, opts, obs,
@@ -260,13 +262,13 @@ def _block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *, opts, obs,
                                  _norm(cfg, p["ln1"], x_t[:, None])[:, 0], cache)
         x_t = x_t + y
         x_t = x_t + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x_t[:, None]))[:, 0]
-        return x_t, state, obs, zero
+        return x_t, state, obs, zero, None
     if bt == "mlstm":
         x_t, state = XL.mlstm_step(p["cell"], cfg, x_t, cache)
-        return x_t, state, obs, zero
+        return x_t, state, obs, zero, None
     if bt == "slstm":
         x_t, state = XL.slstm_step(p["cell"], cfg, x_t, cache)
-        return x_t, state, obs, zero
+        return x_t, state, obs, zero, None
     raise ValueError(bt)
 
 
@@ -289,14 +291,18 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
 
     new_caches: CacheTree = {"t": t + 1}
     trig_sum = jnp.zeros((), jnp.float32)
+    adm_sum = jnp.zeros((b,), jnp.float32)  # per-row: batch rows may be dead
+    adm_n = jnp.zeros((), jnp.float32)
     bd = functools.partial(_block_decode, cfg=cfg, opts=opts,
                            moe_groups=moe_groups)
     stem_new = []
     for i, bt in enumerate(cfg.stem_pattern):
-        x, c, _, trg = bd(params["stem"][i], bt=bt, x_t=x,
-                          cache=caches["stem"][i], obs=None)
+        x, c, _, trg, adm = bd(params["stem"][i], bt=bt, x_t=x,
+                               cache=caches["stem"][i], obs=None)
         stem_new.append(c)
         trig_sum = trig_sum + trg
+        if adm is not None:
+            adm_sum, adm_n = adm_sum + adm, adm_n + 1.0
     if stem_new:
         new_caches["stem"] = tuple(stem_new)
 
@@ -305,7 +311,7 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
     x = constrain_tokens(x)
 
     def body(carry, xs):
-        xc, trig = carry
+        xc, trig, asum, an = carry
         xc = constrain_tokens(xc)
         if has_obs:
             bp, bc, obs_b = xs
@@ -319,24 +325,54 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
             obs_i = None
             if obs_b is not None and bt in ("attn", "attn_moe", "local_attn", "attn_cross"):
                 obs_i = jax.tree.map(lambda v: v[ai], obs_b)
-            xc, c, obs_o, trg = bd(bp[f"b{i}"], bt=bt, x_t=xc, cache=bc[f"b{i}"],
-                                   obs=obs_i)
+            xc, c, obs_o, trg, adm = bd(bp[f"b{i}"], bt=bt, x_t=xc,
+                                        cache=bc[f"b{i}"], obs=obs_i)
             new_bc[f"b{i}"] = c
             if obs_i is not None:
                 new_obs.append(obs_o)
                 ai += 1
             trig = trig + trg
+            if adm is not None:
+                asum, an = asum + adm, an + 1.0
         ys = (new_bc, jax.tree.map(lambda *v: jnp.stack(v), *new_obs)) if new_obs \
             else (new_bc,)
-        return (xc, trig), ys
+        return (xc, trig, asum, an), ys
 
     xs = (params["blocks"], caches["blocks"], caches["obs"]) if has_obs \
         else (params["blocks"], caches["blocks"])
-    (x, trig_sum), ys = jax.lax.scan(body, (x, trig_sum), xs,
-                                     unroll=scan_unroll)
+    (x, trig_sum, adm_sum, adm_n), ys = jax.lax.scan(
+        body, (x, trig_sum, adm_sum, adm_n), xs, unroll=scan_unroll)
     new_caches["blocks"] = ys[0]
     if has_obs:
         new_caches["obs"] = ys[1]
     hidden = _norm(cfg, params["ln_f"], x[:, None])[:, 0]
     logits = L.unembed(params["embed"], hidden)
-    return logits, new_caches, {"evict_triggers": trig_sum}
+    return logits, new_caches, {
+        "evict_triggers": trig_sum,
+        # per-row [B] so callers can average over live slots only
+        "mean_admission": adm_sum / jnp.maximum(adm_n, 1.0)}
+
+
+def prefill_extend(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                   caches: CacheTree, *, moe_groups: int = 1,
+                   opts: DecodeOptions = DecodeOptions(),
+                   scan_unroll: bool = False
+                   ) -> Tuple[jax.Array, CacheTree, Dict[str, jax.Array]]:
+    """Teacher-forced multi-token cache extension (chunked prefill).
+
+    Feeds ``tokens`` [B, S] one position at a time through
+    :func:`decode_step` under a scan, so a prompt can be processed in
+    bounded chunks interleaved with other requests' decode steps. The
+    resulting cache state matches a one-shot prefill over the
+    concatenated sequence (lazy promotion admits exactly the same tokens
+    the write-gate bias admits at prefill time); a single device call per
+    chunk keeps it schedulable. Returns (logits of the LAST fed position
+    [B, V], caches, stats)."""
+    def body(carry, tok):
+        logits, new_caches, st = decode_step(
+            params, cfg, tok, carry, moe_groups=moe_groups, opts=opts,
+            scan_unroll=scan_unroll)
+        return new_caches, (logits, st["evict_triggers"], st["mean_admission"])
+    caches, (logits, trig, adm) = jax.lax.scan(body, caches, tokens.T)
+    return logits[-1], caches, {"evict_triggers": trig.sum(),
+                                "mean_admission": adm.mean()}

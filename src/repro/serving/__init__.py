@@ -1,1 +1,1 @@
-from repro.serving import engine, paged, sampling  # noqa: F401
+from repro.serving import engine, orchestrator, paged, sampling  # noqa: F401

@@ -1,21 +1,35 @@
-"""Serving engine: batched requests over the WG-KV dual cache, with the
-paged physical layer (serving/paged.py) mirroring every logical cache write
-— page tables, lazy-promotion page appends, ring-slot overwrites — exactly
-as §4.1/§4.3 of the paper describe, plus Quest/SnapKV composition flags.
+"""Serving engine: the JetStream-style accelerator backend for the WG-KV
+dual cache, with the paged physical layer (serving/paged.py) mirroring
+every logical cache write — page tables, lazy-promotion page appends,
+ring-slot overwrites — exactly as §4.1/§4.3 of the paper describe, plus
+Quest/SnapKV composition flags.
 
 The model math runs through the jitted decode path (models/inference.py);
-the engine owns request lifecycle (continuous-batching lite: requests join
-free slots, finish independently) and the logical->physical mirroring. The
-``verify_paged()`` method recomputes one layer's decode attention from the
-*physical pool* via the paged_decode Pallas kernel and asserts it matches
-the logical path — the systems-level correctness check that theoretical
-paging actually serves the right bytes.
+the engine exposes the prefill/insert/generate decomposition an outer
+continuous-batching orchestrator (serving/orchestrator/) schedules:
+
+  * ``start_prefill`` / ``prefill_step`` / ``finish_prefill`` — chunked
+    batch-1 prefill: the first chunk runs the budgeted vertical-slash
+    prefill on a ``w_local``-aligned prefix, later chunks extend the cache
+    through the teacher-forced ``prefill_extend`` scan, so a long prompt
+    never stalls in-flight decodes for more than one chunk.
+  * ``insert(prefix, slot)`` — splice the batch-1 cache tree into the
+    batched decode state (launch/specs.py helpers) and mirror it into the
+    physical paged pool.
+  * ``generate()`` — one jitted batched decode step over all live slots.
+  * ``free_slot(slot)`` — release the slot and reclaim its pool pages.
+
+The legacy fixed-slot loop (``add_request``/``step``/``run``) is kept as a
+thin layer over that API. The ``verify_paged()`` method recomputes one
+layer's decode attention from the *physical pool* via the paged_decode
+Pallas kernel and asserts it matches the logical path — the systems-level
+correctness check that theoretical paging actually serves the right bytes.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +37,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.dual_cache import DualCache
-from repro.kernels.ops import paged_decode_attention
+from repro.launch.specs import (alloc_batched_caches, build_decode_caches,
+                                splice_caches)
 from repro.models import inference as I
 from repro.serving import paged
 from repro.serving.sampling import sample
@@ -38,8 +53,31 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class Prefix:
+    """Result of a (possibly chunked) batch-1 prefill, ready to `insert`."""
+    caches: Any                        # batch-1 cache tree
+    prompt_len: int
+    mean_admission: float              # token-weighted write-gate admission
+    first_token: Optional[int] = None  # emitted iff finish_prefill(emit_first)
+    first_logits: Optional[jax.Array] = None  # [V] logits behind first_token
+
+
+@dataclasses.dataclass
+class PrefillTask:
+    """Incremental chunked-prefill state (one request, batch 1)."""
+    prompt: List[int]
+    pos: int = 0                       # prompt tokens already in the cache
+    caches: Any = None
+    adm_weighted: float = 0.0          # sum(admission * tokens) so far
+
+    @property
+    def done(self) -> bool:
+        return self.caches is not None and self.pos >= len(self.prompt)
+
+
 class Engine:
-    """Fixed-slot batched serving engine (slots = max concurrent requests)."""
+    """Batched serving backend (slots = max concurrent decodes)."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  capacity: int = 4096, opts: Optional[I.DecodeOptions] = None,
@@ -58,74 +96,174 @@ class Engine:
         self.slot_rid: List[Optional[int]] = [None] * slots
         self._next_rid = 0
         self.caches = None
+        self.live: List[bool] = [False] * slots
+        self.last_token: List[int] = [0] * slots
         self.mirror = mirror_paged
         if mirror_paged:
             self.pool = paged.PagedKVPool(pool_pages, cfg.head_dim)
         self._decode = jax.jit(functools.partial(
             I.decode_step, cfg=cfg, opts=self.opts))
-        self.stats = {"steps": 0, "evict_triggers": 0.0}
+        self._extend = jax.jit(functools.partial(
+            I.prefill_extend, cfg=cfg, opts=self.opts))
+        self.stats = {"steps": 0, "evict_triggers": 0.0, "decode_adm_sum": 0.0}
 
     # ------------------------------------------------------------------
-    def add_request(self, prompt: List[int], max_new: int = 32) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        self.requests[rid] = Request(rid, list(prompt), max_new)
-        return rid
-
-    def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_rid) if r is None]
-
+    # JetStream-style backend API: chunked prefill
     # ------------------------------------------------------------------
-    def _prefill_one(self, prompt: List[int]):
-        """Prefill a single request: budgeted vertical-slash prefill on the
-        largest window-multiple prefix, then teacher-forced decode steps for
-        the ragged tail (keeps arbitrary prompt lengths exact)."""
-        cfg = self.cfg
-        w_max = cfg.wgkv.w_local
-        if any(bt == "local_attn" for bt in cfg.block_pattern + cfg.stem_pattern):
-            w_max = max(w_max, cfg.sliding_window)
-        n0 = (len(prompt) // w_max) * w_max
-        budget = cfg.wgkv.global_budget(self.capacity)
-        if n0 >= w_max:
-            toks = jnp.asarray(prompt[:n0], jnp.int32)[None]
-            _, caches = I.prefill(self.params, cfg, toks, budget=budget,
-                                  max_len=self.capacity, opts=self.opts)
-        else:
-            from repro.launch.specs import build_decode_caches
-            caches = build_decode_caches(cfg, 1, self.capacity,
-                                         use_wgkv=True, prefilled=0)
+    @property
+    def _w_align(self) -> int:
+        """Prefill chunk alignment: the largest ring window in the model."""
+        w = self.cfg.wgkv.w_local
+        if any(bt == "local_attn"
+               for bt in self.cfg.block_pattern + self.cfg.stem_pattern):
+            w = max(w, self.cfg.sliding_window)
+        return w
+
+    def start_prefill(self, prompt: List[int]) -> PrefillTask:
+        return PrefillTask(prompt=list(prompt))
+
+    def prefill_step(self, task: PrefillTask,
+                     max_tokens: Optional[int] = None) -> bool:
+        """Advance a prefill task by at most ``max_tokens`` prompt tokens
+        (None = the whole remaining prompt). The first chunk runs the
+        budgeted vertical-slash prefill on a window-aligned prefix; later
+        chunks extend through the jitted teacher-forced scan. Returns True
+        when the full prompt is resident in the task's caches."""
+        if max_tokens is not None and max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
+        w = self._w_align
+        n = len(task.prompt)
+        budget = self.cfg.wgkv.global_budget(self.capacity)
+        if task.caches is None:
+            cap = n if max_tokens is None else min(n, max_tokens)
+            n0 = (cap // w) * w
+            if n0 >= w:
+                toks = jnp.asarray(task.prompt[:n0], jnp.int32)[None]
+                po, task.caches = I.prefill(
+                    self.params, self.cfg, toks, budget=budget,
+                    max_len=self.capacity, opts=self.opts)
+                task.pos = n0
+                task.adm_weighted += float(po.mean_admission) * n0
+                return task.done
+            task.caches = build_decode_caches(
+                self.cfg, 1, self.capacity, use_wgkv=True, prefilled=0)
             if self.opts.evict_hard_budget is not None:
-                caches["obs"] = I._init_obs_tree(cfg, 1, self.opts)
-        for tok in prompt[n0:]:
-            _, caches, _ = self._decode(
-                self.params, token=jnp.asarray([tok], jnp.int32),
-                caches=caches)
-        return caches
+                task.caches["obs"] = I._init_obs_tree(self.cfg, 1, self.opts)
+        remaining = n - task.pos
+        if remaining <= 0:
+            return True
+        take = remaining if max_tokens is None else min(remaining, max_tokens)
+        if max_tokens is not None and take == max_tokens:
+            # full chunk: one jitted scan call (stable shape -> one compile)
+            toks = jnp.asarray(task.prompt[task.pos:task.pos + take],
+                               jnp.int32)[None]
+            _, task.caches, st = self._extend(self.params, tokens=toks,
+                                              caches=task.caches)
+            self.stats["evict_triggers"] += float(st["evict_triggers"])
+            task.adm_weighted += float(st["mean_admission"]) * take
+        else:
+            # ragged tail: reuse the fixed-shape batch-1 decode per token
+            # instead of compiling a scan for every distinct tail length;
+            # stats stay on device until the loop ends (no per-token sync)
+            trigs, adms = [], []
+            for tok in task.prompt[task.pos:task.pos + take]:
+                _, task.caches, st = self._decode(
+                    self.params, token=jnp.asarray([tok], jnp.int32),
+                    caches=task.caches)
+                trigs.append(st["evict_triggers"])
+                adms.append(st["mean_admission"][0])
+            self.stats["evict_triggers"] += float(jnp.stack(trigs).sum())
+            task.adm_weighted += float(jnp.stack(adms).sum())
+        task.pos += take
+        return task.done
 
-    def _prefill_slot(self, slot: int, req: Request) -> None:
-        """Prefill one request and splice its caches into the batch tree."""
-        caches = self._prefill_one(req.prompt)
+    def finish_prefill(self, task: PrefillTask, *,
+                       emit_first: bool = True) -> Prefix:
+        """Seal a completed prefill task into a Prefix. With
+        ``emit_first`` the first generated token is sampled here (JetStream
+        semantics: prefill returns the first token, so streaming TTFT ends
+        at prefill, not at the next batched decode)."""
+        assert task.done, "prefill task not finished"
+        adm = task.adm_weighted / max(task.pos, 1)
+        prefix = Prefix(caches=task.caches, prompt_len=len(task.prompt),
+                        mean_admission=adm)
+        if emit_first:
+            logits, prefix.caches, st = self._decode(
+                self.params, token=jnp.asarray([task.prompt[-1]], jnp.int32),
+                caches=prefix.caches)
+            self.stats["evict_triggers"] += float(st["evict_triggers"])
+            self.key, sk = jax.random.split(self.key)
+            prefix.first_token = int(
+                sample(sk, logits, temperature=self.temperature)[0])
+            prefix.first_logits = logits[0]
+        return prefix
 
-        def _baxis(path) -> int:
-            # stacked per-superblock caches carry [n_repeats, B, ...];
-            # the eviction observation tree is [n_repeats, n_attn, B, ...]
-            keys = [getattr(k, "key", None) for k in path]
-            if "obs" in keys:
-                return 2
-            return 1 if "blocks" in keys else 0
+    def prefill(self, prompt: List[int], *,
+                chunk_tokens: Optional[int] = None,
+                emit_first: bool = True) -> Prefix:
+        """One-shot convenience wrapper around the chunked path."""
+        task = self.start_prefill(prompt)
+        while not self.prefill_step(task, chunk_tokens):
+            pass
+        return self.finish_prefill(task, emit_first=emit_first)
 
+    # ------------------------------------------------------------------
+    # JetStream-style backend API: insert / generate / free
+    # ------------------------------------------------------------------
+    def insert(self, prefix: Prefix, slot: int) -> None:
+        """Splice a prefix's caches into batch row ``slot`` and mirror it
+        into the physical paged pool."""
         if self.caches is None:
-            self.caches = jax.tree_util.tree_map_with_path(
-                lambda p, x: jnp.repeat(jnp.zeros_like(x), self.slots,
-                                        axis=_baxis(p)),
-                caches)
-        self.caches = jax.tree_util.tree_map_with_path(
-            lambda p, full, one: jax.lax.dynamic_update_index_in_dim(
-                full, jnp.take(one, 0, axis=_baxis(p)), slot, _baxis(p)),
-            self.caches, caches)
+            self.caches = alloc_batched_caches(prefix.caches, self.slots)
+        self.caches = splice_caches(self.caches, prefix.caches, slot)
+        self.live[slot] = True
+        self.last_token[slot] = (prefix.first_token
+                                 if prefix.first_token is not None else 0)
         if self.mirror:
-            self._mirror_prefill(slot, caches)
+            self._mirror_prefill(slot, prefix.caches)
 
+    def generate(self) -> Dict[int, int]:
+        """One batched decode step over all live slots; feeds each slot's
+        last token, samples the next, returns {slot: token}."""
+        if not any(self.live) or self.caches is None:
+            return {}
+        toks = [self.last_token[s] if self.live[s] else 0
+                for s in range(self.slots)]
+        before = self.caches
+        logits, self.caches, st = self._decode(
+            self.params, token=jnp.asarray(toks, jnp.int32),
+            caches=self.caches)
+        self.stats["steps"] += 1
+        self.stats["evict_triggers"] += float(st["evict_triggers"])
+        # admission over live rows only: dead slots decode token 0 against
+        # stale caches and would pollute the serving metric
+        adm_rows = np.asarray(st["mean_admission"])
+        live_rows = [s for s in range(self.slots) if self.live[s]]
+        self.stats["decode_adm_sum"] += float(adm_rows[live_rows].mean())
+        if self.mirror:
+            self._mirror_decode(before, self.caches)
+        self.key, sk = jax.random.split(self.key)
+        nxt = sample(sk, logits, temperature=self.temperature)
+        out: Dict[int, int] = {}
+        for s in range(self.slots):
+            if self.live[s]:
+                tok = int(nxt[s])
+                self.last_token[s] = tok
+                out[s] = tok
+        return out
+
+    def free_slot(self, slot: int) -> None:
+        """Retire a slot: stop decoding it and reclaim its pool pages."""
+        self.live[slot] = False
+        if self.mirror and self.caches is not None:
+            for lkey, _ in self._iter_dual(self.caches):
+                for h in range(self.cfg.n_kv_heads):
+                    self.pool.free_stream((slot, lkey, h, "global"))
+                    self.pool.free_stream((slot, lkey, h, "local"))
+
+    # ------------------------------------------------------------------
+    # paged-pool mirroring
+    # ------------------------------------------------------------------
     def _mirror_prefill(self, slot: int, caches) -> None:
         """Copy the logical dual caches into the physical paged pool."""
         for lkey, dc in self._iter_dual(caches):
@@ -138,7 +276,6 @@ class Engine:
                     np.asarray(dc.gv[0, h, :cnt], np.float32))
                 lkey_ = (slot, lkey, h, "local")
                 self.pool.free_stream(lkey_)
-                w = dc.w_local
                 self.pool.bulk_append(
                     lkey_, np.asarray(dc.lk[0, h], np.float32),
                     np.asarray(dc.lv[0, h], np.float32))
@@ -163,8 +300,8 @@ class Engine:
         """Apply one decode step's logical cache delta to the pool."""
         for (lkey, dcb), (_, dca) in zip(self._iter_dual(before),
                                          self._iter_dual(after)):
-            for slot, rid in enumerate(self.slot_rid):
-                if rid is None:
+            for slot in range(self.slots):
+                if not self.live[slot]:
                     continue
                 for h in range(self.cfg.n_kv_heads):
                     # promotion: gcnt increased -> append promoted token page
@@ -182,6 +319,17 @@ class Engine:
                         np.asarray(dca.lv[slot, h, p], np.float32))
 
     # ------------------------------------------------------------------
+    # legacy fixed-slot loop (thin layer over prefill/insert/generate)
+    # ------------------------------------------------------------------
+    def add_request(self, prompt: List[int], max_new: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = Request(rid, list(prompt), max_new)
+        return rid
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_rid) if r is None]
+
     def step(self) -> Dict[int, int]:
         """Admit pending requests, run one decode step, return {rid: token}."""
         pending = [r for r in self.requests.values()
@@ -191,44 +339,25 @@ class Engine:
                 break
             req = pending.pop(0)
             self.slot_rid[slot] = req.rid
-            self._prefill_slot(slot, req)
-        if all(r is None for r in self.slot_rid) or self.caches is None:
-            return {}
-        # last token per slot (prompt tail or last generated)
-        toks = []
-        for rid in self.slot_rid:
-            if rid is None:
-                toks.append(0)
-            else:
-                r = self.requests[rid]
-                toks.append(r.out[-1] if r.out else r.prompt[-1])
-        before = self.caches
-        logits, self.caches, st = self._decode(
-            self.params, token=jnp.asarray(toks, jnp.int32),
-            caches=self.caches)
-        self.stats["steps"] += 1
-        self.stats["evict_triggers"] += float(st["evict_triggers"])
-        if self.mirror:
-            self._mirror_decode(before, self.caches)
-        self.key, sk = jax.random.split(self.key)
-        nxt = sample(sk, logits, temperature=self.temperature)
+            # legacy semantics: the first generated token comes from the
+            # shared batched decode below, so prefill without emitting
+            prefix = self.prefill(req.prompt, emit_first=False)
+            self.insert(prefix, slot)
+            self.last_token[slot] = req.out[-1] if req.out else req.prompt[-1]
+        emitted_slots = self.generate()
         emitted: Dict[int, int] = {}
-        for slot, rid in enumerate(self.slot_rid):
+        for slot, tok in emitted_slots.items():
+            rid = self.slot_rid[slot]
             if rid is None:
                 continue
             req = self.requests[rid]
-            tok = int(nxt[slot])
             req.out.append(tok)
             emitted[rid] = tok
             if len(req.out) >= req.max_new or (self.eos is not None
                                                and tok == self.eos):
                 req.done = True
                 self.slot_rid[slot] = None
-                if self.mirror:
-                    for lkey, _ in self._iter_dual(self.caches):
-                        for h in range(self.cfg.n_kv_heads):
-                            self.pool.free_stream((slot, lkey, h, "global"))
-                            self.pool.free_stream((slot, lkey, h, "local"))
+                self.free_slot(slot)
         return emitted
 
     def run(self, max_steps: int = 256) -> None:
@@ -244,7 +373,7 @@ class Engine:
         the PHYSICAL pool via the paged_decode kernel and compare with the
         logical dual-cache contents. Returns max abs deviation."""
         assert self.mirror and self.caches is not None
-        live = [s for s, r in enumerate(self.slot_rid) if r is not None]
+        live = [s for s in range(self.slots) if self.live[s]]
         if not live:
             return 0.0
         node = self.caches["blocks"][f"b{block}"]

@@ -1,0 +1,23 @@
+"""Continuous-batching serving orchestrator (JetStream-style).
+
+Layering:
+  queue.py     — arrival-ordered RequestQueue with backpressure
+  scheduler.py — Scheduler policy + Orchestrator loop interleaving
+                 chunked prefill with batched decode
+  stream.py    — per-request token streaming with TTFT/TPOT timestamps
+  telemetry.py — throughput / latency percentiles / pool utilization /
+                 admission-rate aggregation
+
+The Orchestrator drives a serving Engine (serving/engine.py) through its
+prefill / insert / generate backend API.
+"""
+from repro.serving.orchestrator.queue import (QueueFull, RequestQueue,
+                                              ServeRequest)
+from repro.serving.orchestrator.scheduler import (Orchestrator, Scheduler,
+                                                  SchedulerConfig)
+from repro.serving.orchestrator.stream import StreamMux, TokenStream
+from repro.serving.orchestrator.telemetry import Telemetry
+
+__all__ = ["QueueFull", "RequestQueue", "ServeRequest", "Orchestrator",
+           "Scheduler", "SchedulerConfig", "StreamMux", "TokenStream",
+           "Telemetry"]

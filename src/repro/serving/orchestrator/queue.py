@@ -1,0 +1,76 @@
+"""Arrival-ordered request queue with backpressure.
+
+Requests enter in submission order (FIFO); ``max_pending`` bounds the
+number of requests waiting for a slot — once full, ``submit`` raises
+:class:`QueueFull` so an upstream frontend can shed load or retry with
+backoff (the serving-system analogue of a bounded inbox; rejected
+arrivals are counted for telemetry).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Deque, Dict, List, Optional
+
+
+class QueueFull(RuntimeError):
+    """Backpressure signal: the pending queue is at ``max_pending``."""
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One request's full serving lifecycle record."""
+    rid: int
+    prompt: List[int]
+    max_new: int
+    arrival_t: float
+    state: str = "queued"            # queued -> prefill -> decode -> done
+    slot: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    finish_t: Optional[float] = None
+    mean_admission: Optional[float] = None
+    # TTFT/TPOT live on the request's TokenStream (stream.py), the single
+    # source of truth for per-token timing
+
+
+class RequestQueue:
+    """FIFO arrival queue with bounded pending depth."""
+
+    def __init__(self, max_pending: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.max_pending = max_pending
+        self.clock = clock
+        self._pending: Deque[ServeRequest] = collections.deque()
+        self.requests: Dict[int, ServeRequest] = {}
+        self._next_rid = 0
+        self.rejected = 0
+
+    def submit(self, prompt: List[int], max_new: int = 32) -> int:
+        """Enqueue a request; raises QueueFull when at max_pending."""
+        if self.max_pending is not None and len(self._pending) >= self.max_pending:
+            self.rejected += 1
+            raise QueueFull(
+                f"pending queue at max_pending={self.max_pending}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = ServeRequest(rid=rid, prompt=list(prompt), max_new=max_new,
+                           arrival_t=self.clock())
+        self._pending.append(req)
+        self.requests[rid] = req
+        return rid
+
+    def pop(self) -> Optional[ServeRequest]:
+        """Dequeue the oldest pending request (None when empty)."""
+        return self._pending.popleft() if self._pending else None
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def depth(self) -> int:
+        return len(self._pending)
+
+    def all_done(self) -> bool:
+        return not self._pending and all(
+            r.state == "done" for r in self.requests.values())

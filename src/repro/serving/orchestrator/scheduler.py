@@ -1,0 +1,196 @@
+"""Scheduler + Orchestrator: continuous batching over the Engine backend.
+
+Each tick interleaves three kinds of work:
+
+  1. **admit** — pop arrival-ordered requests from the queue into free
+     slots (a slot is reserved while its prefill is in flight);
+  2. **chunked prefill** — advance in-flight prefill tasks by one
+     ``chunk_tokens`` chunk (``w_local``-aligned inside the engine), so a
+     long prompt never blocks the batched decode for more than a chunk;
+     when a task completes it is inserted and its first token streams
+     immediately (TTFT ends here, JetStream-style);
+  3. **batched decode** — one ``generate`` step over all live slots,
+     streaming one token per request; finished requests free their slot
+     and paged-pool pages on the spot so the next arrival can join.
+
+The Scheduler is the pure policy (how many to admit, how many prefill
+tasks to advance, whether to decode); the Orchestrator executes the plan
+against the engine, streams, and telemetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.serving.engine import Engine, PrefillTask
+from repro.serving.orchestrator.queue import (QueueFull, RequestQueue,
+                                              ServeRequest)
+from repro.serving.orchestrator.stream import OnToken, StreamMux
+from repro.serving.orchestrator.telemetry import Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    chunk_tokens: int = 64        # prefill tokens per task per tick
+    prefill_concurrency: int = 1  # prefill tasks advanced per tick
+    decode_while_prefill: bool = True  # decode between prefill chunks
+
+    def __post_init__(self):
+        if self.chunk_tokens < 1:
+            raise ValueError(f"chunk_tokens must be >= 1, got {self.chunk_tokens}")
+        if self.prefill_concurrency < 1:
+            raise ValueError("prefill_concurrency must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    admit: int            # queued requests to move into reserved slots
+    advance_prefills: int  # in-flight prefill tasks to advance one chunk
+    decode: bool          # run one batched decode step
+
+
+class Scheduler:
+    """Pure per-tick scheduling policy."""
+
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+
+    def plan(self, *, free_slots: int, queue_depth: int,
+             active_prefills: int, live_decodes: int) -> Plan:
+        admit = min(free_slots, queue_depth)
+        advance = min(active_prefills + admit, self.cfg.prefill_concurrency)
+        decode = live_decodes > 0 and (
+            self.cfg.decode_while_prefill or (active_prefills + admit) == 0)
+        return Plan(admit=admit, advance_prefills=advance, decode=decode)
+
+
+class Orchestrator:
+    """Continuous-batching serving loop over a JetStream-style Engine."""
+
+    def __init__(self, engine: Engine, *,
+                 sched: SchedulerConfig = SchedulerConfig(),
+                 max_pending: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = engine
+        self.scheduler = Scheduler(sched)
+        self.clock = clock
+        self.queue = RequestQueue(max_pending, clock)
+        self.mux = StreamMux(clock)
+        self.telemetry = Telemetry(clock)
+        self.slot_req: List[Optional[ServeRequest]] = [None] * engine.slots
+        # rid -> (request, prefill task), in admission order
+        self._prefills: Dict[int, "tuple[ServeRequest, PrefillTask]"] = {}
+        # engines are reusable (e.g. benchmark warmup); report stat deltas
+        # relative to this orchestrator's birth, not engine lifetime totals
+        self._stats0 = dict(engine.stats)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int = 32,
+               on_token: Optional[OnToken] = None) -> int:
+        """Enqueue a request (raises QueueFull under backpressure) and
+        open its token stream."""
+        try:
+            rid = self.queue.submit(prompt, max_new)
+        except QueueFull:
+            # keep shed-load telemetry fresh even if no tick follows
+            self.telemetry.counters["rejected"] = float(self.queue.rejected)
+            raise
+        req = self.queue.requests[rid]
+        self.mux.open(rid, req.arrival_t, on_token)
+        return rid
+
+    def _free_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_req) if r is None]
+
+    # ------------------------------------------------------------------
+    def tick(self) -> bool:
+        """One scheduling round; returns True if any work was done."""
+        self.telemetry.start()
+        self.telemetry.bump("ticks")
+        plan = self.scheduler.plan(
+            free_slots=len(self._free_slots()),
+            queue_depth=self.queue.depth,
+            active_prefills=len(self._prefills),
+            live_decodes=sum(self.engine.live))
+        worked = False
+
+        # 1) admit: queued request -> reserved slot + prefill task
+        for _ in range(plan.admit):
+            req = self.queue.pop()
+            if req is None:
+                break
+            slot = self._free_slots()[0]
+            req.slot, req.state = slot, "prefill"
+            self.slot_req[slot] = req
+            self._prefills[req.rid] = (req, self.engine.start_prefill(req.prompt))
+            worked = True
+
+        # 2) chunked prefill: advance the oldest in-flight tasks
+        for rid in list(self._prefills)[:plan.advance_prefills]:
+            req, task = self._prefills[rid]
+            pos0 = task.pos
+            done = self.engine.prefill_step(
+                task, self.scheduler.cfg.chunk_tokens)
+            self.telemetry.bump("prefill_chunks")
+            self.telemetry.bump("prefill_tokens", task.pos - pos0)
+            worked = True
+            if done:
+                prefix = self.engine.finish_prefill(task, emit_first=True)
+                self.engine.insert(prefix, req.slot)
+                req.state = "decode"
+                req.mean_admission = prefix.mean_admission
+                del self._prefills[rid]
+                self._deliver(req, prefix.first_token)
+
+        # 3) batched decode over live slots
+        if plan.decode:
+            out = self.engine.generate()
+            if out:
+                self.telemetry.bump("decode_steps")
+                worked = True
+            for slot, tok in out.items():
+                req = self.slot_req[slot]
+                if req is not None and req.state == "decode":
+                    self._deliver(req, tok)
+
+        if self.engine.mirror:
+            self.telemetry.sample_pool(self.engine.pool)
+        self.telemetry.counters["rejected"] = float(self.queue.rejected)
+        for k in ("evict_triggers", "decode_adm_sum"):
+            self.telemetry.counters[k] = \
+                self.engine.stats[k] - self._stats0[k]
+        return worked
+
+    def _deliver(self, req: ServeRequest, token: int) -> None:
+        """Stream one token to a request; retire it when finished."""
+        req.out.append(int(token))
+        now = self.clock()
+        is_last = (len(req.out) >= req.max_new
+                   or (self.engine.eos is not None
+                       and int(token) == self.engine.eos))
+        self.mux.emit(req.rid, int(token), is_last)
+        if is_last:
+            req.state = "done"
+            req.finish_t = now
+            self.engine.free_slot(req.slot)
+            self.slot_req[req.slot] = None
+            st = self.mux.streams[req.rid]
+            self.telemetry.record_request(
+                rid=req.rid, prompt_len=len(req.prompt), n_out=len(req.out),
+                ttft=st.ttft, tpot=st.tpot,
+                e2e=req.finish_t - req.arrival_t,
+                mean_admission=req.mean_admission)
+
+    # ------------------------------------------------------------------
+    def run(self, max_ticks: int = 10_000) -> None:
+        """Tick until every submitted request has completed."""
+        self.telemetry.start()
+        for _ in range(max_ticks):
+            if self.queue.all_done():
+                break
+            self.tick()
+        self.telemetry.stop()
+
+    def tokens(self, rid: int) -> List[int]:
+        return self.mux.tokens(rid)

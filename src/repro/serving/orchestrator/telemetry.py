@@ -1,0 +1,150 @@
+"""Serving telemetry: throughput, latency percentiles, paged-pool
+utilization, eviction triggers, and mean write-gate admission rate.
+
+The admission rate is the paper's headline memory knob surfaced as a
+serving metric: a mean admission of ``a`` with local window ``W`` means
+steady-state KV residency ~``a*t + W`` tokens instead of ``t`` — the
+memory saving the gate buys is directly observable per request here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    prompt_len: int
+    n_out: int
+    ttft: Optional[float]
+    tpot: Optional[float]
+    e2e: Optional[float]
+    mean_admission: Optional[float]
+
+
+def _pct(xs: List[float], q: float) -> Optional[float]:
+    return float(np.percentile(np.asarray(xs), q)) if xs else None
+
+
+def _mean(xs: List[float]) -> Optional[float]:
+    return float(np.mean(np.asarray(xs))) if xs else None
+
+
+class Telemetry:
+    """Aggregates counters, per-request latency records, and pool samples."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.t_start: Optional[float] = None
+        self.t_end: Optional[float] = None
+        self.counters: Dict[str, float] = {
+            "ticks": 0, "decode_steps": 0, "prefill_chunks": 0,
+            "prefill_tokens": 0, "generated_tokens": 0, "completed": 0,
+            "rejected": 0, "evict_triggers": 0.0,
+        }
+        self.records: List[RequestRecord] = []
+        self.pool_util_samples: List[float] = []
+        self.pool_page_samples: List[int] = []
+
+    # ---- lifecycle -------------------------------------------------------
+    def start(self) -> None:
+        if self.t_start is None:
+            self.t_start = self.clock()
+
+    def stop(self) -> None:
+        self.t_end = self.clock()
+
+    def bump(self, name: str, by: float = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + by
+
+    def sample_pool(self, pool) -> None:
+        self.pool_util_samples.append(float(pool.utilization()))
+        self.pool_page_samples.append(int(pool.pages_in_use))
+
+    def record_request(self, *, rid: int, prompt_len: int, n_out: int,
+                       ttft: Optional[float], tpot: Optional[float],
+                       e2e: Optional[float],
+                       mean_admission: Optional[float]) -> None:
+        self.records.append(RequestRecord(rid, prompt_len, n_out, ttft,
+                                          tpot, e2e, mean_admission))
+        self.bump("completed")
+        self.bump("generated_tokens", n_out)
+
+    # ---- aggregation -----------------------------------------------------
+    def summary(self) -> Dict[str, object]:
+        wall = None
+        if self.t_start is not None:
+            wall = (self.t_end or self.clock()) - self.t_start
+        ttfts = [r.ttft for r in self.records if r.ttft is not None]
+        tpots = [r.tpot for r in self.records if r.tpot is not None]
+        e2es = [r.e2e for r in self.records if r.e2e is not None]
+        adms = [r.mean_admission for r in self.records
+                if r.mean_admission is not None]
+        n = len(self.records)
+        toks = self.counters["generated_tokens"]
+        steps = self.counters["decode_steps"]
+        decode_adm = (self.counters.get("decode_adm_sum", 0.0) / steps
+                      if steps else None)
+        return {
+            "mean_admission_decode": decode_adm,
+            "requests": n,
+            "wall_s": wall,
+            "requests_per_s": (n / wall if wall else None),
+            "tokens_per_s": (toks / wall if wall else None),
+            "ttft_mean_s": _mean(ttfts),
+            "ttft_p50_s": _pct(ttfts, 50),
+            "ttft_p90_s": _pct(ttfts, 90),
+            "ttft_p99_s": _pct(ttfts, 99),
+            "tpot_mean_s": _mean(tpots),
+            "tpot_p50_s": _pct(tpots, 50),
+            "tpot_p90_s": _pct(tpots, 90),
+            "e2e_mean_s": _mean(e2es),
+            "mean_admission": _mean(adms),
+            "pool_util_mean": _mean(self.pool_util_samples),
+            "pool_util_last": (self.pool_util_samples[-1]
+                               if self.pool_util_samples else None),
+            "pool_pages_peak": (max(self.pool_page_samples)
+                                if self.pool_page_samples else None),
+            "counters": dict(self.counters),
+        }
+
+    def report(self) -> str:
+        s = self.summary()
+        c = s["counters"]
+
+        def f(x, unit="", scale=1.0, nd=2):
+            return "-" if x is None else f"{x * scale:.{nd}f}{unit}"
+
+        lines = [
+            f"requests={s['requests']} "
+            f"({c['rejected']:.0f} rejected by backpressure)  "
+            f"wall={f(s['wall_s'], 's')}",
+            f"throughput: {f(s['requests_per_s'])} req/s, "
+            f"{f(s['tokens_per_s'])} tok/s "
+            f"(decode_steps={c['decode_steps']:.0f}, "
+            f"prefill_chunks={c['prefill_chunks']:.0f}, "
+            f"prefill_tokens={c['prefill_tokens']:.0f})",
+            f"TTFT: mean={f(s['ttft_mean_s'], 'ms', 1e3)} "
+            f"p50={f(s['ttft_p50_s'], 'ms', 1e3)} "
+            f"p90={f(s['ttft_p90_s'], 'ms', 1e3)} "
+            f"p99={f(s['ttft_p99_s'], 'ms', 1e3)}",
+            f"TPOT: mean={f(s['tpot_mean_s'], 'ms', 1e3)} "
+            f"p50={f(s['tpot_p50_s'], 'ms', 1e3)} "
+            f"p90={f(s['tpot_p90_s'], 'ms', 1e3)}",
+            f"admission: prefill_mean={f(s['mean_admission'], nd=3)} "
+            f"decode_mean={f(s['mean_admission_decode'], nd=3)} "
+            f"(evict_triggers={c['evict_triggers']:.0f})",
+            f"paged pool: util_mean={f(s['pool_util_mean'], nd=3)} "
+            f"util_last={f(s['pool_util_last'], nd=3)} "
+            f"pages_peak={s['pool_pages_peak']}",
+        ]
+        return "\n".join(lines)
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.summary(), fh, indent=2)

@@ -6,6 +6,11 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running tests (subprocess dry-runs etc.)")
+
+
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)

@@ -1,10 +1,12 @@
 """Hypothesis property tests on the WG-KV core invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import masks as M

@@ -71,7 +71,14 @@ for arch, shp, wg in [("qwen3-0.6b", "train_4k", True),
         compiled = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                            donate_argnums=bundle.donate_argnums
                            ).lower(*bundle.args).compile()
-    out[f"{arch}/{shp}"] = compiled.memory_analysis().peak_memory_in_bytes
+    mem = compiled.memory_analysis()
+    # peak_memory_in_bytes disappeared from newer jaxlib CompiledMemoryStats;
+    # fall back to the arg+temp+output sum (same fields dryrun.py records)
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is None:
+        peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                + mem.output_size_in_bytes)
+    out[f"{arch}/{shp}"] = peak
 print(json.dumps(out))
 """
 
