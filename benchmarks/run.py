@@ -13,7 +13,8 @@
 #   fig12  local-cache ablation                  (paper Fig. 12)
 #   fig13  input-dependent admission patterns    (paper Fig. 13)
 #   roofline  dry-run derived TPU roofline table (paper Fig. 8 analogue)
-#   serving   continuous-batching orchestrator throughput (BENCH_serving.json)
+#   serving   backend A/B trace replay: wgkv vs dense under one orchestrator
+#             (bench_serving --backends wgkv,dense --smoke; BENCH_serving.json)
 import argparse
 import sys
 import time
@@ -32,6 +33,12 @@ MODULES = {
     "serving": "benchmarks.bench_serving",
 }
 
+# per-module run() kwargs: the serving A/B path runs headlessly on the
+# smoke trace so every benchmark sweep exercises the multi-backend replay
+MODULE_KWARGS = {
+    "serving": {"backends": ("wgkv", "dense"), "smoke": True},
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -47,7 +54,7 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = importlib.import_module(MODULES[name])
-            rows = mod.run()
+            rows = mod.run(**MODULE_KWARGS.get(name, {}))
             for r, us, derived in rows:
                 print(f"{r},{us:.1f},{derived}", flush=True)
             print(f"{name}/_wall_s,{(time.time() - t0) * 1e6:.0f},module_total",

@@ -11,6 +11,8 @@ identical vertical-slash / dual-cache machinery:
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 import jax.numpy as jnp
 
@@ -46,3 +48,29 @@ def identify_retrieval_heads(gate_scores: jax.Array, ratio: float) -> jax.Array:
 def full_attention_gates(batch: int, n_kv_heads: int, seq: int) -> jax.Array:
     """The no-admission upper baseline: admit everything."""
     return jnp.ones((batch, n_kv_heads, seq), jnp.float32)
+
+
+def gates_from_positions(policy: str, positions: jax.Array, n_kv_heads: int,
+                         *, sink: int,
+                         retrieval_heads: Sequence[int] = ()) -> jax.Array:
+    """Static admission gates at arbitrary absolute positions.
+
+    The serving-time form of the baselines above: instead of a [B, H, S]
+    prefill grid, gates are evaluated at the given absolute ``positions``
+    ([B] for one decode step, [B, S] for a prefill chunk) so chunked
+    prefill and decode writes see position-consistent admission.
+    Returns [B, H] or [B, H, S] matching ``positions`` with a head axis
+    inserted at dim 1.
+    """
+    g = (positions < sink).astype(jnp.float32)            # [B] or [B, S]
+    out_shape = g.shape[:1] + (n_kv_heads,) + g.shape[1:]
+    g = jnp.broadcast_to(jnp.expand_dims(g, 1), out_shape)
+    if policy == "streaming_llm":
+        return g
+    if policy == "duo":
+        retr = jnp.zeros((n_kv_heads,), bool)
+        if len(retrieval_heads):
+            retr = retr.at[jnp.asarray(retrieval_heads, jnp.int32)].set(True)
+        retr = retr.reshape((1, n_kv_heads) + (1,) * (g.ndim - 2))
+        return jnp.where(retr, 1.0, g)
+    raise ValueError(f"unknown static admission policy {policy!r}")

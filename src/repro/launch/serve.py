@@ -1,9 +1,12 @@
-"""Serving driver: continuous-batching orchestrator over the WG-KV engine
-with chunked prefill, per-request token streaming, and admission-aware
-telemetry (plus optional Quest / SnapKV composition).
+"""Serving driver: continuous-batching orchestrator over any registered
+engine backend — WG-KV dual cache (default), dense full-KV, or a static
+admission baseline — with chunked prefill, per-request token streaming,
+and admission-aware telemetry (plus optional Quest / SnapKV composition).
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-0.6b --reduced --requests 8 --max-new 16 --quest-pages 4
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen3-0.6b --reduced --backend dense --requests 4
 """
 from __future__ import annotations
 
@@ -14,7 +17,7 @@ import jax
 from repro.configs import ARCH_NAMES, get_config, get_reduced_config
 from repro.models import inference as I
 from repro.models import transformer as T
-from repro.serving.engine import Engine
+from repro.serving.backend import BACKEND_NAMES, make_backend
 from repro.serving.orchestrator import Orchestrator, SchedulerConfig
 
 
@@ -22,6 +25,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--backend", default="wgkv", choices=BACKEND_NAMES,
+                    help="serving engine backend (protocol implementation)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=16)
@@ -53,8 +58,10 @@ def main() -> None:
     params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
     opts = I.DecodeOptions(quest_pages=args.quest_pages,
                            evict_hard_budget=args.evict_budget)
-    eng = Engine(params, cfg, slots=args.slots, capacity=args.capacity,
-                 opts=opts, temperature=args.temperature, seed=args.seed)
+    eng = make_backend(args.backend, params, cfg, slots=args.slots,
+                       capacity=args.capacity, opts=opts,
+                       temperature=args.temperature, seed=args.seed)
+    print(f"backend: {eng.capabilities()}")
     orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=args.chunk_tokens),
                         max_pending=args.max_pending)
 
@@ -85,20 +92,21 @@ def main() -> None:
         print(f"req {rid}: prompt[:8]={req.prompt[:8]} -> out={req.out}")
     print("\ntelemetry:")
     print(orch.telemetry.report())
-    # verify_paged needs resident caches, and the pool is already empty
-    # after the burst drains — so serve one extra request and check the
-    # physical-vs-logical deviation while it is live
-    vr = submit_bp([int(t) for t in
-                    jax.random.randint(key, (args.prompt_len,), 0,
-                                       cfg.vocab_size - 8)],
-                   max_new=2, on_token=None)
-    for _ in range(10_000):
-        if orch.queue.requests[vr].state in ("decode", "done"):
-            break
-        orch.tick()
-    dev = eng.verify_paged() if any(eng.live) else 0.0
-    print(f"\npaged-vs-logical max deviation (live request): {dev:.2e}")
-    orch.run()
+    if eng.capabilities().paged:
+        # verify_paged needs resident caches, and the pool is already empty
+        # after the burst drains — so serve one extra request and check the
+        # physical-vs-logical deviation while it is live
+        vr = submit_bp([int(t) for t in
+                        jax.random.randint(key, (args.prompt_len,), 0,
+                                           cfg.vocab_size - 8)],
+                       max_new=2, on_token=None)
+        for _ in range(10_000):
+            if orch.queue.requests[vr].state in ("decode", "done"):
+                break
+            orch.tick()
+        dev = eng.verify_paged() if any(eng.live) else 0.0
+        print(f"\npaged-vs-logical max deviation (live request): {dev:.2e}")
+        orch.run()
 
 
 if __name__ == "__main__":

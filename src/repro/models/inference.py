@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import baselines as BL
 from repro.core import eviction as EV
 from repro.core import selection as SEL
 from repro.core.dual_cache import DualCache, init_dual_cache, prefill_populate
@@ -44,6 +45,25 @@ class DecodeOptions:
     evict_hard_budget: Optional[int] = None  # post-write Eviction bound (tokens/head)
     evict_frac: float = 0.10
     w_obs: int = 256
+    # static admission override (core/baselines.py): replaces the learned
+    # write-gate with a position-only policy — "streaming_llm" (sinks only)
+    # or "duo" (retrieval heads admit all; streaming heads sinks only).
+    # None = learned gate. Fields stay hashable (tuple) for jit partials.
+    admission_policy: Optional[str] = None
+    admission_sink: int = 16
+    duo_retrieval_heads: Tuple[int, ...] = ()
+
+
+def _static_gates(cfg: ModelConfig, opts: DecodeOptions,
+                  positions: jax.Array) -> Optional[jax.Array]:
+    """Static admission gates at ``positions`` ([B] decode / [B, S] prefill);
+    None when the learned gate is in effect."""
+    if opts.admission_policy is None:
+        return None
+    pos = positions if positions.ndim <= 2 else positions[0]  # M-RoPE stack
+    return BL.gates_from_positions(
+        opts.admission_policy, pos, cfg.n_kv_heads,
+        sink=opts.admission_sink, retrieval_heads=opts.duo_retrieval_heads)
 
 
 class PrefillOut(NamedTuple):
@@ -58,13 +78,15 @@ class PrefillOut(NamedTuple):
 def _attn_block_prefill(p, cfg: ModelConfig, bt: str, x, positions, *,
                         use_wgkv: bool, budget: int, max_len: int,
                         block_chunk, q_chunk, enc_out, moe_groups,
-                        gate_override=None):
+                        opts: DecodeOptions = None, gate_override=None):
     window = cfg.sliding_window if bt == "local_attn" else None
     xin = _norm(cfg, p["ln1"], x)
     b, s, _ = x.shape
     dt = jnp.dtype(cfg.dtype)
     adm = jnp.zeros((), jnp.float32)
     if use_wgkv:
+        if gate_override is None and opts is not None:
+            gate_override = _static_gates(cfg, opts, positions)
         w_ring = window if window is not None else cfg.wgkv.w_local
         r = A.attn_prefill_budgeted(
             p["attn"], cfg, xin, positions, budget=budget, window=window,
@@ -146,7 +168,7 @@ def prefill(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array] = None
     pf = functools.partial(
         _block_prefill, cfg=cfg, use_wgkv=use_wgkv, budget=budget,
         max_len=max_len, block_chunk=block_chunk, q_chunk=q_chunk,
-        enc_out=enc_out, moe_groups=moe_groups)
+        enc_out=enc_out, moe_groups=moe_groups, opts=opts)
 
     caches: CacheTree = {"t": jnp.full((b,), s, jnp.int32)}
     adm_sum, adm_n = jnp.zeros(()), 0
@@ -221,7 +243,8 @@ def _attn_block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *,
         if opts.quest_pages is not None:
             sel_fn = lambda cache, q: _quest_mask(cfg, cache, q, opts.quest_pages)
         h, new_cache, g_new = A.attn_decode_wgkv(
-            p["attn"], cfg, xin, self_cache, token_select_fn=sel_fn)
+            p["attn"], cfg, xin, self_cache, token_select_fn=sel_fn,
+            gate_override=_static_gates(cfg, opts, self_cache.t))
         adm = (g_new >= cfg.wgkv.tau).mean(axis=-1)  # per-row [B]
         if opts.evict_hard_budget is not None and obs is not None:
             q_obs = A._heads((xin[:, None] @ p["attn"]["w_q"].astype(xin.dtype)),
@@ -230,7 +253,7 @@ def _attn_block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *,
             new_cache, trg = EV.maybe_evict(
                 new_cache, obs, hard_budget=opts.evict_hard_budget,
                 evict_frac=opts.evict_frac)
-            trig = trg.astype(jnp.float32).mean()
+            trig = trg.astype(jnp.float32).mean(axis=-1)  # per-row [B]
     else:
         h, new_cache = A.attn_decode_dense(p["attn"], cfg, xin, self_cache,
                                            window=window)
@@ -290,7 +313,7 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
         x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dt)
 
     new_caches: CacheTree = {"t": t + 1}
-    trig_sum = jnp.zeros((), jnp.float32)
+    trig_sum = jnp.zeros((b,), jnp.float32)  # per-row eviction triggers
     adm_sum = jnp.zeros((b,), jnp.float32)  # per-row: batch rows may be dead
     adm_n = jnp.zeros((), jnp.float32)
     bd = functools.partial(_block_decode, cfg=cfg, opts=opts,
@@ -348,8 +371,10 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
     hidden = _norm(cfg, params["ln_f"], x[:, None])[:, 0]
     logits = L.unembed(params["embed"], hidden)
     return logits, new_caches, {
-        "evict_triggers": trig_sum,
-        # per-row [B] so callers can average over live slots only
+        "evict_triggers": trig_sum.mean(),
+        # per-row [B] so serving backends can re-sync the paged mirror for
+        # (and average admission over) live slots only
+        "evict_trigger_rows": trig_sum,
         "mean_admission": adm_sum / jnp.maximum(adm_n, 1.0)}
 
 

@@ -1,0 +1,128 @@
+"""EngineBackend: the backend-agnostic serving protocol.
+
+The orchestrator (serving/orchestrator/) schedules *any* accelerator
+backend that exposes the JetStream-style prefill/insert/generate
+decomposition; the concrete cache policy — write-gated dual cache, dense
+full KV, static StreamingLLM/DuoAttention admission — is a backend
+implementation detail. The paper's headline numbers (memory reduction,
+decode speedup) are comparative, so serving the baselines under the SAME
+scheduler/queue/telemetry stack is what makes an apples-to-apples A/B
+possible (``benchmarks/bench_serving.py --backends wgkv,dense``).
+
+Protocol surface (one request = one batch-1 prefill + one decode slot):
+
+  * ``start_prefill(prompt) -> PrefillTask`` — open a chunked prefill.
+  * ``prefill_step(task, max_tokens) -> bool`` — advance by one chunk;
+    True once the full prompt is resident in the task's caches.
+  * ``finish_prefill(task, emit_first=True) -> Prefix`` — seal the task;
+    with ``emit_first`` the first generated token is sampled here
+    (JetStream semantics: TTFT ends at prefill).
+  * ``insert(prefix, slot)`` — splice the batch-1 caches into decode row
+    ``slot`` of the batched state.
+  * ``generate() -> {slot: token}`` — one batched decode step over all
+    live slots.
+  * ``free_slot(slot)`` — retire a slot and release its physical memory.
+  * ``capabilities() -> BackendCapabilities`` — static descriptor
+    (gated? physically paged?) the orchestrator/telemetry key off.
+  * ``memory_snapshot() -> dict`` — point-in-time memory telemetry
+    (resident KV tokens/bytes, paged-pool pages/utilization when paged).
+
+Concrete implementations:
+  serving/engine.py           Engine                (wgkv — paper system)
+  serving/dense.py            DenseEngine           (full-KV baseline)
+  serving/static_admission.py StaticAdmissionEngine (StreamingLLM / Duo)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Dict, List, Optional, Protocol, Tuple,
+                    runtime_checkable)
+
+import jax
+
+
+@dataclasses.dataclass
+class Prefix:
+    """Result of a (possibly chunked) batch-1 prefill, ready to `insert`."""
+    caches: Any                        # batch-1 cache tree
+    prompt_len: int
+    mean_admission: float              # token-weighted write-gate admission
+    first_token: Optional[int] = None  # emitted iff finish_prefill(emit_first)
+    first_logits: Optional[jax.Array] = None  # [V] logits behind first_token
+
+
+@dataclasses.dataclass
+class PrefillTask:
+    """Incremental chunked-prefill state (one request, batch 1)."""
+    prompt: List[int]
+    pos: int = 0                       # prompt tokens already in the cache
+    caches: Any = None
+    adm_weighted: float = 0.0          # sum(admission * tokens) so far
+
+    @property
+    def done(self) -> bool:
+        return self.caches is not None and self.pos >= len(self.prompt)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """Static backend descriptor consumed by orchestrator/telemetry/bench."""
+    name: str            # registry name ("wgkv", "dense", "streaming_llm", ...)
+    gated: bool          # admission < 1.0 expected (learned or static gates)
+    paged: bool          # mirrors into a physical paged pool (verify_paged)
+    description: str = ""
+
+
+@runtime_checkable
+class EngineBackend(Protocol):
+    """What the orchestrator requires of a serving backend."""
+
+    slots: int
+    eos: Optional[int]
+    live: List[bool]
+    stats: Dict[str, float]
+
+    def capabilities(self) -> BackendCapabilities: ...
+
+    def start_prefill(self, prompt: List[int]) -> PrefillTask: ...
+
+    def prefill_step(self, task: PrefillTask,
+                     max_tokens: Optional[int] = None) -> bool: ...
+
+    def finish_prefill(self, task: PrefillTask, *,
+                       emit_first: bool = True) -> Prefix: ...
+
+    def insert(self, prefix: Prefix, slot: int) -> None: ...
+
+    def generate(self) -> Dict[int, int]: ...
+
+    def free_slot(self, slot: int) -> None: ...
+
+    def memory_snapshot(self) -> Dict[str, float]: ...
+
+
+# ==========================================================================
+# registry: name -> backend factory (lazy imports; no concrete backend is
+# imported until requested, so orchestrator code stays protocol-only)
+# ==========================================================================
+BACKEND_NAMES: Tuple[str, ...] = ("wgkv", "dense", "streaming_llm", "duo")
+
+
+def make_backend(name: str, params, cfg, **kw) -> EngineBackend:
+    """Construct a registered backend by name.
+
+    Common keyword args (all backends): ``slots``, ``capacity``, ``opts``,
+    ``eos``, ``temperature``, ``seed``. WG-KV family: ``pool_pages``,
+    ``mirror_paged``. Static admission: ``sink``, ``retrieval_heads`` /
+    ``retrieval_ratio`` (duo).
+    """
+    if name == "wgkv":
+        from repro.serving.engine import Engine
+        return Engine(params, cfg, **kw)
+    if name == "dense":
+        from repro.serving.dense import DenseEngine
+        return DenseEngine(params, cfg, **kw)
+    if name in ("streaming_llm", "duo"):
+        from repro.serving.static_admission import StaticAdmissionEngine
+        return StaticAdmissionEngine(params, cfg, policy=name, **kw)
+    raise ValueError(f"unknown backend {name!r}; known: {BACKEND_NAMES}")

@@ -1,0 +1,158 @@
+"""DenseEngine: the full-KV (no admission) baseline serving backend.
+
+Implements the same :class:`repro.serving.backend.EngineBackend` protocol
+as the WG-KV Engine, but serves the uncompressed dense cache through the
+non-gated decode path (models/inference.py dense branch). Every prompt and
+generated token is written — admission is identically 1.0 — so replaying
+one arrival trace through this backend and the WG-KV backend yields the
+paper's comparative numbers (memory reduction, decode speedup) as a
+serving-level A/B instead of a microbenchmark.
+
+Shares the batched slot machinery (insert/generate/free via
+launch/specs.py splice helpers) with the Engine base class; only the
+prefill path and the memory accounting differ:
+
+  * prefill: dense causal attention has no window-alignment constraint, so
+    the first chunk runs ``I.prefill(use_wgkv=False)`` at any length and
+    later chunks extend through the same teacher-forced scan (decode_step
+    dispatches on the cache type).
+  * memory: no paged-pool mirror — the dense baseline's resident KV is
+    exactly ``t`` tokens per (layer, kv-head) stream, reported logically
+    via ``memory_snapshot`` for the A/B memory comparison.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import inference as I
+from repro.models.attention import DenseCache
+from repro.serving.backend import BackendCapabilities, PrefillTask
+from repro.serving.engine import Engine
+
+
+class DenseEngine(Engine):
+    """Full-KV baseline backend (admission == 1.0, linear cache growth)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 capacity: int = 4096, opts: Optional[I.DecodeOptions] = None,
+                 eos: Optional[int] = None, temperature: float = 0.0,
+                 seed: int = 0, **_paged_kw):
+        # dense caches are contiguous [B, H, capacity, hd] buffers; the
+        # paged mirror (and pool_pages/mirror_paged kwargs) do not apply
+        super().__init__(params, cfg, slots=slots, capacity=capacity,
+                         opts=opts, eos=eos, temperature=temperature,
+                         seed=seed, mirror_paged=False)
+        # host-tracked per-slot sequence length: dense_cache_append past
+        # ``capacity`` silently drops the write (JAX OOB scatter), so the
+        # engine must fail loudly instead of serving a corrupted cache
+        self._slot_len = [0] * slots
+
+    # ------------------------------------------------------------------
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name="dense", gated=False, paged=False,
+            description="uncompressed full-KV cache (no admission)")
+
+    def memory_snapshot(self) -> Dict[str, float]:
+        toks = 0
+        live = [s for s in range(self.slots) if self.live[s]]
+        if self.caches is not None and live:
+            for dc in self._iter_dense(self.caches):
+                t = np.asarray(dc.t)                  # [B]
+                toks += int(t[live].sum()) * dc.k.shape[1]
+        return {
+            "kv_tokens": float(toks),
+            "kv_bytes": float(toks * 2 * self.cfg.head_dim *
+                              jnp.dtype(self.cfg.dtype).itemsize),
+        }
+
+    def _iter_dense(self, caches) -> List[DenseCache]:
+        """Batched DenseCache leaves, one per (repeat, block) layer."""
+        out = []
+        blocks = caches["blocks"]
+        for i, bt in enumerate(self.cfg.block_pattern):
+            node = blocks[f"b{i}"]
+            if isinstance(node, dict) and "self" in node:
+                node = node["self"]
+            if isinstance(node, DenseCache):
+                if node.k.ndim == 5:  # stacked [n_repeats, B, ...]
+                    for r in range(node.k.shape[0]):
+                        out.append(jax.tree.map(lambda x, r=r: x[r], node))
+                else:
+                    out.append(node)
+        return out
+
+    # ------------------------------------------------------------------
+    # chunked prefill (dense: no window alignment; first chunk any size)
+    # ------------------------------------------------------------------
+    def start_prefill(self, prompt: List[int]) -> PrefillTask:
+        # +1: finish_prefill re-feeds prompt[-1] (first-token convention)
+        assert len(prompt) + 1 < self.capacity, \
+            f"prompt {len(prompt)} needs dense capacity > {len(prompt) + 1}"
+        return PrefillTask(prompt=list(prompt))
+
+    def prefill_step(self, task: PrefillTask,
+                     max_tokens: Optional[int] = None) -> bool:
+        if max_tokens is not None and max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
+        n = len(task.prompt)
+        if task.caches is None:
+            cap = n if max_tokens is None else min(n, max_tokens)
+            toks = jnp.asarray(task.prompt[:cap], jnp.int32)[None]
+            _, task.caches = I.prefill(
+                self.params, self.cfg, toks, use_wgkv=False,
+                max_len=self.capacity, opts=self.opts)
+            task.pos = cap
+            task.adm_weighted += 1.0 * cap     # dense admits every token
+            return task.done
+        remaining = n - task.pos
+        if remaining <= 0:
+            return True
+        take = remaining if max_tokens is None else min(remaining, max_tokens)
+        if max_tokens is not None and take == max_tokens:
+            # full chunk: one jitted scan call (stable shape -> one compile)
+            toks = jnp.asarray(task.prompt[task.pos:task.pos + take],
+                               jnp.int32)[None]
+            _, task.caches, _ = self._extend(self.params, tokens=toks,
+                                             caches=task.caches)
+        else:
+            # ragged tail: fixed-shape batch-1 decode per token
+            for tok in task.prompt[task.pos:task.pos + take]:
+                _, task.caches, _ = self._decode(
+                    self.params, token=jnp.asarray([tok], jnp.int32),
+                    caches=task.caches)
+        task.adm_weighted += 1.0 * take
+        task.pos += take
+        return task.done
+
+    # ------------------------------------------------------------------
+    # capacity guard: a dense slot grows by one token per decode step
+    # ------------------------------------------------------------------
+    def insert(self, prefix, slot: int) -> None:
+        super().insert(prefix, slot)
+        self._slot_len[slot] = int(np.asarray(prefix.caches["t"])[0])
+
+    def generate(self) -> Dict[int, int]:
+        for s in range(self.slots):
+            if self.live[s] and self._slot_len[s] >= self.capacity:
+                raise RuntimeError(
+                    f"dense cache overflow: slot {s} at t={self._slot_len[s]} "
+                    f"== capacity {self.capacity}; raise capacity or lower "
+                    "max_new")
+        out = super().generate()
+        for s in out:
+            self._slot_len[s] += 1
+        return out
+
+    def free_slot(self, slot: int) -> None:
+        super().free_slot(slot)
+        self._slot_len[slot] = 0
+
+    # ------------------------------------------------------------------
+    def _decode_admission(self, st: Any, live_rows: List[int]) -> float:
+        return 1.0  # the dense baseline writes everything

@@ -5,8 +5,11 @@ ring-slot overwrites — exactly as §4.1/§4.3 of the paper describe, plus
 Quest/SnapKV composition flags.
 
 The model math runs through the jitted decode path (models/inference.py);
-the engine exposes the prefill/insert/generate decomposition an outer
-continuous-batching orchestrator (serving/orchestrator/) schedules:
+the engine implements the :class:`repro.serving.backend.EngineBackend`
+protocol — the prefill/insert/generate decomposition an outer
+continuous-batching orchestrator (serving/orchestrator/) schedules
+backend-agnostically (dense full-KV and static-admission siblings live in
+serving/dense.py and serving/static_admission.py):
 
   * ``start_prefill`` / ``prefill_step`` / ``finish_prefill`` — chunked
     batch-1 prefill: the first chunk runs the budgeted vertical-slash
@@ -41,6 +44,8 @@ from repro.launch.specs import (alloc_batched_caches, build_decode_caches,
                                 splice_caches)
 from repro.models import inference as I
 from repro.serving import paged
+from repro.serving.backend import (BackendCapabilities, Prefix,  # noqa: F401
+                                   PrefillTask)
 from repro.serving.sampling import sample
 
 
@@ -53,31 +58,11 @@ class Request:
     done: bool = False
 
 
-@dataclasses.dataclass
-class Prefix:
-    """Result of a (possibly chunked) batch-1 prefill, ready to `insert`."""
-    caches: Any                        # batch-1 cache tree
-    prompt_len: int
-    mean_admission: float              # token-weighted write-gate admission
-    first_token: Optional[int] = None  # emitted iff finish_prefill(emit_first)
-    first_logits: Optional[jax.Array] = None  # [V] logits behind first_token
-
-
-@dataclasses.dataclass
-class PrefillTask:
-    """Incremental chunked-prefill state (one request, batch 1)."""
-    prompt: List[int]
-    pos: int = 0                       # prompt tokens already in the cache
-    caches: Any = None
-    adm_weighted: float = 0.0          # sum(admission * tokens) so far
-
-    @property
-    def done(self) -> bool:
-        return self.caches is not None and self.pos >= len(self.prompt)
-
-
 class Engine:
-    """Batched serving backend (slots = max concurrent decodes)."""
+    """Batched serving backend (slots = max concurrent decodes).
+
+    Implements the :class:`repro.serving.backend.EngineBackend` protocol
+    for the paper's write-gated dual cache."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  capacity: int = 4096, opts: Optional[I.DecodeOptions] = None,
@@ -106,6 +91,34 @@ class Engine:
         self._extend = jax.jit(functools.partial(
             I.prefill_extend, cfg=cfg, opts=self.opts))
         self.stats = {"steps": 0, "evict_triggers": 0.0, "decode_adm_sum": 0.0}
+
+    # ------------------------------------------------------------------
+    # EngineBackend protocol: descriptor + memory telemetry
+    # ------------------------------------------------------------------
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name="wgkv", gated=True, paged=self.mirror,
+            description="write-gated dual cache (learned admission)")
+
+    def memory_snapshot(self) -> Dict[str, float]:
+        """Point-in-time memory telemetry: resident logical KV tokens/bytes
+        over live slots, plus physical pool occupancy when mirroring."""
+        snap: Dict[str, float] = {}
+        if self.mirror:
+            snap["pool_pages"] = float(self.pool.pages_in_use)
+            snap["pool_util"] = float(self.pool.utilization())
+        toks = 0
+        live = [s for s in range(self.slots) if self.live[s]]
+        if self.caches is not None and live:
+            for _, dc in self._iter_dual(self.caches):
+                gcnt = np.asarray(dc.gcnt)                     # [B, H]
+                local = np.minimum(np.asarray(dc.t), dc.w_local)  # [B]
+                toks += int(gcnt[live].sum())
+                toks += int(local[live].sum()) * gcnt.shape[1]
+        snap["kv_tokens"] = float(toks)
+        snap["kv_bytes"] = float(
+            toks * 2 * self.cfg.head_dim * jnp.dtype(self.cfg.dtype).itemsize)
+        return snap
 
     # ------------------------------------------------------------------
     # JetStream-style backend API: chunked prefill
@@ -237,11 +250,12 @@ class Engine:
         self.stats["evict_triggers"] += float(st["evict_triggers"])
         # admission over live rows only: dead slots decode token 0 against
         # stale caches and would pollute the serving metric
-        adm_rows = np.asarray(st["mean_admission"])
         live_rows = [s for s in range(self.slots) if self.live[s]]
-        self.stats["decode_adm_sum"] += float(adm_rows[live_rows].mean())
+        self.stats["decode_adm_sum"] += self._decode_admission(st, live_rows)
         if self.mirror:
-            self._mirror_decode(before, self.caches)
+            self._mirror_decode(
+                before, self.caches,
+                evicted_rows=np.asarray(st["evict_trigger_rows"]) > 0)
         self.key, sk = jax.random.split(self.key)
         nxt = sample(sk, logits, temperature=self.temperature)
         out: Dict[int, int] = {}
@@ -251,6 +265,11 @@ class Engine:
                 self.last_token[s] = tok
                 out[s] = tok
         return out
+
+    def _decode_admission(self, st, live_rows: List[int]) -> float:
+        """Mean write-gate admission over live rows for one decode step."""
+        adm_rows = np.asarray(st["mean_admission"])
+        return float(adm_rows[live_rows].mean())
 
     def free_slot(self, slot: int) -> None:
         """Retire a slot: stop decoding it and reclaim its pool pages."""
@@ -265,8 +284,14 @@ class Engine:
     # paged-pool mirroring
     # ------------------------------------------------------------------
     def _mirror_prefill(self, slot: int, caches) -> None:
-        """Copy the logical dual caches into the physical paged pool."""
+        """Copy the logical dual caches into the physical paged pool.
+
+        Ring pages are allocated lazily: before the ring wraps only slots
+        ``0..t-1`` hold tokens (slot = pos % W), so a short prompt mirrors
+        ``min(t, W)`` tokens instead of the full ring — `_mirror_decode`
+        grows the stream page-by-page until the wrap."""
         for lkey, dc in self._iter_dual(caches):
+            n_local = min(int(dc.t[0]), dc.w_local)
             for h in range(self.cfg.n_kv_heads):
                 gkey = (slot, lkey, h, "global")
                 self.pool.free_stream(gkey)
@@ -277,8 +302,8 @@ class Engine:
                 lkey_ = (slot, lkey, h, "local")
                 self.pool.free_stream(lkey_)
                 self.pool.bulk_append(
-                    lkey_, np.asarray(dc.lk[0, h], np.float32),
-                    np.asarray(dc.lv[0, h], np.float32))
+                    lkey_, np.asarray(dc.lk[0, h, :n_local], np.float32),
+                    np.asarray(dc.lv[0, h, :n_local], np.float32))
 
     def _iter_dual(self, caches) -> List[Tuple[Tuple, DualCache]]:
         """Yield (layer-key, DualCache[batch=...]) pairs from a cache tree."""
@@ -296,27 +321,48 @@ class Engine:
                         out.append(((0, i), node))
         return out
 
-    def _mirror_decode(self, before, after) -> None:
-        """Apply one decode step's logical cache delta to the pool."""
+    def _mirror_decode(self, before, after, *,
+                       evicted_rows: Optional[np.ndarray] = None) -> None:
+        """Apply one decode step's logical cache delta to the pool.
+
+        ``evicted_rows`` ([slots] bool) marks rows whose jitted decode
+        reported a SnapKV eviction trigger: eviction compacts and reorders
+        the logical global cache, so that row's shrunken/unchanged streams
+        are re-synced NOW — freed physical pages return to the allocator
+        at eviction time instead of lingering until the slot's next
+        insert. A stream that *grew* (ca > cb) cannot have evicted this
+        step, so the cheap append path still applies to it."""
         for (lkey, dcb), (_, dca) in zip(self._iter_dual(before),
                                          self._iter_dual(after)):
             for slot in range(self.slots):
                 if not self.live[slot]:
                     continue
+                evicted = evicted_rows is not None and bool(evicted_rows[slot])
                 for h in range(self.cfg.n_kv_heads):
-                    # promotion: gcnt increased -> append promoted token page
                     cb, ca = int(dcb.gcnt[slot, h]), int(dca.gcnt[slot, h])
-                    if ca > cb:
+                    gkey = (slot, lkey, h, "global")
+                    if evicted and ca <= cb:
+                        # post-eviction re-sync (reclaims freed pages)
+                        self.pool.free_stream(gkey)
+                        self.pool.bulk_append(
+                            gkey, np.asarray(dca.gk[slot, h, :ca], np.float32),
+                            np.asarray(dca.gv[slot, h, :ca], np.float32))
+                    elif ca > cb:
+                        # promotion: gcnt increased -> append promoted token
                         self.pool.append(
-                            (slot, lkey, h, "global"),
+                            gkey,
                             np.asarray(dca.gk[slot, h, ca - 1], np.float32),
                             np.asarray(dca.gv[slot, h, ca - 1], np.float32))
-                    # ring write: slot ptr_before overwritten
+                    # ring write at ptr_before: grows the stream until the
+                    # ring wraps (lazy page allocation), overwrites after
                     p = int(dcb.ptr[slot])
-                    self.pool.overwrite(
-                        (slot, lkey, h, "local"), p,
-                        np.asarray(dca.lk[slot, h, p], np.float32),
-                        np.asarray(dca.lv[slot, h, p], np.float32))
+                    lkey_ = (slot, lkey, h, "local")
+                    kvec = np.asarray(dca.lk[slot, h, p], np.float32)
+                    vvec = np.asarray(dca.lv[slot, h, p], np.float32)
+                    if p == self.pool.table(lkey_).length:
+                        self.pool.append(lkey_, kvec, vvec)
+                    else:
+                        self.pool.overwrite(lkey_, p, kvec, vvec)
 
     # ------------------------------------------------------------------
     # legacy fixed-slot loop (thin layer over prefill/insert/generate)
@@ -382,6 +428,7 @@ class Engine:
         dc: DualCache = jax.tree.map(lambda x: x[layer_repeat], node)
         worst = 0.0
         for slot in live:
+            n_local = min(int(dc.t[slot]), dc.w_local)
             for h in range(self.cfg.n_kv_heads):
                 gk, gv = self.pool.gather((slot, (layer_repeat, block), h, "global"))
                 cnt = int(dc.gcnt[slot, h])
@@ -389,8 +436,13 @@ class Engine:
                 if cnt:
                     worst = max(worst, float(np.abs(gk[:cnt] - logical).max()))
                 lk, _ = self.pool.gather((slot, (layer_repeat, block), h, "local"))
-                worst = max(worst, float(
-                    np.abs(lk - np.asarray(dc.lk[slot, h], np.float32)).max()))
+                # ring pages are allocated lazily: the stream holds exactly
+                # the min(t, W) slots written so far
+                assert lk.shape[0] == n_local, (lk.shape, n_local)
+                if n_local:
+                    worst = max(worst, float(np.abs(
+                        lk - np.asarray(dc.lk[slot, h, :n_local],
+                                        np.float32)).max()))
         # kernel-level check: paged attention over global streams
         keys = [(s, (layer_repeat, block), h, "global")
                 for s in live for h in range(self.cfg.n_kv_heads)]

@@ -5,12 +5,18 @@ Layering:
   scheduler.py — Scheduler policy + Orchestrator loop interleaving
                  chunked prefill with batched decode
   stream.py    — per-request token streaming with TTFT/TPOT timestamps
-  telemetry.py — throughput / latency percentiles / pool utilization /
+  telemetry.py — throughput / latency percentiles / memory snapshots /
                  admission-rate aggregation
 
-The Orchestrator drives a serving Engine (serving/engine.py) through its
-prefill / insert / generate backend API.
+The Orchestrator drives any backend implementing the
+:class:`repro.serving.backend.EngineBackend` protocol through its
+prefill / insert / generate API — the concrete WG-KV Engine, the dense
+full-KV baseline, or a static-admission baseline
+(``repro.serving.backend.make_backend``). No concrete engine is imported
+here: orchestrator code is protocol-only by construction.
 """
+from repro.serving.backend import (BackendCapabilities, EngineBackend,
+                                   make_backend)
 from repro.serving.orchestrator.queue import (QueueFull, RequestQueue,
                                               ServeRequest)
 from repro.serving.orchestrator.scheduler import (Orchestrator, Scheduler,
@@ -18,6 +24,7 @@ from repro.serving.orchestrator.scheduler import (Orchestrator, Scheduler,
 from repro.serving.orchestrator.stream import StreamMux, TokenStream
 from repro.serving.orchestrator.telemetry import Telemetry
 
-__all__ = ["QueueFull", "RequestQueue", "ServeRequest", "Orchestrator",
+__all__ = ["BackendCapabilities", "EngineBackend", "make_backend",
+           "QueueFull", "RequestQueue", "ServeRequest", "Orchestrator",
            "Scheduler", "SchedulerConfig", "StreamMux", "TokenStream",
            "Telemetry"]

@@ -1,4 +1,10 @@
-"""Scheduler + Orchestrator: continuous batching over the Engine backend.
+"""Scheduler + Orchestrator: continuous batching over any EngineBackend.
+
+The orchestrator depends only on the :class:`EngineBackend` protocol
+(serving/backend.py) — never on a concrete engine — so the same scheduler,
+queue, streams, and telemetry serve the WG-KV dual cache, the dense
+full-KV baseline, and the static-admission baselines interchangeably
+(pick one with ``repro.serving.backend.make_backend``).
 
 Each tick interleaves three kinds of work:
 
@@ -23,7 +29,7 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.serving.engine import Engine, PrefillTask
+from repro.serving.backend import EngineBackend, PrefillTask
 from repro.serving.orchestrator.queue import (QueueFull, RequestQueue,
                                               ServeRequest)
 from repro.serving.orchestrator.stream import OnToken, StreamMux
@@ -35,12 +41,20 @@ class SchedulerConfig:
     chunk_tokens: int = 64        # prefill tokens per task per tick
     prefill_concurrency: int = 1  # prefill tasks advanced per tick
     decode_while_prefill: bool = True  # decode between prefill chunks
+    # ticks between backend memory_snapshot() samples. Snapshots sync a few
+    # small device counters per layer to host; the default samples every
+    # tick so kv/pool peaks are exact (the A/B memory axis). Raise it to
+    # lighten the tick loop on deep models — at the cost of possibly
+    # missing a short-lived peak between samples.
+    memory_sample_every: int = 1
 
     def __post_init__(self):
         if self.chunk_tokens < 1:
             raise ValueError(f"chunk_tokens must be >= 1, got {self.chunk_tokens}")
         if self.prefill_concurrency < 1:
             raise ValueError("prefill_concurrency must be >= 1")
+        if self.memory_sample_every < 1:
+            raise ValueError("memory_sample_every must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,9 +80,9 @@ class Scheduler:
 
 
 class Orchestrator:
-    """Continuous-batching serving loop over a JetStream-style Engine."""
+    """Continuous-batching serving loop over any EngineBackend."""
 
-    def __init__(self, engine: Engine, *,
+    def __init__(self, engine: EngineBackend, *,
                  sched: SchedulerConfig = SchedulerConfig(),
                  max_pending: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic):
@@ -154,12 +168,13 @@ class Orchestrator:
                 if req is not None and req.state == "decode":
                     self._deliver(req, tok)
 
-        if self.engine.mirror:
-            self.telemetry.sample_pool(self.engine.pool)
+        if (self.telemetry.counters["ticks"] - 1) % \
+                self.scheduler.cfg.memory_sample_every == 0:
+            self.telemetry.sample_memory(self.engine.memory_snapshot())
         self.telemetry.counters["rejected"] = float(self.queue.rejected)
         for k in ("evict_triggers", "decode_adm_sum"):
             self.telemetry.counters[k] = \
-                self.engine.stats[k] - self._stats0[k]
+                self.engine.stats.get(k, 0.0) - self._stats0.get(k, 0.0)
         return worked
 
     def _deliver(self, req: ServeRequest, token: int) -> None:

@@ -50,6 +50,8 @@ class Telemetry:
         self.records: List[RequestRecord] = []
         self.pool_util_samples: List[float] = []
         self.pool_page_samples: List[int] = []
+        self.kv_token_samples: List[float] = []
+        self.kv_byte_samples: List[float] = []
 
     # ---- lifecycle -------------------------------------------------------
     def start(self) -> None:
@@ -62,9 +64,18 @@ class Telemetry:
     def bump(self, name: str, by: float = 1) -> None:
         self.counters[name] = self.counters.get(name, 0) + by
 
-    def sample_pool(self, pool) -> None:
-        self.pool_util_samples.append(float(pool.utilization()))
-        self.pool_page_samples.append(int(pool.pages_in_use))
+    def sample_memory(self, snapshot: Dict[str, float]) -> None:
+        """Record one backend ``memory_snapshot()``: paged-pool occupancy
+        (when the backend is physically paged) and resident KV tokens/bytes
+        (every backend) — the serving-level memory axis of the A/B."""
+        if "pool_util" in snapshot:
+            self.pool_util_samples.append(float(snapshot["pool_util"]))
+        if "pool_pages" in snapshot:
+            self.pool_page_samples.append(int(snapshot["pool_pages"]))
+        if "kv_tokens" in snapshot:
+            self.kv_token_samples.append(float(snapshot["kv_tokens"]))
+        if "kv_bytes" in snapshot:
+            self.kv_byte_samples.append(float(snapshot["kv_bytes"]))
 
     def record_request(self, *, rid: int, prompt_len: int, n_out: int,
                        ttft: Optional[float], tpot: Optional[float],
@@ -110,6 +121,11 @@ class Telemetry:
                                if self.pool_util_samples else None),
             "pool_pages_peak": (max(self.pool_page_samples)
                                 if self.pool_page_samples else None),
+            "kv_tokens_peak": (max(self.kv_token_samples)
+                               if self.kv_token_samples else None),
+            "kv_tokens_mean": _mean(self.kv_token_samples),
+            "kv_bytes_peak": (max(self.kv_byte_samples)
+                              if self.kv_byte_samples else None),
             "counters": dict(self.counters),
         }
 
@@ -142,6 +158,9 @@ class Telemetry:
             f"paged pool: util_mean={f(s['pool_util_mean'], nd=3)} "
             f"util_last={f(s['pool_util_last'], nd=3)} "
             f"pages_peak={s['pool_pages_peak']}",
+            f"resident KV: tokens_peak={f(s['kv_tokens_peak'], nd=0)} "
+            f"tokens_mean={f(s['kv_tokens_mean'], nd=0)} "
+            f"bytes_peak={f(s['kv_bytes_peak'], nd=0)}",
         ]
         return "\n".join(lines)
 

@@ -1,0 +1,69 @@
+"""StaticAdmissionEngine: StreamingLLM / DuoAttention baselines as serving
+backends.
+
+The paper's §5.2 baselines are *input-independent* admission policies
+re-expressed in the write-gate interface (core/baselines.py): g depends
+only on a token's absolute position (and, for DuoAttention, its head).
+Plugging those gates into the identical dual-cache machinery — same ring,
+same lazy promotion, same paged mirror — turns each baseline into a
+full serving backend behind the :class:`EngineBackend` protocol, so the
+A/B harness can replay one arrival trace through WG-KV, dense full-KV,
+and the static baselines under the same scheduler.
+
+Policies:
+  * ``streaming_llm`` — admit only the first ``sink`` tokens; everything
+    else lives (transiently) in the sliding local window.
+  * ``duo`` — per-head static split: ``retrieval_heads`` admit every
+    token, the remaining (streaming) heads admit sinks only. Heads can be
+    given explicitly, derived as the first ``retrieval_ratio`` fraction,
+    or profiled from a learned gate via
+    :func:`repro.core.baselines.identify_retrieval_heads`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.models import inference as I
+from repro.serving.backend import BackendCapabilities
+from repro.serving.engine import Engine
+
+POLICIES = ("streaming_llm", "duo")
+
+
+class StaticAdmissionEngine(Engine):
+    """Dual-cache engine whose write gate is a static position/head policy."""
+
+    def __init__(self, params, cfg: ModelConfig, *,
+                 policy: str = "streaming_llm",
+                 sink: Optional[int] = None,
+                 retrieval_heads: Optional[Sequence[int]] = None,
+                 retrieval_ratio: float = 0.25,
+                 opts: Optional[I.DecodeOptions] = None, **kw):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        sink = cfg.wgkv.sink if sink is None else int(sink)
+        if policy == "duo":
+            if retrieval_heads is None:
+                k = max(1, round(retrieval_ratio * cfg.n_kv_heads))
+                retrieval_heads = range(k)
+            retrieval_heads = tuple(int(h) for h in retrieval_heads)
+        else:
+            retrieval_heads = ()
+        opts = dataclasses.replace(
+            opts or I.DecodeOptions(), admission_policy=policy,
+            admission_sink=sink, duo_retrieval_heads=retrieval_heads)
+        # align the config's sink floor with the policy's: select_global /
+        # prefill_populate force-admit cfg.wgkv.sink positions regardless of
+        # the gate, so a mismatched floor would make one-shot and chunked
+        # prefill admit different token sets
+        cfg = cfg.replace(wgkv=dataclasses.replace(cfg.wgkv, sink=sink))
+        super().__init__(params, cfg, opts=opts, **kw)
+        self.policy = policy
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name=self.policy, gated=True, paged=self.mirror,
+            description="static admission baseline "
+                        "(position/head-only write gate)")

@@ -9,6 +9,9 @@ jax.config.update("jax_enable_x64", False)
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running tests (subprocess dry-runs etc.)")
+    config.addinivalue_line(
+        "markers", "backends: EngineBackend protocol, backend parity, and "
+                   "serving A/B tests (pytest -m backends)")
 
 
 @pytest.fixture
