@@ -9,7 +9,17 @@ serving scenario: identical traffic, identical scheduler, only the cache
 policy behind the ``EngineBackend`` protocol changes.
 
     PYTHONPATH=src python -m benchmarks.bench_serving \
-        --backends wgkv,dense [--smoke]
+        --backends wgkv,dense [--smoke] [--arrival poisson:0.5] [--mesh 2x4]
+
+Arrival processes: the default ``burst`` trace scatters arrivals over the
+first ``n`` scheduler ticks; ``poisson:<rate>`` draws i.i.d. exponential
+inter-arrival gaps (``rate`` = mean arrivals per tick), the open-loop
+traffic model the roadmap's latency-SLO tracking needs — p50/p99 TTFT per
+backend land in BENCH_serving.json either way.
+
+With ``--mesh dxm`` every backend runs its jitted decode/extend SPMD over
+a ("data", "model") device mesh (serving/sharded.py); on a dev box use
+the debug recipe ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
 Emits CSV rows for benchmarks.run and writes ``BENCH_serving.json``
 (``{"trace": ..., "backends": {name: metrics}, "ab": ratios-vs-dense}``)
@@ -27,6 +37,7 @@ import jax
 from benchmarks.common import trained_model
 from repro.serving.backend import BACKEND_NAMES, make_backend
 from repro.serving.orchestrator import Orchestrator, SchedulerConfig
+from repro.serving.sharded import build_mesh
 
 N_REQUESTS = 12
 PROMPT_LEN = 96
@@ -39,19 +50,48 @@ SMOKE = dict(n_requests=4, prompt_len=48, max_new=4)
 JSON_PATH = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
 
 
+def poisson_rate(arrival: str) -> Optional[float]:
+    """Validate an arrival spec; returns the rate for ``poisson:<rate>``
+    (mean arrivals per scheduler tick), None for ``burst``."""
+    if arrival == "burst":
+        return None
+    if arrival.startswith("poisson:"):
+        try:
+            rate = float(arrival.split(":", 1)[1])
+        except ValueError:
+            raise ValueError(f"bad poisson rate in {arrival!r}") from None
+        if rate <= 0:
+            raise ValueError(f"poisson rate must be > 0, got {rate}")
+        return rate
+    raise ValueError(
+        f"arrival must be 'burst' or 'poisson:<rate>', got {arrival!r}")
+
+
 def record_trace(n: int, vocab: int, *, prompt_len: int, max_new: int,
-                 seed: int = 1) -> List[Dict]:
+                 seed: int = 1, arrival: str = "burst") -> List[Dict]:
     """Deterministic arrival trace: each request carries a prompt and an
     arrival tick (scheduler rounds since t0). Every backend replays the
     SAME trace, so latency/throughput deltas are attributable to the cache
-    policy alone."""
+    policy alone.
+
+    ``arrival="burst"`` scatters all arrivals uniformly over the first
+    ``n`` ticks (closed burst); ``arrival="poisson:<rate>"`` draws
+    exponential inter-arrival gaps with mean ``1/rate`` ticks — an
+    open-loop Poisson process, the traffic model TTFT tail percentiles
+    are meaningful under."""
+    rate = poisson_rate(arrival)
     key = jax.random.PRNGKey(seed)
     out = []
+    t = 0.0
     for i in range(n):
         key, kp, ka = jax.random.split(key, 3)
         prompt = jax.random.randint(kp, (prompt_len,), 0, vocab - 8).tolist()
-        arrival = int(jax.random.randint(ka, (), 0, max(1, n)))
-        out.append({"arrival_tick": arrival, "prompt": prompt,
+        if rate is None:
+            tick = int(jax.random.randint(ka, (), 0, max(1, n)))
+        else:
+            t += float(jax.random.exponential(ka)) / rate
+            tick = int(t)
+        out.append({"arrival_tick": tick, "prompt": prompt,
                     "max_new": max_new})
     out.sort(key=lambda r: r["arrival_tick"])
     return out
@@ -93,16 +133,20 @@ def _backend_record(s: Dict) -> Dict:
         "pool_pages_peak": s["pool_pages_peak"],
         "kv_tokens_peak": s["kv_tokens_peak"],
         "kv_bytes_peak": s["kv_bytes_peak"],
+        "kv_bytes_per_shard_peak": s["kv_bytes_per_shard_peak"],
         "decode_steps": s["counters"]["decode_steps"],
         "prefill_chunks": s["counters"]["prefill_chunks"],
     }
 
 
-def run(backends: Optional[Sequence[str]] = None, smoke: bool = False):
+def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
+        arrival: str = "burst", mesh: Optional[str] = None):
     names = tuple(backends) if backends else ("wgkv", "dense")
     for n in names:
         if n not in BACKEND_NAMES:
             raise ValueError(f"unknown backend {n!r}; known: {BACKEND_NAMES}")
+    poisson_rate(arrival)       # validate both before any model work:
+    dev_mesh = build_mesh(mesh)  # missing devices must fail fast, not after
     n_req, plen, mnew = ((SMOKE["n_requests"], SMOKE["prompt_len"],
                           SMOKE["max_new"]) if smoke
                          else (N_REQUESTS, PROMPT_LEN, MAX_NEW))
@@ -111,18 +155,20 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False):
     # A/B axis degenerates to 1.0
     cfg, params = trained_model()
     trace = record_trace(n_req, cfg.vocab_size, prompt_len=plen,
-                         max_new=mnew, seed=1)
+                         max_new=mnew, seed=1, arrival=arrival)
     warmup = record_trace(SLOTS, cfg.vocab_size, prompt_len=plen,
                           max_new=2, seed=99)
     record: Dict = {
         "trace": {"requests": n_req, "prompt_len": plen, "max_new": mnew,
+                  "arrival": arrival, "mesh": mesh,
                   "arrival_ticks": [r["arrival_tick"] for r in trace],
                   "smoke": smoke},
         "backends": {},
     }
     rows = []
     for name in names:
-        eng = make_backend(name, params, cfg, slots=SLOTS, capacity=CAPACITY)
+        eng = make_backend(name, params, cfg, slots=SLOTS, capacity=CAPACITY,
+                           mesh=dev_mesh)
         paged = eng.capabilities().paged
         # the timed replay runs with the host-side paged mirror OFF so the
         # throughput/latency A/B isolates the cache policy; mirroring cost
@@ -187,8 +233,16 @@ def main() -> None:
                     help="comma-separated subset of " + ",".join(BACKEND_NAMES))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace (CI/headless A/B path check)")
+    ap.add_argument("--arrival", default="burst",
+                    help="arrival process: burst | poisson:<rate> "
+                         "(mean arrivals per scheduler tick)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="data x model mesh for SPMD decode, e.g. 2x4 "
+                         "(debug: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
-    for r in run(backends=args.backends.split(","), smoke=args.smoke):
+    for r in run(backends=args.backends.split(","), smoke=args.smoke,
+                 arrival=args.arrival, mesh=args.mesh):
         print(",".join(str(x) for x in r))
 
 

@@ -7,6 +7,8 @@ and admission-aware telemetry (plus optional Quest / SnapKV composition).
         --arch qwen3-0.6b --reduced --requests 8 --max-new 16 --quest-pages 4
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-0.6b --reduced --backend dense --requests 4
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch qwen3-0.6b --reduced --mesh 2x4
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ from repro.models import inference as I
 from repro.models import transformer as T
 from repro.serving.backend import BACKEND_NAMES, make_backend
 from repro.serving.orchestrator import Orchestrator, SchedulerConfig
+from repro.serving.sharded import build_mesh
 
 
 def main() -> None:
@@ -36,6 +39,10 @@ def main() -> None:
                     help="prefill chunk per scheduler tick (w_local-aligned)")
     ap.add_argument("--max-pending", type=int, default=None,
                     help="queue backpressure bound (default unbounded)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="run decode/extend SPMD over a data x model mesh, "
+                         "e.g. 2x4 (debug recipe: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--quest-pages", type=int, default=None)
     ap.add_argument("--evict-budget", type=int, default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -58,9 +65,13 @@ def main() -> None:
     params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
     opts = I.DecodeOptions(quest_pages=args.quest_pages,
                            evict_hard_budget=args.evict_budget)
+    mesh = build_mesh(args.mesh)
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} over {mesh.size} devices")
     eng = make_backend(args.backend, params, cfg, slots=args.slots,
                        capacity=args.capacity, opts=opts,
-                       temperature=args.temperature, seed=args.seed)
+                       temperature=args.temperature, seed=args.seed,
+                       mesh=mesh)
     print(f"backend: {eng.capabilities()}")
     orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=args.chunk_tokens),
                         max_pending=args.max_pending)

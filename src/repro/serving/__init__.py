@@ -1,2 +1,2 @@
 from repro.serving import backend, engine, orchestrator, paged  # noqa: F401
-from repro.serving import sampling  # noqa: F401
+from repro.serving import sampling, sharded  # noqa: F401

@@ -71,6 +71,9 @@ class BackendCapabilities:
     gated: bool          # admission < 1.0 expected (learned or static gates)
     paged: bool          # mirrors into a physical paged pool (verify_paged)
     description: str = ""
+    # decode/extend run SPMD over a data x model device mesh (slots batch
+    # over "data", KV heads over "model"; serving/sharded.py)
+    sharded: bool = False
 
 
 @runtime_checkable
@@ -112,7 +115,10 @@ def make_backend(name: str, params, cfg, **kw) -> EngineBackend:
     """Construct a registered backend by name.
 
     Common keyword args (all backends): ``slots``, ``capacity``, ``opts``,
-    ``eos``, ``temperature``, ``seed``. WG-KV family: ``pool_pages``,
+    ``eos``, ``temperature``, ``seed``, and ``mesh`` (a
+    ``jax.sharding.Mesh`` with ("data", "model") axes — decode/extend run
+    SPMD over it; see serving/sharded.py and
+    ``repro.serving.sharded.build_mesh``). WG-KV family: ``pool_pages``,
     ``mirror_paged``. Static admission: ``sink``, ``retrieval_heads`` /
     ``retrieval_ratio`` (duo).
     """

@@ -41,12 +41,12 @@ class DenseEngine(Engine):
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  capacity: int = 4096, opts: Optional[I.DecodeOptions] = None,
                  eos: Optional[int] = None, temperature: float = 0.0,
-                 seed: int = 0, **_paged_kw):
+                 seed: int = 0, mesh=None, **_paged_kw):
         # dense caches are contiguous [B, H, capacity, hd] buffers; the
         # paged mirror (and pool_pages/mirror_paged kwargs) do not apply
         super().__init__(params, cfg, slots=slots, capacity=capacity,
                          opts=opts, eos=eos, temperature=temperature,
-                         seed=seed, mirror_paged=False)
+                         seed=seed, mirror_paged=False, mesh=mesh)
         # host-tracked per-slot sequence length: dense_cache_append past
         # ``capacity`` silently drops the write (JAX OOB scatter), so the
         # engine must fail loudly instead of serving a corrupted cache
@@ -56,20 +56,24 @@ class DenseEngine(Engine):
     def capabilities(self) -> BackendCapabilities:
         return BackendCapabilities(
             name="dense", gated=False, paged=False,
-            description="uncompressed full-KV cache (no admission)")
+            description="uncompressed full-KV cache (no admission)",
+            sharded=self.mesh is not None)
 
     def memory_snapshot(self) -> Dict[str, float]:
         toks = 0
+        leaf = None
         live = [s for s in range(self.slots) if self.live[s]]
         if self.caches is not None and live:
             for dc in self._iter_dense(self.caches):
                 t = np.asarray(dc.t)                  # [B]
                 toks += int(t[live].sum()) * dc.k.shape[1]
-        return {
+                if leaf is None:
+                    leaf = dc.k
+        return self._per_shard_snapshot({
             "kv_tokens": float(toks),
             "kv_bytes": float(toks * 2 * self.cfg.head_dim *
                               jnp.dtype(self.cfg.dtype).itemsize),
-        }
+        }, leaf)
 
     def _iter_dense(self, caches) -> List[DenseCache]:
         """Batched DenseCache leaves, one per (repeat, block) layer."""
@@ -118,14 +122,12 @@ class DenseEngine(Engine):
             # full chunk: one jitted scan call (stable shape -> one compile)
             toks = jnp.asarray(task.prompt[task.pos:task.pos + take],
                                jnp.int32)[None]
-            _, task.caches, _ = self._extend(self.params, tokens=toks,
-                                             caches=task.caches)
+            _, task.caches, _ = self._extend(self.params, toks, task.caches)
         else:
             # ragged tail: fixed-shape batch-1 decode per token
             for tok in task.prompt[task.pos:task.pos + take]:
                 _, task.caches, _ = self._decode(
-                    self.params, token=jnp.asarray([tok], jnp.int32),
-                    caches=task.caches)
+                    self.params, jnp.asarray([tok], jnp.int32), task.caches)
         task.adm_weighted += 1.0 * take
         task.pos += take
         return task.done

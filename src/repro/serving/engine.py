@@ -31,22 +31,23 @@ correctness check that theoretical paging actually serves the right bytes.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import Mesh
+
 from repro.configs.base import ModelConfig
 from repro.core.dual_cache import DualCache
-from repro.launch.specs import (alloc_batched_caches, build_decode_caches,
-                                splice_caches)
+from repro.launch.specs import alloc_batched_caches, build_decode_caches
 from repro.models import inference as I
 from repro.serving import paged
 from repro.serving.backend import (BackendCapabilities, Prefix,  # noqa: F401
                                    PrefillTask)
 from repro.serving.sampling import sample
+from repro.serving.sharded import ShardedDecodeMixin
 
 
 @dataclasses.dataclass
@@ -58,19 +59,23 @@ class Request:
     done: bool = False
 
 
-class Engine:
+class Engine(ShardedDecodeMixin):
     """Batched serving backend (slots = max concurrent decodes).
 
     Implements the :class:`repro.serving.backend.EngineBackend` protocol
-    for the paper's write-gated dual cache."""
+    for the paper's write-gated dual cache. With ``mesh`` set (a
+    ("data", "model") :class:`jax.sharding.Mesh`), params are placed
+    model-parallel, the batched slot state shards rows over "data" and KV
+    heads over "model", and every jitted decode/extend runs as one SPMD
+    step over the mesh (serving/sharded.py)."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  capacity: int = 4096, opts: Optional[I.DecodeOptions] = None,
                  pool_pages: int = 4096, eos: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0,
-                 mirror_paged: bool = True):
+                 mirror_paged: bool = True, mesh: Optional[Mesh] = None):
         assert cfg.has_attention_cache, "engine serves KV-cache archs"
-        self.params, self.cfg = params, cfg
+        self.cfg = cfg
         self.slots = slots
         self.capacity = capacity
         self.opts = opts or I.DecodeOptions()
@@ -86,10 +91,9 @@ class Engine:
         self.mirror = mirror_paged
         if mirror_paged:
             self.pool = paged.PagedKVPool(pool_pages, cfg.head_dim)
-        self._decode = jax.jit(functools.partial(
-            I.decode_step, cfg=cfg, opts=self.opts))
-        self._extend = jax.jit(functools.partial(
-            I.prefill_extend, cfg=cfg, opts=self.opts))
+        self.params = self._sharding_setup(params, mesh)
+        self._decode = self._make_decode()
+        self._extend = self._make_extend()
         self.stats = {"steps": 0, "evict_triggers": 0.0, "decode_adm_sum": 0.0}
 
     # ------------------------------------------------------------------
@@ -98,16 +102,19 @@ class Engine:
     def capabilities(self) -> BackendCapabilities:
         return BackendCapabilities(
             name="wgkv", gated=True, paged=self.mirror,
-            description="write-gated dual cache (learned admission)")
+            description="write-gated dual cache (learned admission)",
+            sharded=self.mesh is not None)
 
     def memory_snapshot(self) -> Dict[str, float]:
         """Point-in-time memory telemetry: resident logical KV tokens/bytes
-        over live slots, plus physical pool occupancy when mirroring."""
+        over live slots, plus physical pool occupancy when mirroring and
+        per-shard KV bytes when meshed."""
         snap: Dict[str, float] = {}
         if self.mirror:
             snap["pool_pages"] = float(self.pool.pages_in_use)
             snap["pool_util"] = float(self.pool.utilization())
         toks = 0
+        leaf = None
         live = [s for s in range(self.slots) if self.live[s]]
         if self.caches is not None and live:
             for _, dc in self._iter_dual(self.caches):
@@ -115,10 +122,12 @@ class Engine:
                 local = np.minimum(np.asarray(dc.t), dc.w_local)  # [B]
                 toks += int(gcnt[live].sum())
                 toks += int(local[live].sum()) * gcnt.shape[1]
+                if leaf is None:
+                    leaf = dc.gk
         snap["kv_tokens"] = float(toks)
         snap["kv_bytes"] = float(
             toks * 2 * self.cfg.head_dim * jnp.dtype(self.cfg.dtype).itemsize)
-        return snap
+        return self._per_shard_snapshot(snap, leaf)
 
     # ------------------------------------------------------------------
     # JetStream-style backend API: chunked prefill
@@ -170,8 +179,7 @@ class Engine:
             # full chunk: one jitted scan call (stable shape -> one compile)
             toks = jnp.asarray(task.prompt[task.pos:task.pos + take],
                                jnp.int32)[None]
-            _, task.caches, st = self._extend(self.params, tokens=toks,
-                                              caches=task.caches)
+            _, task.caches, st = self._extend(self.params, toks, task.caches)
             self.stats["evict_triggers"] += float(st["evict_triggers"])
             task.adm_weighted += float(st["mean_admission"]) * take
         else:
@@ -181,8 +189,7 @@ class Engine:
             trigs, adms = [], []
             for tok in task.prompt[task.pos:task.pos + take]:
                 _, task.caches, st = self._decode(
-                    self.params, token=jnp.asarray([tok], jnp.int32),
-                    caches=task.caches)
+                    self.params, jnp.asarray([tok], jnp.int32), task.caches)
                 trigs.append(st["evict_triggers"])
                 adms.append(st["mean_admission"][0])
             self.stats["evict_triggers"] += float(jnp.stack(trigs).sum())
@@ -202,8 +209,8 @@ class Engine:
                         mean_admission=adm)
         if emit_first:
             logits, prefix.caches, st = self._decode(
-                self.params, token=jnp.asarray([task.prompt[-1]], jnp.int32),
-                caches=prefix.caches)
+                self.params, jnp.asarray([task.prompt[-1]], jnp.int32),
+                prefix.caches)
             self.stats["evict_triggers"] += float(st["evict_triggers"])
             self.key, sk = jax.random.split(self.key)
             prefix.first_token = int(
@@ -224,11 +231,13 @@ class Engine:
     # JetStream-style backend API: insert / generate / free
     # ------------------------------------------------------------------
     def insert(self, prefix: Prefix, slot: int) -> None:
-        """Splice a prefix's caches into batch row ``slot`` and mirror it
-        into the physical paged pool."""
+        """Splice a prefix's caches into batch row ``slot`` (device-put
+        onto the mesh when sharded) and mirror it into the physical paged
+        pool."""
         if self.caches is None:
-            self.caches = alloc_batched_caches(prefix.caches, self.slots)
-        self.caches = splice_caches(self.caches, prefix.caches, slot)
+            self.caches = self.place_caches(
+                alloc_batched_caches(prefix.caches, self.slots))
+        self.caches = self.sharded_splice(self.caches, prefix.caches, slot)
         self.live[slot] = True
         self.last_token[slot] = (prefix.first_token
                                  if prefix.first_token is not None else 0)
@@ -240,12 +249,15 @@ class Engine:
         last token, samples the next, returns {slot: token}."""
         if not any(self.live) or self.caches is None:
             return {}
-        toks = [self.last_token[s] if self.live[s] else 0
-                for s in range(self.slots)]
+        # free_slot zeroes a retired row's last token, so a dead row must
+        # never feed its stale final token back into the batched decode
+        assert all(self.last_token[s] == 0 for s in range(self.slots)
+                   if not self.live[s]), \
+            f"dead rows carry stale last tokens: {self.last_token}"
+        toks = list(self.last_token)
         before = self.caches
         logits, self.caches, st = self._decode(
-            self.params, token=jnp.asarray(toks, jnp.int32),
-            caches=self.caches)
+            self.params, jnp.asarray(toks, jnp.int32), self.caches)
         self.stats["steps"] += 1
         self.stats["evict_triggers"] += float(st["evict_triggers"])
         # admission over live rows only: dead slots decode token 0 against
@@ -274,6 +286,9 @@ class Engine:
     def free_slot(self, slot: int) -> None:
         """Retire a slot: stop decoding it and reclaim its pool pages."""
         self.live[slot] = False
+        # a retired row keeps decoding (masked) in the batched step; zero
+        # its token so the dead row never replays its final token
+        self.last_token[slot] = 0
         if self.mirror and self.caches is not None:
             for lkey, _ in self._iter_dual(self.caches):
                 for h in range(self.cfg.n_kv_heads):
@@ -289,21 +304,24 @@ class Engine:
         Ring pages are allocated lazily: before the ring wraps only slots
         ``0..t-1`` hold tokens (slot = pos % W), so a short prompt mirrors
         ``min(t, W)`` tokens instead of the full ring — `_mirror_decode`
-        grows the stream page-by-page until the wrap."""
+        grows the stream page-by-page until the wrap. The batch-1 prefix
+        is pulled to host in one transfer per layer (under a mesh,
+        per-head slicing would issue a cross-shard gather per vector)."""
         for lkey, dc in self._iter_dual(caches):
-            n_local = min(int(dc.t[0]), dc.w_local)
+            hdc = jax.device_get(dc)          # batch-1: one pull per leaf
+            n_local = min(int(hdc.t[0]), dc.w_local)
             for h in range(self.cfg.n_kv_heads):
                 gkey = (slot, lkey, h, "global")
                 self.pool.free_stream(gkey)
-                cnt = int(dc.gcnt[0, h])
+                cnt = int(hdc.gcnt[0, h])
                 self.pool.bulk_append(
-                    gkey, np.asarray(dc.gk[0, h, :cnt], np.float32),
-                    np.asarray(dc.gv[0, h, :cnt], np.float32))
+                    gkey, np.asarray(hdc.gk[0, h, :cnt], np.float32),
+                    np.asarray(hdc.gv[0, h, :cnt], np.float32))
                 lkey_ = (slot, lkey, h, "local")
                 self.pool.free_stream(lkey_)
                 self.pool.bulk_append(
-                    lkey_, np.asarray(dc.lk[0, h, :n_local], np.float32),
-                    np.asarray(dc.lv[0, h, :n_local], np.float32))
+                    lkey_, np.asarray(hdc.lk[0, h, :n_local], np.float32),
+                    np.asarray(hdc.lv[0, h, :n_local], np.float32))
 
     def _iter_dual(self, caches) -> List[Tuple[Tuple, DualCache]]:
         """Yield (layer-key, DualCache[batch=...]) pairs from a cache tree."""
@@ -331,34 +349,65 @@ class Engine:
         are re-synced NOW — freed physical pages return to the allocator
         at eviction time instead of lingering until the slot's next
         insert. A stream that *grew* (ca > cb) cannot have evicted this
-        step, so the cheap append path still applies to it."""
+        step, so the cheap append path still applies to it.
+
+        Device -> host traffic is bounded per layer regardless of
+        slots/heads: only LIVE slot rows are gathered, and only the
+        vectors the step can have written (the ring slot at each row's
+        pre-step pointer, the newest global entry per head, and — only on
+        an eviction trigger — that row's compacted global streams). Under
+        a mesh the batched tree is spread over devices, so per-vector
+        slicing would otherwise issue a cross-shard transfer each."""
+        rows = [s for s in range(self.slots) if self.live[s]]
+        if not rows:
+            return
+        ridx = jnp.asarray(rows, jnp.int32)
+        ev_rows = [s for s in rows
+                   if evicted_rows is not None and bool(evicted_rows[s])]
         for (lkey, dcb), (_, dca) in zip(self._iter_dual(before),
                                          self._iter_dual(after)):
-            for slot in range(self.slots):
-                if not self.live[slot]:
-                    continue
-                evicted = evicted_rows is not None and bool(evicted_rows[slot])
+            gcb, ptrb, gca = jax.device_get((
+                jnp.take(dcb.gcnt, ridx, 0), jnp.take(dcb.ptr, ridx, 0),
+                jnp.take(dca.gcnt, ridx, 0)))
+            # one fused gather each for the ring vector every live row
+            # wrote this step and the newest global entry per (row, head):
+            # [R, Hkv, hd] straight from the batched buffers, no
+            # full-capacity [R, Hkv, C, hd] intermediate copies
+            r2 = ridx[:, None]
+            h2 = jnp.arange(dca.lk.shape[1])[None, :]
+            p2 = jnp.asarray(ptrb, jnp.int32)[:, None]
+            g2 = jnp.maximum(jnp.asarray(gca, jnp.int32) - 1, 0)
+            ring_k, ring_v, prom_k, prom_v = jax.device_get((
+                dca.lk[r2, h2, p2], dca.lv[r2, h2, p2],
+                dca.gk[r2, h2, g2], dca.gv[r2, h2, g2]))
+            full = None
+            if ev_rows:
+                eidx = jnp.asarray(ev_rows, jnp.int32)
+                full = jax.device_get((jnp.take(dca.gk, eidx, 0),
+                                       jnp.take(dca.gv, eidx, 0)))
+            ev_pos = {s: i for i, s in enumerate(ev_rows)}
+            for j, slot in enumerate(rows):
+                k = ev_pos.get(slot)
                 for h in range(self.cfg.n_kv_heads):
-                    cb, ca = int(dcb.gcnt[slot, h]), int(dca.gcnt[slot, h])
+                    cb, ca = int(gcb[j, h]), int(gca[j, h])
                     gkey = (slot, lkey, h, "global")
-                    if evicted and ca <= cb:
+                    if k is not None and ca <= cb:
                         # post-eviction re-sync (reclaims freed pages)
                         self.pool.free_stream(gkey)
                         self.pool.bulk_append(
-                            gkey, np.asarray(dca.gk[slot, h, :ca], np.float32),
-                            np.asarray(dca.gv[slot, h, :ca], np.float32))
+                            gkey, np.asarray(full[0][k, h, :ca], np.float32),
+                            np.asarray(full[1][k, h, :ca], np.float32))
                     elif ca > cb:
                         # promotion: gcnt increased -> append promoted token
                         self.pool.append(
-                            gkey,
-                            np.asarray(dca.gk[slot, h, ca - 1], np.float32),
-                            np.asarray(dca.gv[slot, h, ca - 1], np.float32))
+                            gkey, np.asarray(prom_k[j, h], np.float32),
+                            np.asarray(prom_v[j, h], np.float32))
                     # ring write at ptr_before: grows the stream until the
                     # ring wraps (lazy page allocation), overwrites after
-                    p = int(dcb.ptr[slot])
+                    p = int(ptrb[j])
                     lkey_ = (slot, lkey, h, "local")
-                    kvec = np.asarray(dca.lk[slot, h, p], np.float32)
-                    vvec = np.asarray(dca.lv[slot, h, p], np.float32)
+                    kvec = np.asarray(ring_k[j, h], np.float32)
+                    vvec = np.asarray(ring_v[j, h], np.float32)
                     if p == self.pool.table(lkey_).length:
                         self.pool.append(lkey_, kvec, vvec)
                     else:

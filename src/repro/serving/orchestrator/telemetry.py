@@ -52,6 +52,7 @@ class Telemetry:
         self.pool_page_samples: List[int] = []
         self.kv_token_samples: List[float] = []
         self.kv_byte_samples: List[float] = []
+        self.kv_byte_shard_samples: List[float] = []  # per-device, meshed
 
     # ---- lifecycle -------------------------------------------------------
     def start(self) -> None:
@@ -76,6 +77,10 @@ class Telemetry:
             self.kv_token_samples.append(float(snapshot["kv_tokens"]))
         if "kv_bytes" in snapshot:
             self.kv_byte_samples.append(float(snapshot["kv_bytes"]))
+        if "kv_bytes_per_shard" in snapshot:
+            # sharded backends: even-occupancy per-device share of kv_bytes
+            self.kv_byte_shard_samples.append(
+                float(snapshot["kv_bytes_per_shard"]))
 
     def record_request(self, *, rid: int, prompt_len: int, n_out: int,
                        ttft: Optional[float], tpot: Optional[float],
@@ -126,6 +131,9 @@ class Telemetry:
             "kv_tokens_mean": _mean(self.kv_token_samples),
             "kv_bytes_peak": (max(self.kv_byte_samples)
                               if self.kv_byte_samples else None),
+            "kv_bytes_per_shard_peak": (max(self.kv_byte_shard_samples)
+                                        if self.kv_byte_shard_samples
+                                        else None),
             "counters": dict(self.counters),
         }
 
@@ -160,7 +168,8 @@ class Telemetry:
             f"pages_peak={s['pool_pages_peak']}",
             f"resident KV: tokens_peak={f(s['kv_tokens_peak'], nd=0)} "
             f"tokens_mean={f(s['kv_tokens_mean'], nd=0)} "
-            f"bytes_peak={f(s['kv_bytes_peak'], nd=0)}",
+            f"bytes_peak={f(s['kv_bytes_peak'], nd=0)} "
+            f"bytes_per_shard_peak={f(s['kv_bytes_per_shard_peak'], nd=0)}",
         ]
         return "\n".join(lines)
 

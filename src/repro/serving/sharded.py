@@ -1,0 +1,245 @@
+"""Mesh-sharded serving execution: one SPMD decode step over all slots.
+
+The serving backends (engine.py / dense.py / static_admission.py) jit the
+same two model entry points — ``decode_step`` over the batched slot state
+and ``prefill_extend`` over a batch-1 chunk. This module is the single
+place where a ``jax.sharding.Mesh`` enters that path, so every backend
+(and therefore the whole A/B harness) scales across a data x model device
+mesh without the orchestrator or scheduler changing at all:
+
+  * **params** are placed once with ``param_shardings(...,
+    replicate_fsdp=True)`` — weights replicated across "data" (decode is
+    weights-stationary; no per-step FSDP all-gathers) and tensor-parallel
+    over "model" where head/FFN dims divide.
+  * **cache trees** are placed with ``cache_shardings``: decode slots
+    batch over "data", KV heads over "model" (with the repo's
+    divisibility fallback to replication — phi3's 10 KV heads on a
+    model=4 mesh replicate rather than pad).
+  * ``decode_step`` / ``prefill_extend`` are jitted with **explicit
+    in/out shardings** (memoized per input structure, since the batched
+    and batch-1 trees differ), so the cache layout is pinned across
+    steps instead of drifting with whatever GSPMD infers.
+  * ``insert`` splices a batch-1 prefix into the batched tree under jit
+    with the prefix device-put row-wise and the output pinned back to
+    the canonical batched shardings.
+
+Unmeshed (``mesh=None``) every helper degrades to the exact pre-sharding
+behavior: plain ``jax.jit`` and host-side splices.
+
+Debug recipe (no accelerator needed)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen3-0.6b --reduced --mesh 2x4 --requests 4
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.specs import splice_caches
+from repro.models import inference as I
+from repro.sharding import rules
+
+
+# ==========================================================================
+# mesh construction from a CLI "dxm" spec
+# ==========================================================================
+def parse_mesh_shape(spec: str) -> Tuple[int, int]:
+    """``"2x4"`` -> ``(2, 4)`` (data ways, model ways)."""
+    try:
+        d, m = spec.lower().split("x")
+        shape = (int(d), int(m))
+    except ValueError:
+        raise ValueError(f"mesh spec must look like '2x4' (data x model), "
+                         f"got {spec!r}") from None
+    if shape[0] < 1 or shape[1] < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    return shape
+
+
+def build_mesh(spec: Optional[str]) -> Optional[Mesh]:
+    """Build a ("data", "model") mesh from a "dxm" spec (None -> None).
+
+    Works on real accelerators and on host platform devices alike; for a
+    headless debug mesh export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<d*m>`` before any
+    jax import.
+    """
+    if not spec:
+        return None
+    shape = parse_mesh_shape(spec)
+    need, have = shape[0] * shape[1], len(jax.devices())
+    if have < need:
+        raise RuntimeError(
+            f"mesh {spec} needs {need} devices, found {have}; for a debug "
+            "mesh on host devices set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before jax "
+            "imports")
+    return jax.make_mesh(shape, ("data", "model"))
+
+
+def _struct_key(tree: Any) -> Tuple:
+    """Hashable (treedef, leaf shapes/dtypes) key for jit memoization."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef, tuple((tuple(np.shape(l)), str(jnp.result_type(l)))
+                           for l in leaves))
+
+
+class ShardedDecodeMixin:
+    """Mesh-aware jitted decode/extend + cache placement for backends.
+
+    Expects the host class to provide ``self.cfg`` and ``self.opts``
+    before calling :meth:`_sharding_setup`, and ``self.params`` before
+    the first decode/extend call. With ``mesh=None`` everything reduces
+    to the unsharded single-device path.
+    """
+
+    mesh: Optional[Mesh] = None
+
+    # ------------------------------------------------------------------
+    # setup / placement
+    # ------------------------------------------------------------------
+    def _sharding_setup(self, params, mesh: Optional[Mesh]):
+        """Record the mesh and place params on it; returns the (possibly
+        device-put) params."""
+        self.mesh = mesh
+        self._fn_cache: Dict[Tuple, Any] = {}
+        self._splice_cache: Dict[Tuple, Any] = {}
+        if mesh is None:
+            self._param_sh = None
+            return params
+        self._param_sh = rules.param_shardings(params, mesh, self.cfg,
+                                               replicate_fsdp=True)
+        return jax.device_put(params, self._param_sh)
+
+    def _replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def _row_sharding(self, b: int, ndim: int) -> NamedSharding:
+        """Sharding for a batch-leading array: rows over "data" when the
+        batch divides, else replicated."""
+        bax = rules.pick(b, self.mesh, rules.batch_axes(self.mesh), "data")
+        return NamedSharding(self.mesh, P(bax, *(None,) * (ndim - 1)))
+
+    def cache_shardings_for(self, caches):
+        """NamedSharding tree for a concrete cache tree (slots over
+        "data", KV heads over "model", divisibility fallback)."""
+        return rules.cache_shardings(caches, self.mesh, self.cfg)
+
+    def place_caches(self, caches):
+        """device_put a cache tree onto its canonical mesh shardings
+        (identity when unmeshed)."""
+        if self.mesh is None:
+            return caches
+        return jax.device_put(caches, self.cache_shardings_for(caches))
+
+    # ------------------------------------------------------------------
+    # jitted model steps
+    # ------------------------------------------------------------------
+    def _make_decode(self) -> Callable:
+        """(params, token [B], caches) -> (logits, caches, stats)."""
+
+        def fn(params, token, caches):
+            return I.decode_step(params, self.cfg, token, caches,
+                                 opts=self.opts)
+
+        return jax.jit(fn) if self.mesh is None \
+            else self._mesh_jit(fn, kind="decode")
+
+    def _make_extend(self) -> Callable:
+        """(params, tokens [B, S], caches) -> (logits, caches, stats)."""
+
+        def fn(params, tokens, caches):
+            return I.prefill_extend(params, self.cfg, tokens, caches,
+                                    opts=self.opts)
+
+        return jax.jit(fn) if self.mesh is None \
+            else self._mesh_jit(fn, kind="extend")
+
+    def _mesh_jit(self, fn: Callable, *, kind: str) -> Callable:
+        """Wrap ``fn(params, tokens, caches)`` with explicit in/out
+        shardings, memoized per (tokens, caches) structure — the batched
+        decode and the batch-1 prefill tail share one engine but need
+        different placements."""
+
+        def call(params, tokens, caches):
+            key = (kind,) + _struct_key((tokens, caches))
+            ent = self._fn_cache.get(key)
+            if ent is None:
+                ent = self._build_mesh_jit(fn, tokens, caches)
+                self._fn_cache[key] = ent
+            jfn, tok_sh, csh = ent
+            # eager prefill / splice outputs may carry compiler-chosen
+            # placements; pin them (no-op copy when already canonical)
+            return jfn(params, jax.device_put(tokens, tok_sh),
+                       jax.device_put(caches, csh))
+
+        return call
+
+    def _build_mesh_jit(self, fn, tokens, caches):
+        mesh, cfg = self.mesh, self.cfg
+        csh = self.cache_shardings_for(caches)
+        b = int(np.shape(tokens)[0])
+        tok_sh = self._row_sharding(b, np.ndim(tokens))
+        out_struct = jax.eval_shape(fn, self.params, tokens, caches)
+        logits_s, caches_s, stats_s = out_struct
+
+        def row_or_repl(leaf):
+            if leaf.ndim >= 1 and leaf.shape[0] == b:
+                return self._row_sharding(b, leaf.ndim)
+            return self._replicated()
+
+        out_sh = (row_or_repl(logits_s),
+                  rules.cache_shardings(caches_s, mesh, cfg),
+                  jax.tree.map(row_or_repl, stats_s))
+        jfn = jax.jit(fn, in_shardings=(self._param_sh, tok_sh, csh),
+                      out_shardings=out_sh)
+        return jfn, tok_sh, csh
+
+    # ------------------------------------------------------------------
+    # sharded slot splice (insert)
+    # ------------------------------------------------------------------
+    def sharded_splice(self, batch_tree, one_tree, slot: int):
+        """``splice_caches`` with the batch-1 prefix device-put onto the
+        mesh and the result pinned to the batched tree's canonical
+        shardings (plain splice when unmeshed)."""
+        if self.mesh is None:
+            return splice_caches(batch_tree, one_tree, slot)
+        key = _struct_key((batch_tree, one_tree))
+        ent = self._splice_cache.get(key)
+        if ent is None:
+            bsh = self.cache_shardings_for(batch_tree)
+            osh = self.cache_shardings_for(one_tree)
+            jfn = jax.jit(splice_caches, static_argnums=2,
+                          in_shardings=(bsh, osh), out_shardings=bsh)
+            ent = (jfn, bsh, osh)
+            self._splice_cache[key] = ent
+        jfn, bsh, osh = ent
+        return jfn(jax.device_put(batch_tree, bsh),
+                   jax.device_put(one_tree, osh), slot)
+
+    # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+    def _per_shard_snapshot(self, snap: Dict[str, float],
+                            leaf=None) -> Dict[str, float]:
+        """Annotate a memory snapshot with mesh-level telemetry: the
+        even-occupancy per-device share of the resident KV total
+        (``kv_bytes`` stays global; with live slots concentrated on one
+        data shard, that shard's devices hold proportionally more) and
+        the mesh device count. ``leaf`` is a representative cache array
+        whose sharding gives the per-device fraction."""
+        if self.mesh is None:
+            return snap
+        snap["mesh_devices"] = float(self.mesh.size)
+        frac = 1.0 / self.mesh.size
+        if leaf is not None and hasattr(leaf, "sharding") and leaf.size:
+            shard = int(np.prod(leaf.sharding.shard_shape(leaf.shape)))
+            frac = shard / leaf.size
+        snap["kv_bytes_per_shard"] = snap.get("kv_bytes", 0.0) * frac
+        return snap

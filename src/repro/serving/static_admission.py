@@ -66,4 +66,5 @@ class StaticAdmissionEngine(Engine):
         return BackendCapabilities(
             name=self.policy, gated=True, paged=self.mirror,
             description="static admission baseline "
-                        "(position/head-only write gate)")
+                        "(position/head-only write gate)",
+            sharded=self.mesh is not None)

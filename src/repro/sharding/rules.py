@@ -137,15 +137,24 @@ def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
         return spec(pick(v_or_d, mesh, fa, "data"), pick(d_or_v, mesh, "model"))
     if name in ("w_q", "w_k", "w_v"):
         din, dout = core
-        # column-parallel over heads when divisible, else row-parallel
-        out_ax = pick(dout, mesh, "model")
+        # column-parallel over heads when the HEAD COUNT divides (not just
+        # the flattened H*hd dim): a partial head per device would split
+        # head_dim, putting a cross-device reduction inside every attention
+        # score and leaving [B,H,S,hd] activations in tilings the cache
+        # shardings (and, on CPU SPMD, XLA's resharding of concat operands
+        # — see serving/sharded.py) cannot consume; else row-parallel
+        heads = cfg.n_heads if name == "w_q" else cfg.n_kv_heads
+        out_ax = "model" if (_fits(heads, mesh, "model")
+                             and _fits(dout, mesh, "model")) else None
         in_ax = pick(din, mesh, fa, "data") if out_ax else pick(din, mesh, "model", fa)
         if out_ax and in_ax == out_ax:
             in_ax = None
         return spec(in_ax, out_ax)
     if name == "w_o":
         din, dout = core
-        in_ax = pick(din, mesh, "model")
+        # contraction over heads: same whole-head constraint as w_q
+        in_ax = "model" if (_fits(cfg.n_heads, mesh, "model")
+                            and _fits(din, mesh, "model")) else None
         out_ax = pick(dout, mesh, fa, "data")
         return spec(in_ax, out_ax)
     if name in ("w_gate", "w_up", "w_down", "router") and "moe" in path:
@@ -248,6 +257,18 @@ def _cache_leaf_spec(path: Tuple[str, ...], shape, mesh: Mesh,
     with a leading n_repeats axis. When ``seq_shard`` (long_500k, batch=1)
     the long token axis goes to "data" (context-parallel decode)."""
     fa = batch_axes(mesh)
+    if "obs" in path:
+        # eviction observation windows: [n_repeats, n_attn, B, ...] (q ring)
+        # or [n_repeats, n_attn, B] (counter) — batch over data, query heads
+        # over model when divisible, repeat/attn axes replicated
+        core = tuple(shape[2:])
+        if not core:
+            return P(None, None)
+        b_ax = pick(core[0], mesh, fa, "data")
+        if len(core) >= 2:
+            return P(None, None, b_ax, pick(core[1], mesh, "model"),
+                     *(None,) * (len(core) - 2))
+        return P(None, None, b_ax)
     stacked = "blocks" in path
     lead = (None,) if stacked else ()
     core = tuple(shape[1:]) if stacked else tuple(shape)

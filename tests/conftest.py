@@ -12,6 +12,11 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "backends: EngineBackend protocol, backend parity, and "
                    "serving A/B tests (pytest -m backends)")
+    config.addinivalue_line(
+        "markers", "sharded: mesh-sharded serving tests; in-process variants "
+                   "need >= 8 devices (CI runs the suite under XLA_FLAGS="
+                   "--xla_force_host_platform_device_count=8), subprocess "
+                   "variants set the flag themselves")
 
 
 @pytest.fixture

@@ -154,6 +154,52 @@ def test_ab_admission_gated_only(served):
 
 
 # ==========================================================================
+# slot retirement: free_slot must zero the row's feedback token
+# ==========================================================================
+def test_free_slot_resets_last_token(served):
+    """A retired slot keeps decoding (masked) in the batched step; its
+    ``last_token`` must be zeroed on free so the dead row feeds token 0,
+    not a replay of its final token — and generate() enforces it."""
+    cfg, params = served
+    eng = make_backend("wgkv", params, cfg, slots=2, capacity=128,
+                       mirror_paged=False)
+    eng.insert(eng.prefill(list(range(10, 58))), 0)
+    eng.insert(eng.prefill(list(range(30, 78))), 1)
+    assert eng.generate().keys() == {0, 1}
+    eng.free_slot(0)
+    assert eng.last_token[0] == 0
+    out = eng.generate()            # row 0 dead: only slot 1 emits
+    assert set(out) == {1}
+    # a stale token on a dead row is exactly the bug generate() refuses
+    eng.last_token[0] = 123
+    with pytest.raises(AssertionError, match="stale"):
+        eng.generate()
+
+
+# ==========================================================================
+# bench arrival processes: Poisson trace generation
+# ==========================================================================
+def test_poisson_arrival_trace():
+    from benchmarks.bench_serving import poisson_rate, record_trace
+
+    assert poisson_rate("burst") is None
+    assert poisson_rate("poisson:0.5") == 0.5
+    for bad in ("poisson:-1", "poisson:x", "uniform"):
+        with pytest.raises(ValueError):
+            poisson_rate(bad)
+    tr = record_trace(16, 256, prompt_len=8, max_new=2, seed=3,
+                      arrival="poisson:0.5")
+    ticks = [r["arrival_tick"] for r in tr]
+    assert ticks == sorted(ticks) and ticks[0] >= 0
+    assert len(set(ticks)) > 3          # spread over time, not one burst
+    # deterministic replay given the seed, and mean gap ~ 1/rate ticks
+    tr2 = record_trace(16, 256, prompt_len=8, max_new=2, seed=3,
+                       arrival="poisson:0.5")
+    assert [r["arrival_tick"] for r in tr2] == ticks
+    assert 16 / 0.5 * 0.3 < ticks[-1] < 16 / 0.5 * 3
+
+
+# ==========================================================================
 # static admission baselines (StreamingLLM / DuoAttention)
 # ==========================================================================
 def test_streaming_llm_admits_only_sinks(served):
