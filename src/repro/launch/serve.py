@@ -1,12 +1,16 @@
-"""Serving driver: continuous-batching orchestrator over any registered
+"""Serving driver: the ServeSession client API over any registered
 engine backend — WG-KV dual cache (default), dense full-KV, or a static
-admission baseline — with chunked prefill, per-request token streaming,
-and admission-aware telemetry (plus optional Quest / SnapKV composition).
+admission baseline — with chunked prefill, dispatch-ahead decode
+(two-phase dispatch/collect), per-request token streaming, mid-stream
+cancellation, deadlines, and admission-aware telemetry (plus optional
+Quest / SnapKV composition).
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-0.6b --reduced --requests 8 --max-new 16 --quest-pages 4
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-0.6b --reduced --backend dense --requests 4
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen3-0.6b --reduced --dispatch-ahead 0     # sync baseline
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.serve --arch qwen3-0.6b --reduced --mesh 2x4
 """
@@ -20,7 +24,8 @@ from repro.configs import ARCH_NAMES, get_config, get_reduced_config
 from repro.models import inference as I
 from repro.models import transformer as T
 from repro.serving.backend import BACKEND_NAMES, make_backend
-from repro.serving.orchestrator import Orchestrator, SchedulerConfig
+from repro.serving.orchestrator import (QueueFull, SchedulerConfig,
+                                        ServeSession)
 from repro.serving.sharded import build_mesh
 
 
@@ -37,6 +42,12 @@ def main() -> None:
     ap.add_argument("--capacity", type=int, default=512)
     ap.add_argument("--chunk-tokens", type=int, default=64,
                     help="prefill chunk per scheduler tick (w_local-aligned)")
+    ap.add_argument("--dispatch-ahead", type=int, default=1,
+                    help="decode steps kept in flight on the device "
+                         "(0 = synchronous generate() baseline)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request latency deadline; overdue requests "
+                         "are cancelled mid-stream")
     ap.add_argument("--max-pending", type=int, default=None,
                     help="queue backpressure bound (default unbounded)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
@@ -54,6 +65,8 @@ def main() -> None:
         ap.error("--max-pending must be >= 1")
     if args.chunk_tokens < 1:
         ap.error("--chunk-tokens must be >= 1")
+    if args.dispatch_ahead < 0:
+        ap.error("--dispatch-ahead must be >= 0")
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     cfg = cfg.replace(dtype="float32")
     if not cfg.has_attention_cache:
@@ -73,51 +86,64 @@ def main() -> None:
                        temperature=args.temperature, seed=args.seed,
                        mesh=mesh)
     print(f"backend: {eng.capabilities()}")
-    orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=args.chunk_tokens),
-                        max_pending=args.max_pending)
+    session = ServeSession(
+        eng,
+        sched=SchedulerConfig(chunk_tokens=args.chunk_tokens,
+                              dispatch_ahead=args.dispatch_ahead),
+        max_pending=args.max_pending)
 
     def on_token(rid: int, tok: int, is_last: bool) -> None:
         if not args.quiet_stream:
             print(f"  stream rid={rid} tok={tok}" + (" <eor>" if is_last else ""),
                   flush=True)
 
-    def submit_bp(prompt, **kw) -> int:
-        # backpressure: wait for queue space by serving, rather than
-        # hammering submit (which would count as shed load in telemetry)
-        while (args.max_pending is not None
-               and orch.queue.depth >= args.max_pending):
-            orch.tick()
-        return orch.submit(prompt, **kw)
+    def submit_bp(prompt, **kw):
+        # backpressure: QueueFull is a typed response, so serve until the
+        # queue has room instead of counting hammered retries as shed load
+        while True:
+            try:
+                return session.submit(prompt, **kw)
+            except QueueFull as qf:
+                if not args.quiet_stream:
+                    print(f"  backpressure: depth={qf.depth}/"
+                          f"{qf.max_pending}, serving to drain")
+                session.tick()
 
     key = jax.random.PRNGKey(args.seed + 7)
-    for i in range(args.requests):
+    handles = []
+    for _ in range(args.requests):
         key, k = jax.random.split(key)
         prompt = jax.random.randint(k, (args.prompt_len,), 0,
                                     cfg.vocab_size - 8).tolist()
-        rid = submit_bp(prompt, max_new=args.max_new, on_token=on_token)
-        print(f"submitted rid={rid} prompt_len={len(prompt)}")
-    orch.run()
+        h = submit_bp(prompt, max_new=args.max_new, on_token=on_token,
+                      deadline_s=args.deadline_s)
+        print(f"submitted rid={h.rid} prompt_len={len(prompt)}")
+        handles.append(h)
+    session.run()
 
     print("\nresults:")
-    for rid, req in orch.queue.requests.items():
-        print(f"req {rid}: prompt[:8]={req.prompt[:8]} -> out={req.out}")
+    for h in handles:
+        tag = " (cancelled: deadline)" if h.cancelled else ""
+        print(f"req {h.rid}: state={h.state}{tag} -> out={h.tokens()}")
     print("\ntelemetry:")
-    print(orch.telemetry.report())
+    print(session.report())
     if eng.capabilities().paged:
         # verify_paged needs resident caches, and the pool is already empty
         # after the burst drains — so serve one extra request and check the
         # physical-vs-logical deviation while it is live
-        vr = submit_bp([int(t) for t in
+        vh = submit_bp([int(t) for t in
                         jax.random.randint(key, (args.prompt_len,), 0,
                                            cfg.vocab_size - 8)],
-                       max_new=2, on_token=None)
+                       max_new=2)
         for _ in range(10_000):
-            if orch.queue.requests[vr].state in ("decode", "done"):
+            if vh.state in ("decode", "done", "cancelled"):
                 break
-            orch.tick()
+            session.tick()
+        session.orchestrator.drain()  # settle the mirror before verifying
         dev = eng.verify_paged() if any(eng.live) else 0.0
         print(f"\npaged-vs-logical max deviation (live request): {dev:.2e}")
-        orch.run()
+        session.run()
+    session.close()
 
 
 if __name__ == "__main__":

@@ -15,22 +15,63 @@ Protocol surface (one request = one batch-1 prefill + one decode slot):
   * ``prefill_step(task, max_tokens) -> bool`` — advance by one chunk;
     True once the full prompt is resident in the task's caches.
   * ``finish_prefill(task, emit_first=True) -> Prefix`` — seal the task;
-    with ``emit_first`` the first generated token is sampled here
-    (JetStream semantics: TTFT ends at prefill).
+    with ``emit_first`` the first generated token is sampled from the
+    prefill's own last-position logits (no extra decode step, no
+    duplicate KV write — JetStream semantics: TTFT ends at prefill).
   * ``insert(prefix, slot)`` — splice the batch-1 caches into decode row
     ``slot`` of the batched state.
-  * ``generate() -> {slot: token}`` — one batched decode step over all
-    live slots.
   * ``free_slot(slot)`` — retire a slot and release its physical memory.
   * ``capabilities() -> BackendCapabilities`` — static descriptor
     (gated? physically paged?) the orchestrator/telemetry key off.
   * ``memory_snapshot() -> dict`` — point-in-time memory telemetry
     (resident KV tokens/bytes, paged-pool pages/utilization when paged).
 
+Decode is a TWO-PHASE surface so host work never blocks the device:
+
+  * ``dispatch_decode() -> InflightStep | None`` — enqueue one jitted
+    batched decode step over all live slots WITHOUT synchronizing. The
+    sampled next-token vector stays on device and becomes the feed of
+    the next dispatch, so the driver may dispatch step t+1 before
+    step t's result has ever touched the host (dispatch-ahead depth
+    >= 1). Returns None when no slot is live.
+  * ``collect(step) -> {slot: token}`` — the sync point: pull the
+    sampled tokens to host, fold eviction/admission stats into
+    ``stats``, and apply the step's cache delta to the paged mirror.
+    Host-side mirroring and bookkeeping for step t therefore overlap
+    device compute for step t+1. A slot whose request was freed (or
+    re-inserted) between dispatch and collect is skipped — its token is
+    discarded and its pool streams are left exactly as ``free_slot`` /
+    ``insert`` put them (per-slot generation counters guard the race).
+
+``generate() -> {slot: token}`` remains as a synchronous shim —
+literally ``collect(dispatch_decode())`` — for one deprecation cycle so
+existing single-step callers and parity tests keep working; new drivers
+(ServeSession, the async orchestrator path) use dispatch/collect.
+
+Lifecycle of one request (slots are rows of one batched cache tree)::
+
+    submit ──> start_prefill ──> prefill_step* ──> finish_prefill
+                                                        │ first token
+                                                        v
+                                       insert(prefix, slot)
+                                                        │
+              ┌─────────────────────────────────────────┘
+              v
+        dispatch_decode ──> [device: step t]──────────┐
+              │  (no sync; feed stays on device)      │
+              ├──> dispatch_decode [device: step t+1] │
+              v                                       │
+        collect(step t) <─────────────────────────────┘
+              │  {slot: token} ──> streams / telemetry
+              v
+        free_slot(slot)          (finished / cancelled)
+
 Concrete implementations:
   serving/engine.py           Engine                (wgkv — paper system)
   serving/dense.py            DenseEngine           (full-KV baseline)
   serving/static_admission.py StaticAdmissionEngine (StreamingLLM / Duo)
+The mesh-sharded execution path (serving/sharded.py ShardedDecodeMixin)
+builds the jitted step and on-device sampler every backend dispatches.
 """
 from __future__ import annotations
 
@@ -58,10 +99,32 @@ class PrefillTask:
     pos: int = 0                       # prompt tokens already in the cache
     caches: Any = None
     adm_weighted: float = 0.0          # sum(admission * tokens) so far
+    # [1, V] device logits of the newest prefilled position; once the task
+    # is done these are the first-token logits (finish_prefill samples
+    # them directly instead of re-feeding prompt[-1] through decode_step)
+    last_logits: Any = None
 
     @property
     def done(self) -> bool:
         return self.caches is not None and self.pos >= len(self.prompt)
+
+
+@dataclasses.dataclass
+class InflightStep:
+    """One dispatched-but-uncollected batched decode step.
+
+    Every field except the two snapshots is a DEVICE value — holding the
+    step does not synchronize. ``live``/``gen`` freeze which request
+    owned each slot at dispatch time so ``collect`` can discard tokens
+    for slots that were freed or re-inserted while the step was in
+    flight."""
+    tokens: Any                 # [slots] int32 on device: sampled next tokens
+    stats: Any                  # device stats tree from decode_step
+    before: Any                 # cache tree before the step (mirror delta)
+    after: Any                  # cache tree after the step
+    live: Tuple[bool, ...]      # live mask snapshot at dispatch
+    gen: Tuple[int, ...]        # per-slot generation snapshot at dispatch
+    collected: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +160,11 @@ class EngineBackend(Protocol):
 
     def insert(self, prefix: Prefix, slot: int) -> None: ...
 
+    def dispatch_decode(self) -> Optional[InflightStep]: ...
+
+    def collect(self, step: InflightStep) -> Dict[int, int]: ...
+
+    # deprecated synchronous shim: collect(dispatch_decode())
     def generate(self) -> Dict[int, int]: ...
 
     def free_slot(self, slot: int) -> None: ...

@@ -95,9 +95,10 @@ class DenseEngine(Engine):
     # chunked prefill (dense: no window alignment; first chunk any size)
     # ------------------------------------------------------------------
     def start_prefill(self, prompt: List[int]) -> PrefillTask:
-        # +1: finish_prefill re-feeds prompt[-1] (first-token convention)
-        assert len(prompt) + 1 < self.capacity, \
-            f"prompt {len(prompt)} needs dense capacity > {len(prompt) + 1}"
+        # the first token is sampled from the prefill's own last-position
+        # logits (no re-feed), so the prompt alone must fit the buffer
+        assert len(prompt) < self.capacity, \
+            f"prompt {len(prompt)} needs dense capacity > {len(prompt)}"
         return PrefillTask(prompt=list(prompt))
 
     def prefill_step(self, task: PrefillTask,
@@ -108,9 +109,10 @@ class DenseEngine(Engine):
         if task.caches is None:
             cap = n if max_tokens is None else min(n, max_tokens)
             toks = jnp.asarray(task.prompt[:cap], jnp.int32)[None]
-            _, task.caches = I.prefill(
+            po, task.caches = I.prefill(
                 self.params, self.cfg, toks, use_wgkv=False,
                 max_len=self.capacity, opts=self.opts)
+            task.last_logits = po.logits
             task.pos = cap
             task.adm_weighted += 1.0 * cap     # dense admits every token
             return task.done
@@ -122,12 +124,14 @@ class DenseEngine(Engine):
             # full chunk: one jitted scan call (stable shape -> one compile)
             toks = jnp.asarray(task.prompt[task.pos:task.pos + take],
                                jnp.int32)[None]
-            _, task.caches, _ = self._extend(self.params, toks, task.caches)
+            logits, task.caches, _ = self._extend(self.params, toks,
+                                                  task.caches)
         else:
             # ragged tail: fixed-shape batch-1 decode per token
             for tok in task.prompt[task.pos:task.pos + take]:
-                _, task.caches, _ = self._decode(
+                logits, task.caches, _ = self._decode(
                     self.params, jnp.asarray([tok], jnp.int32), task.caches)
+        task.last_logits = logits
         task.adm_weighted += 1.0 * take
         task.pos += take
         return task.done
@@ -139,17 +143,23 @@ class DenseEngine(Engine):
         super().insert(prefix, slot)
         self._slot_len[slot] = int(np.asarray(prefix.caches["t"])[0])
 
-    def generate(self) -> Dict[int, int]:
+    def dispatch_decode(self):
+        # guard at DISPATCH, not collect: the KV append happens inside the
+        # dispatched step, and past ``capacity`` dense_cache_append would
+        # silently drop the write (JAX OOB scatter) — so refuse to enqueue
+        # a step that would overflow, even with earlier steps in flight
         for s in range(self.slots):
             if self.live[s] and self._slot_len[s] >= self.capacity:
                 raise RuntimeError(
                     f"dense cache overflow: slot {s} at t={self._slot_len[s]} "
                     f"== capacity {self.capacity}; raise capacity or lower "
                     "max_new")
-        out = super().generate()
-        for s in out:
-            self._slot_len[s] += 1
-        return out
+        step = super().dispatch_decode()
+        if step is not None:
+            for s in range(self.slots):
+                if step.live[s]:
+                    self._slot_len[s] += 1
+        return step
 
     def free_slot(self, slot: int) -> None:
         super().free_slot(slot)

@@ -19,7 +19,13 @@ serving/dense.py and serving/static_admission.py):
   * ``insert(prefix, slot)`` — splice the batch-1 cache tree into the
     batched decode state (launch/specs.py helpers) and mirror it into the
     physical paged pool.
-  * ``generate()`` — one jitted batched decode step over all live slots.
+  * ``dispatch_decode()`` / ``collect(step)`` — the two-phase decode
+    surface: dispatch enqueues one jitted batched step over all live
+    slots with the sampled next-token feed staying on device (so a
+    second step can be dispatched behind it), collect is the host sync
+    point that pulls tokens, folds stats, and applies the paged-mirror
+    delta. ``generate()`` is the synchronous ``collect(dispatch())``
+    shim kept for one deprecation cycle.
   * ``free_slot(slot)`` — release the slot and reclaim its pool pages.
 
 The legacy fixed-slot loop (``add_request``/``step``/``run``) is kept as a
@@ -44,8 +50,8 @@ from repro.core.dual_cache import DualCache
 from repro.launch.specs import alloc_batched_caches, build_decode_caches
 from repro.models import inference as I
 from repro.serving import paged
-from repro.serving.backend import (BackendCapabilities, Prefix,  # noqa: F401
-                                   PrefillTask)
+from repro.serving.backend import (BackendCapabilities, InflightStep,  # noqa: F401,E501
+                                   Prefix, PrefillTask)
 from repro.serving.sampling import sample
 from repro.serving.sharded import ShardedDecodeMixin
 
@@ -87,13 +93,21 @@ class Engine(ShardedDecodeMixin):
         self._next_rid = 0
         self.caches = None
         self.live: List[bool] = [False] * slots
+        # host view of each row's newest token (telemetry / invariants);
+        # the authoritative decode feed is the DEVICE vector `_tok_dev`,
+        # which dispatch-ahead keeps one or more steps ahead of this list
         self.last_token: List[int] = [0] * slots
+        # bumped on every insert/free so collect() can tell whether a slot
+        # still belongs to the request a step was dispatched for
+        self._slot_gen: List[int] = [0] * slots
         self.mirror = mirror_paged
         if mirror_paged:
             self.pool = paged.PagedKVPool(pool_pages, cfg.head_dim)
         self.params = self._sharding_setup(params, mesh)
         self._decode = self._make_decode()
         self._extend = self._make_extend()
+        self._sample = self._make_sampler()
+        self._tok_dev = jnp.zeros((slots,), jnp.int32)
         self.stats = {"steps": 0, "evict_triggers": 0.0, "decode_adm_sum": 0.0}
 
     # ------------------------------------------------------------------
@@ -166,6 +180,7 @@ class Engine(ShardedDecodeMixin):
                     max_len=self.capacity, opts=self.opts)
                 task.pos = n0
                 task.adm_weighted += float(po.mean_admission) * n0
+                task.last_logits = po.logits
                 return task.done
             task.caches = build_decode_caches(
                 self.cfg, 1, self.capacity, use_wgkv=True, prefilled=0)
@@ -179,7 +194,8 @@ class Engine(ShardedDecodeMixin):
             # full chunk: one jitted scan call (stable shape -> one compile)
             toks = jnp.asarray(task.prompt[task.pos:task.pos + take],
                                jnp.int32)[None]
-            _, task.caches, st = self._extend(self.params, toks, task.caches)
+            logits, task.caches, st = self._extend(self.params, toks,
+                                                   task.caches)
             self.stats["evict_triggers"] += float(st["evict_triggers"])
             task.adm_weighted += float(st["mean_admission"]) * take
         else:
@@ -188,34 +204,36 @@ class Engine(ShardedDecodeMixin):
             # stats stay on device until the loop ends (no per-token sync)
             trigs, adms = [], []
             for tok in task.prompt[task.pos:task.pos + take]:
-                _, task.caches, st = self._decode(
+                logits, task.caches, st = self._decode(
                     self.params, jnp.asarray([tok], jnp.int32), task.caches)
                 trigs.append(st["evict_triggers"])
                 adms.append(st["mean_admission"][0])
             self.stats["evict_triggers"] += float(jnp.stack(trigs).sum())
             task.adm_weighted += float(jnp.stack(adms).sum())
+        task.last_logits = logits
         task.pos += take
         return task.done
 
     def finish_prefill(self, task: PrefillTask, *,
                        emit_first: bool = True) -> Prefix:
         """Seal a completed prefill task into a Prefix. With
-        ``emit_first`` the first generated token is sampled here (JetStream
-        semantics: prefill returns the first token, so streaming TTFT ends
-        at prefill, not at the next batched decode)."""
+        ``emit_first`` the first generated token is sampled from the
+        prefill's own last-position logits (JetStream semantics: prefill
+        returns the first token, so streaming TTFT ends at prefill, not at
+        the next batched decode). The prefill paths already computed those
+        logits, so no extra decode step runs — the old convention of
+        re-feeding ``prompt[-1]`` wrote a duplicate KV entry at position n
+        and shifted every later position by one."""
         assert task.done, "prefill task not finished"
+        assert task.last_logits is not None, "prefill produced no logits"
         adm = task.adm_weighted / max(task.pos, 1)
         prefix = Prefix(caches=task.caches, prompt_len=len(task.prompt),
                         mean_admission=adm)
         if emit_first:
-            logits, prefix.caches, st = self._decode(
-                self.params, jnp.asarray([task.prompt[-1]], jnp.int32),
-                prefix.caches)
-            self.stats["evict_triggers"] += float(st["evict_triggers"])
             self.key, sk = jax.random.split(self.key)
             prefix.first_token = int(
-                sample(sk, logits, temperature=self.temperature)[0])
-            prefix.first_logits = logits[0]
+                sample(sk, task.last_logits, temperature=self.temperature)[0])
+            prefix.first_logits = task.last_logits[0]
         return prefix
 
     def prefill(self, prompt: List[int], *,
@@ -239,44 +257,92 @@ class Engine(ShardedDecodeMixin):
                 alloc_batched_caches(prefix.caches, self.slots))
         self.caches = self.sharded_splice(self.caches, prefix.caches, slot)
         self.live[slot] = True
-        self.last_token[slot] = (prefix.first_token
-                                 if prefix.first_token is not None else 0)
+        self._slot_gen[slot] += 1
+        tok = prefix.first_token if prefix.first_token is not None else 0
+        self.last_token[slot] = tok
+        self._tok_dev = self._tok_dev.at[slot].set(tok)
         if self.mirror:
             self._mirror_prefill(slot, prefix.caches)
 
-    def generate(self) -> Dict[int, int]:
-        """One batched decode step over all live slots; feeds each slot's
-        last token, samples the next, returns {slot: token}."""
+    # ------------------------------------------------------------------
+    # two-phase decode: dispatch (no sync) / collect (the sync point)
+    # ------------------------------------------------------------------
+    def dispatch_decode(self) -> Optional[InflightStep]:
+        """Enqueue one jitted batched decode step over all live slots and
+        return it WITHOUT synchronizing. The sampled next-token vector
+        stays on device and immediately becomes the feed of the next
+        dispatch, so a driver may run at dispatch-ahead depth >= 1 —
+        host-side mirroring/sampling for step t (in :meth:`collect`)
+        overlaps device compute for step t+1. Returns None when no slot
+        is live."""
         if not any(self.live) or self.caches is None:
-            return {}
-        # free_slot zeroes a retired row's last token, so a dead row must
+            return None
+        # free_slot zeroes a retired row's feed token, so a dead row must
         # never feed its stale final token back into the batched decode
         assert all(self.last_token[s] == 0 for s in range(self.slots)
                    if not self.live[s]), \
             f"dead rows carry stale last tokens: {self.last_token}"
-        toks = list(self.last_token)
         before = self.caches
         logits, self.caches, st = self._decode(
-            self.params, jnp.asarray(toks, jnp.int32), self.caches)
+            self.params, self._tok_dev, before)
+        self.key, sk = jax.random.split(self.key)
+        nxt = self._sample(sk, logits)
+        # dead rows keep feeding token 0 (free_slot's invariant) even
+        # though the batched step sampled garbage for them
+        live_vec = jnp.asarray(self.live)
+        self._tok_dev = jnp.where(live_vec, nxt, jnp.zeros_like(nxt))
+        # the cache snapshots exist solely for collect's paged-mirror
+        # delta; pinning them with the mirror off would hold a whole
+        # extra batched KV tree alive per in-flight step
+        mirror = self.mirror
+        return InflightStep(tokens=nxt, stats=st,
+                            before=before if mirror else None,
+                            after=self.caches if mirror else None,
+                            live=tuple(self.live),
+                            gen=tuple(self._slot_gen))
+
+    def collect(self, step: InflightStep) -> Dict[int, int]:
+        """Synchronize one in-flight step: pull its sampled tokens to
+        host, fold eviction/admission stats, and apply the cache delta to
+        the paged mirror. Returns {slot: token} for every slot still
+        owned by the request the step was dispatched for — a slot freed
+        (or freed + re-inserted) while the step was in flight is skipped,
+        so a cancelled request can never leak its token into a successor
+        and the mirror never resurrects freed pool streams."""
+        assert not step.collected, "in-flight step collected twice"
+        step.collected = True
+        # ONE host sync for everything the step owes the host: sampled
+        # tokens + the stats tree (separate pulls would each block on the
+        # same in-flight computation)
+        nxt, st = jax.device_get((step.tokens, step.stats))
         self.stats["steps"] += 1
         self.stats["evict_triggers"] += float(st["evict_triggers"])
-        # admission over live rows only: dead slots decode token 0 against
-        # stale caches and would pollute the serving metric
-        live_rows = [s for s in range(self.slots) if self.live[s]]
+        # admission over rows live at dispatch: dead slots decode token 0
+        # against stale caches and would pollute the serving metric
+        live_rows = [s for s in range(self.slots) if step.live[s]]
         self.stats["decode_adm_sum"] += self._decode_admission(st, live_rows)
-        if self.mirror:
+        rows = [s for s in live_rows
+                if self.live[s] and self._slot_gen[s] == step.gen[s]]
+        # step.before is None when the step was dispatched with the
+        # mirror off (no snapshots pinned) — e.g. mirror toggled back on
+        # between dispatch and collect; the next insert re-syncs anyway
+        if self.mirror and rows and step.before is not None:
             self._mirror_decode(
-                before, self.caches,
+                step.before, step.after, rows=rows,
                 evicted_rows=np.asarray(st["evict_trigger_rows"]) > 0)
-        self.key, sk = jax.random.split(self.key)
-        nxt = sample(sk, logits, temperature=self.temperature)
         out: Dict[int, int] = {}
-        for s in range(self.slots):
-            if self.live[s]:
-                tok = int(nxt[s])
-                self.last_token[s] = tok
-                out[s] = tok
+        for s in rows:
+            tok = int(nxt[s])
+            self.last_token[s] = tok
+            out[s] = tok
         return out
+
+    def generate(self) -> Dict[int, int]:
+        """Deprecated synchronous shim: one batched decode step, i.e.
+        ``collect(dispatch_decode())``. New drivers use the two-phase
+        surface directly."""
+        step = self.dispatch_decode()
+        return self.collect(step) if step is not None else {}
 
     def _decode_admission(self, st, live_rows: List[int]) -> float:
         """Mean write-gate admission over live rows for one decode step."""
@@ -284,11 +350,16 @@ class Engine(ShardedDecodeMixin):
         return float(adm_rows[live_rows].mean())
 
     def free_slot(self, slot: int) -> None:
-        """Retire a slot: stop decoding it and reclaim its pool pages."""
+        """Retire a slot: stop decoding it and reclaim its pool pages.
+        Safe to call with steps in flight: the generation bump makes
+        :meth:`collect` discard the dead row's token and skip its mirror
+        delta, so the pages freed here stay freed."""
         self.live[slot] = False
+        self._slot_gen[slot] += 1
         # a retired row keeps decoding (masked) in the batched step; zero
         # its token so the dead row never replays its final token
         self.last_token[slot] = 0
+        self._tok_dev = self._tok_dev.at[slot].set(0)
         if self.mirror and self.caches is not None:
             for lkey, _ in self._iter_dual(self.caches):
                 for h in range(self.cfg.n_kv_heads):
@@ -340,8 +411,14 @@ class Engine(ShardedDecodeMixin):
         return out
 
     def _mirror_decode(self, before, after, *,
+                       rows: Optional[List[int]] = None,
                        evicted_rows: Optional[np.ndarray] = None) -> None:
         """Apply one decode step's logical cache delta to the pool.
+
+        ``rows`` limits the mirror to those slot rows (collect passes the
+        rows still owned by the request the step was dispatched for —
+        mirroring a freed or re-inserted row would resurrect freed pool
+        streams or corrupt the successor's); None mirrors all live rows.
 
         ``evicted_rows`` ([slots] bool) marks rows whose jitted decode
         reported a SnapKV eviction trigger: eviction compacts and reorders
@@ -352,13 +429,15 @@ class Engine(ShardedDecodeMixin):
         step, so the cheap append path still applies to it.
 
         Device -> host traffic is bounded per layer regardless of
-        slots/heads: only LIVE slot rows are gathered, and only the
-        vectors the step can have written (the ring slot at each row's
-        pre-step pointer, the newest global entry per head, and — only on
-        an eviction trigger — that row's compacted global streams). Under
-        a mesh the batched tree is spread over devices, so per-vector
-        slicing would otherwise issue a cross-shard transfer each."""
-        rows = [s for s in range(self.slots) if self.live[s]]
+        slots/heads: only the requested slot rows are gathered, and only
+        the vectors the step can have written (the ring slot at each
+        row's pre-step pointer, the newest global entry per head, and —
+        only on an eviction trigger — that row's compacted global
+        streams). Under a mesh the batched tree is spread over devices,
+        so per-vector slicing would otherwise issue a cross-shard
+        transfer each."""
+        if rows is None:
+            rows = [s for s in range(self.slots) if self.live[s]]
         if not rows:
             return
         ridx = jnp.asarray(rows, jnp.int32)
@@ -425,22 +504,34 @@ class Engine(ShardedDecodeMixin):
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_rid) if r is None]
 
+    def _retire_if_done(self, req: Request, slot: int, tok: int) -> None:
+        if len(req.out) >= req.max_new or (self.eos is not None
+                                           and tok == self.eos):
+            req.done = True
+            self.slot_rid[slot] = None
+            self.free_slot(slot)
+
     def step(self) -> Dict[int, int]:
-        """Admit pending requests, run one decode step, return {rid: token}."""
+        """Admit pending requests, run one decode step, return {rid:
+        newest token}. A request admitted THIS step emits both its
+        prefill first token and a decode token; the dict keeps only the
+        newest, ``requests[rid].out`` holds the full record."""
         pending = [r for r in self.requests.values()
                    if not r.done and r.rid not in self.slot_rid]
+        emitted: Dict[int, int] = {}
         for slot in self._free_slots():
             if not pending:
                 break
             req = pending.pop(0)
             self.slot_rid[slot] = req.rid
-            # legacy semantics: the first generated token comes from the
-            # shared batched decode below, so prefill without emitting
-            prefix = self.prefill(req.prompt, emit_first=False)
+            # the first generated token comes straight from the prefill's
+            # last-position logits; insert feeds it to the batched decode
+            prefix = self.prefill(req.prompt, emit_first=True)
             self.insert(prefix, slot)
-            self.last_token[slot] = req.out[-1] if req.out else req.prompt[-1]
+            req.out.append(prefix.first_token)
+            emitted[req.rid] = prefix.first_token
+            self._retire_if_done(req, slot, prefix.first_token)
         emitted_slots = self.generate()
-        emitted: Dict[int, int] = {}
         for slot, tok in emitted_slots.items():
             rid = self.slot_rid[slot]
             if rid is None:
@@ -448,11 +539,7 @@ class Engine(ShardedDecodeMixin):
             req = self.requests[rid]
             req.out.append(tok)
             emitted[rid] = tok
-            if len(req.out) >= req.max_new or (self.eos is not None
-                                               and tok == self.eos):
-                req.done = True
-                self.slot_rid[slot] = None
-                self.free_slot(slot)
+            self._retire_if_done(req, slot, tok)
         return emitted
 
     def run(self, max_steps: int = 256) -> None:

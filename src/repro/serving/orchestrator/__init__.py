@@ -2,29 +2,38 @@
 
 Layering:
   queue.py     — arrival-ordered RequestQueue with backpressure
+                 (typed QueueFull) and boundary validation (InvalidRequest)
   scheduler.py — Scheduler policy + Orchestrator loop interleaving
-                 chunked prefill with batched decode
+                 chunked prefill with batched decode; with
+                 ``SchedulerConfig.dispatch_ahead >= 1`` decode runs
+                 through the two-phase dispatch/collect surface so host
+                 work overlaps the in-flight device step
+  session.py   — ServeSession, the public client API: submit -> handle,
+                 sync/async token iteration, mid-stream cancellation,
+                 per-request deadlines
   stream.py    — per-request token streaming with TTFT/TPOT timestamps
   telemetry.py — throughput / latency percentiles / memory snapshots /
                  admission-rate aggregation
 
 The Orchestrator drives any backend implementing the
 :class:`repro.serving.backend.EngineBackend` protocol through its
-prefill / insert / generate API — the concrete WG-KV Engine, the dense
-full-KV baseline, or a static-admission baseline
+prefill / insert / dispatch_decode / collect API — the concrete WG-KV
+Engine, the dense full-KV baseline, or a static-admission baseline
 (``repro.serving.backend.make_backend``). No concrete engine is imported
 here: orchestrator code is protocol-only by construction.
 """
 from repro.serving.backend import (BackendCapabilities, EngineBackend,
-                                   make_backend)
-from repro.serving.orchestrator.queue import (QueueFull, RequestQueue,
-                                              ServeRequest)
+                                   InflightStep, make_backend)
+from repro.serving.orchestrator.queue import (InvalidRequest, QueueFull,
+                                              RequestQueue, ServeRequest)
 from repro.serving.orchestrator.scheduler import (Orchestrator, Scheduler,
                                                   SchedulerConfig)
+from repro.serving.orchestrator.session import RequestHandle, ServeSession
 from repro.serving.orchestrator.stream import StreamMux, TokenStream
 from repro.serving.orchestrator.telemetry import Telemetry
 
-__all__ = ["BackendCapabilities", "EngineBackend", "make_backend",
-           "QueueFull", "RequestQueue", "ServeRequest", "Orchestrator",
-           "Scheduler", "SchedulerConfig", "StreamMux", "TokenStream",
+__all__ = ["BackendCapabilities", "EngineBackend", "InflightStep",
+           "make_backend", "InvalidRequest", "QueueFull", "RequestQueue",
+           "ServeRequest", "Orchestrator", "Scheduler", "SchedulerConfig",
+           "RequestHandle", "ServeSession", "StreamMux", "TokenStream",
            "Telemetry"]

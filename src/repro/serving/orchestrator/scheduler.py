@@ -6,32 +6,44 @@ queue, streams, and telemetry serve the WG-KV dual cache, the dense
 full-KV baseline, and the static-admission baselines interchangeably
 (pick one with ``repro.serving.backend.make_backend``).
 
-Each tick interleaves three kinds of work:
+Each tick interleaves four kinds of work:
 
   1. **admit** — pop arrival-ordered requests from the queue into free
-     slots (a slot is reserved while its prefill is in flight);
-  2. **chunked prefill** — advance in-flight prefill tasks by one
+     slots (a slot is reserved while its prefill is in flight), after
+     cancelling any request whose deadline has passed;
+  2. **dispatch** (``dispatch_ahead >= 1``) — enqueue the next batched
+     decode step(s) on the device WITHOUT synchronizing, keeping up to
+     ``dispatch_ahead`` steps in flight (the on-device sampled-token
+     feed lets step t+1 queue behind step t — JetStream's driver-thread
+     overlap without threads);
+  3. **chunked prefill** — advance in-flight prefill tasks by one
      ``chunk_tokens`` chunk (``w_local``-aligned inside the engine), so a
      long prompt never blocks the batched decode for more than a chunk;
      when a task completes it is inserted and its first token streams
-     immediately (TTFT ends here, JetStream-style);
-  3. **batched decode** — one ``generate`` step over all live slots,
-     streaming one token per request; finished requests free their slot
-     and paged-pool pages on the spot so the next arrival can join.
+     immediately (TTFT ends here, JetStream-style). All of this host +
+     batch-1 work overlaps the in-flight batched decode;
+  4. **collect** — synchronize the OLDEST in-flight step (host
+     mirroring, sampling pull, stats) and stream one token per live
+     request; finished requests free their slot and paged-pool pages on
+     the spot so the next arrival can join. With ``dispatch_ahead=0``
+     this degrades to the synchronous ``generate()`` path (the PR-3
+     behavior, kept as the parity baseline).
 
 The Scheduler is the pure policy (how many to admit, how many prefill
 tasks to advance, whether to decode); the Orchestrator executes the plan
-against the engine, streams, and telemetry.
+against the engine, streams, and telemetry. :class:`ServeSession`
+(session.py) is the public client surface over this loop.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
-from repro.serving.backend import EngineBackend, PrefillTask
-from repro.serving.orchestrator.queue import (QueueFull, RequestQueue,
-                                              ServeRequest)
+from repro.serving.backend import EngineBackend, InflightStep, PrefillTask
+from repro.serving.orchestrator.queue import (InvalidRequest, QueueFull,
+                                              RequestQueue, ServeRequest)
 from repro.serving.orchestrator.stream import OnToken, StreamMux
 from repro.serving.orchestrator.telemetry import Telemetry
 
@@ -41,11 +53,20 @@ class SchedulerConfig:
     chunk_tokens: int = 64        # prefill tokens per task per tick
     prefill_concurrency: int = 1  # prefill tasks advanced per tick
     decode_while_prefill: bool = True  # decode between prefill chunks
+    # decode steps kept in flight on the device (two-phase
+    # dispatch/collect; backend.py). 0 = synchronous generate() per tick
+    # (the pre-async behavior, kept as the parity/regression baseline);
+    # >= 1 dispatches step t+1 before step t's result touches the host,
+    # so per-tick host work (paged-pool mirroring, sampling pulls,
+    # chunked prefill) overlaps device compute.
+    dispatch_ahead: int = 0
     # ticks between backend memory_snapshot() samples. Snapshots sync a few
     # small device counters per layer to host; the default samples every
     # tick so kv/pool peaks are exact (the A/B memory axis). Raise it to
     # lighten the tick loop on deep models — at the cost of possibly
-    # missing a short-lived peak between samples.
+    # missing a short-lived peak between samples. (Sampling waits on the
+    # newest dispatched step, so under dispatch_ahead it runs at the top
+    # of the tick, before new work is enqueued behind the in-flight step.)
     memory_sample_every: int = 1
 
     def __post_init__(self):
@@ -53,6 +74,8 @@ class SchedulerConfig:
             raise ValueError(f"chunk_tokens must be >= 1, got {self.chunk_tokens}")
         if self.prefill_concurrency < 1:
             raise ValueError("prefill_concurrency must be >= 1")
+        if self.dispatch_ahead < 0:
+            raise ValueError("dispatch_ahead must be >= 0")
         if self.memory_sample_every < 1:
             raise ValueError("memory_sample_every must be >= 1")
 
@@ -95,22 +118,35 @@ class Orchestrator:
         self.slot_req: List[Optional[ServeRequest]] = [None] * engine.slots
         # rid -> (request, prefill task), in admission order
         self._prefills: Dict[int, "tuple[ServeRequest, PrefillTask]"] = {}
+        # dispatched-but-uncollected decode steps, oldest first
+        self._inflight: Deque[InflightStep] = collections.deque()
+        # requests with a live deadline (rid -> request): the per-tick
+        # expiry check stays O(active deadlines), not O(every request
+        # ever submitted to this long-lived session)
+        self._deadlined: Dict[int, ServeRequest] = {}
         # engines are reusable (e.g. benchmark warmup); report stat deltas
         # relative to this orchestrator's birth, not engine lifetime totals
         self._stats0 = dict(engine.stats)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 32,
-               on_token: Optional[OnToken] = None) -> int:
-        """Enqueue a request (raises QueueFull under backpressure) and
-        open its token stream."""
+               on_token: Optional[OnToken] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue a request and open its token stream. Raises the typed
+        :class:`QueueFull` under backpressure (request not enqueued;
+        retry after draining) and :class:`InvalidRequest` for requests
+        that can never be served. With ``deadline_s`` the request is
+        cancelled — mid-stream if need be — once that many seconds have
+        passed since arrival."""
         try:
-            rid = self.queue.submit(prompt, max_new)
+            rid = self.queue.submit(prompt, max_new, deadline_s=deadline_s)
         except QueueFull:
             # keep shed-load telemetry fresh even if no tick follows
             self.telemetry.counters["rejected"] = float(self.queue.rejected)
             raise
         req = self.queue.requests[rid]
+        if req.deadline_t is not None:
+            self._deadlined[rid] = req
         self.mux.open(rid, req.arrival_t, on_token)
         return rid
 
@@ -118,10 +154,74 @@ class Orchestrator:
         return [s for s, r in enumerate(self.slot_req) if r is None]
 
     # ------------------------------------------------------------------
+    # cancellation (explicit via ServeSession.cancel, or deadline expiry)
+    # ------------------------------------------------------------------
+    def cancel(self, rid: int, *, reason: str = "cancelled") -> bool:
+        """Cancel a request at any lifecycle stage: drop it from the
+        pending queue, abandon its in-flight prefill, or — mid-stream —
+        free its decode slot and reclaim its paged-pool pages on the
+        spot. The engine's per-slot generation guard discards any token
+        an already-dispatched step produces for the freed row, so
+        surviving requests' streams are untouched. Returns False when the
+        request is unknown or already finished."""
+        req = self.queue.requests.get(rid)
+        if req is None or req.state in ("done", "cancelled"):
+            return False
+        if req.state == "queued":
+            self.queue.remove(rid)
+        elif req.state == "prefill":
+            # reserved slot, nothing inserted into the engine yet: drop
+            # the batch-1 task and release the reservation
+            self._prefills.pop(rid, None)
+            self.slot_req[req.slot] = None
+        elif req.state == "decode":
+            self.engine.free_slot(req.slot)
+            self.slot_req[req.slot] = None
+        req.state = "cancelled"
+        req.finish_t = self.clock()
+        self.mux.close(rid, cancelled=True)
+        self.telemetry.bump("cancelled")
+        if reason == "deadline":
+            self.telemetry.bump("deadline_expired")
+        return True
+
+    def _dispatch_is_useful(self) -> bool:
+        """True while some decoding request still wants a token beyond
+        the steps already in flight. Each in-flight step yields at most
+        one token per live row, so once ``len(_inflight)`` covers every
+        live request's remaining ``max_new`` budget, a further dispatch
+        can only produce discarded tokens. (EOS can still finish a
+        request earlier — that waste is bounded by the window depth and
+        unknowable in advance.)"""
+        ahead = len(self._inflight)
+        return any(req is not None and req.state == "decode"
+                   and req.max_new - len(req.out) > ahead
+                   for req in self.slot_req)
+
+    def _expire_deadlines(self) -> None:
+        if not self._deadlined:
+            return
+        now = self.clock()
+        for rid, req in list(self._deadlined.items()):
+            if req.state in ("done", "cancelled"):
+                del self._deadlined[rid]
+            elif now > req.deadline_t:
+                self.cancel(rid, reason="deadline")
+                self._deadlined.pop(rid, None)
+
+    # ------------------------------------------------------------------
     def tick(self) -> bool:
         """One scheduling round; returns True if any work was done."""
         self.telemetry.start()
         self.telemetry.bump("ticks")
+        self._expire_deadlines()
+        depth = self.scheduler.cfg.dispatch_ahead
+        # sample BEFORE dispatching: the snapshot syncs small per-layer
+        # counters, so taken later it would wait on the step dispatched
+        # this tick and forfeit the overlap dispatch-ahead buys
+        if (self.telemetry.counters["ticks"] - 1) % \
+                self.scheduler.cfg.memory_sample_every == 0:
+            self.telemetry.sample_memory(self.engine.memory_snapshot())
         plan = self.scheduler.plan(
             free_slots=len(self._free_slots()),
             queue_depth=self.queue.depth,
@@ -140,7 +240,9 @@ class Orchestrator:
             self._prefills[req.rid] = (req, self.engine.start_prefill(req.prompt))
             worked = True
 
-        # 2) chunked prefill: advance the oldest in-flight tasks
+        # 2) chunked prefill: advance the oldest in-flight tasks (runs
+        # while up to ``depth`` decode steps from earlier ticks are still
+        # in flight — the overlap dispatch-ahead exists for)
         for rid in list(self._prefills)[:plan.advance_prefills]:
             req, task = self._prefills[rid]
             pos0 = task.pos
@@ -157,20 +259,45 @@ class Orchestrator:
                 del self._prefills[rid]
                 self._deliver(req, prefix.first_token)
 
-        # 3) batched decode over live slots
-        if plan.decode:
+        # 3) dispatch-ahead: top up the in-flight window AFTER inserts
+        # (a freshly inserted row joins the very next step, exactly like
+        # the synchronous path) but BEFORE collecting, so the step
+        # collected below is one dispatched on an EARLIER tick — a full
+        # tick of host work (prefill, token delivery, telemetry)
+        # overlapped its device compute. The window is filled to
+        # depth + 1 because step 4 collects one step this same tick:
+        # what SURVIVES the tick is ``depth`` steps. A step is only
+        # dispatched while some live request's remaining max_new budget
+        # exceeds the tokens already in flight — past that the step is
+        # provably wasted (pipeline-flush work the sync path never does).
+        if depth > 0 and plan.decode:
+            while (len(self._inflight) < depth + 1
+                   and self._dispatch_is_useful()):
+                step = self.engine.dispatch_decode()
+                if step is None:
+                    break
+                self._inflight.append(step)
+                self.telemetry.bump("dispatched_steps")
+                worked = True
+
+        # 4) decode result: collect the OLDEST in-flight step (the host
+        # sync point), or run one synchronous generate() when async
+        # dispatch is off
+        out: Dict[int, int] = {}
+        if self._inflight:
+            out = self.engine.collect(self._inflight.popleft())
+            self.telemetry.bump("decode_steps")
+            worked = True
+        elif depth == 0 and plan.decode:
             out = self.engine.generate()
             if out:
                 self.telemetry.bump("decode_steps")
                 worked = True
-            for slot, tok in out.items():
-                req = self.slot_req[slot]
-                if req is not None and req.state == "decode":
-                    self._deliver(req, tok)
+        for slot, tok in out.items():
+            req = self.slot_req[slot]
+            if req is not None and req.state == "decode":
+                self._deliver(req, tok)
 
-        if (self.telemetry.counters["ticks"] - 1) % \
-                self.scheduler.cfg.memory_sample_every == 0:
-            self.telemetry.sample_memory(self.engine.memory_snapshot())
         self.telemetry.counters["rejected"] = float(self.queue.rejected)
         for k in ("evict_triggers", "decode_adm_sum"):
             self.telemetry.counters[k] = \
@@ -188,8 +315,9 @@ class Orchestrator:
         if is_last:
             req.state = "done"
             req.finish_t = now
-            self.engine.free_slot(req.slot)
-            self.slot_req[req.slot] = None
+            if req.slot is not None and self.slot_req[req.slot] is req:
+                self.engine.free_slot(req.slot)
+                self.slot_req[req.slot] = None
             st = self.mux.streams[req.rid]
             self.telemetry.record_request(
                 rid=req.rid, prompt_len=len(req.prompt), n_out=len(req.out),
@@ -198,14 +326,39 @@ class Orchestrator:
                 mean_admission=req.mean_admission)
 
     # ------------------------------------------------------------------
+    def drain(self) -> None:
+        """Collect every still-in-flight decode step (run() calls this
+        once the queue drains so engine stats and the paged mirror are
+        settled; tokens for freed rows are discarded by the engine)."""
+        while self._inflight:
+            out = self.engine.collect(self._inflight.popleft())
+            self.telemetry.bump("decode_steps")
+            for slot, tok in out.items():
+                req = self.slot_req[slot]
+                if req is not None and req.state == "decode":
+                    self._deliver(req, tok)
+            # collect folded this step's eviction/admission stats into
+            # engine.stats after the last tick's counter sync ran
+            for k in ("evict_triggers", "decode_adm_sum"):
+                self.telemetry.counters[k] = \
+                    self.engine.stats.get(k, 0.0) - self._stats0.get(k, 0.0)
+
     def run(self, max_ticks: int = 10_000) -> None:
-        """Tick until every submitted request has completed."""
+        """Tick until every submitted request has completed (or been
+        cancelled), then drain the in-flight window."""
         self.telemetry.start()
         for _ in range(max_ticks):
             if self.queue.all_done():
                 break
             self.tick()
+        self.drain()
         self.telemetry.stop()
 
     def tokens(self, rid: int) -> List[int]:
         return self.mux.tokens(rid)
+
+
+# re-exported for callers that treat the orchestrator package as the
+# serving API surface
+__all__ = ["SchedulerConfig", "Plan", "Scheduler", "Orchestrator",
+           "QueueFull", "InvalidRequest"]

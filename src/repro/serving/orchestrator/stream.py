@@ -27,6 +27,7 @@ class TokenStream:
         self.tokens: List[int] = []
         self.times: List[float] = []
         self.closed = False
+        self.cancelled = False
 
     def emit(self, token: int, is_last: bool = False) -> None:
         assert not self.closed, f"stream {self.rid} already closed"
@@ -36,6 +37,14 @@ class TokenStream:
             self.closed = True
         if self.on_token is not None:
             self.on_token(self.rid, int(token), is_last)
+
+    def close(self, *, cancelled: bool = False) -> None:
+        """Terminate the stream without a final token (mid-stream
+        cancellation / deadline expiry). Idempotent; late tokens for a
+        closed stream are a bug `emit` refuses."""
+        if not self.closed:
+            self.closed = True
+            self.cancelled = cancelled
 
     @property
     def ttft(self) -> Optional[float]:
@@ -64,6 +73,10 @@ class StreamMux:
 
     def emit(self, rid: int, token: int, is_last: bool = False) -> None:
         self.streams[rid].emit(token, is_last)
+
+    def close(self, rid: int, *, cancelled: bool = False) -> None:
+        if rid in self.streams:
+            self.streams[rid].close(cancelled=cancelled)
 
     def tokens(self, rid: int) -> List[int]:
         return self.streams[rid].tokens

@@ -46,6 +46,8 @@ class Telemetry:
             "ticks": 0, "decode_steps": 0, "prefill_chunks": 0,
             "prefill_tokens": 0, "generated_tokens": 0, "completed": 0,
             "rejected": 0, "evict_triggers": 0.0,
+            # async driver + client-surface lifecycle (scheduler/session)
+            "dispatched_steps": 0, "cancelled": 0, "deadline_expired": 0,
         }
         self.records: List[RequestRecord] = []
         self.pool_util_samples: List[float] = []
@@ -146,7 +148,9 @@ class Telemetry:
 
         lines = [
             f"requests={s['requests']} "
-            f"({c['rejected']:.0f} rejected by backpressure)  "
+            f"({c['rejected']:.0f} rejected by backpressure, "
+            f"{c['cancelled']:.0f} cancelled, "
+            f"{c['deadline_expired']:.0f} past deadline)  "
             f"wall={f(s['wall_s'], 's')}",
             f"throughput: {f(s['requests_per_s'])} req/s, "
             f"{f(s['tokens_per_s'])} tok/s "

@@ -43,6 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.launch.specs import splice_caches
 from repro.models import inference as I
+from repro.serving.sampling import sample
 from repro.sharding import rules
 
 
@@ -160,6 +161,23 @@ class ShardedDecodeMixin:
 
         return jax.jit(fn) if self.mesh is None \
             else self._mesh_jit(fn, kind="extend")
+
+    def _make_sampler(self) -> Callable:
+        """(key, logits [B, V]) -> tokens [B] int32, sampled ON DEVICE.
+
+        The sampled vector is the feed of the next dispatched decode step
+        (two-phase dispatch/collect: backend.py), so it must never round-
+        trip through the host between steps. Under a mesh the logits
+        arrive row-sharded from the jitted decode step and GSPMD carries
+        that placement through the (tiny) argmax/categorical; the [B]
+        token vector lands row-sharded, exactly what the next decode's
+        pinned input sharding expects."""
+        temperature = self.temperature
+
+        def fn(key, logits):
+            return sample(key, logits, temperature=temperature)
+
+        return jax.jit(fn)
 
     def _mesh_jit(self, fn: Callable, *, kind: str) -> Callable:
         """Wrap ``fn(params, tokens, caches)`` with explicit in/out

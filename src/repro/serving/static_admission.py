@@ -5,10 +5,14 @@ The paper's §5.2 baselines are *input-independent* admission policies
 re-expressed in the write-gate interface (core/baselines.py): g depends
 only on a token's absolute position (and, for DuoAttention, its head).
 Plugging those gates into the identical dual-cache machinery — same ring,
-same lazy promotion, same paged mirror — turns each baseline into a
-full serving backend behind the :class:`EngineBackend` protocol, so the
-A/B harness can replay one arrival trace through WG-KV, dense full-KV,
-and the static baselines under the same scheduler.
+same lazy promotion, same paged mirror, same two-phase
+``dispatch_decode``/``collect`` surface (the gate is a jit-time option,
+so the dispatched step and on-device token feed are inherited from
+:class:`Engine` unchanged) — turns each baseline into a full serving
+backend behind the :class:`EngineBackend` protocol, so the A/B harness
+can replay one arrival trace through WG-KV, dense full-KV, and the
+static baselines under the same scheduler, synchronous or
+dispatch-ahead.
 
 Policies:
   * ``streaming_llm`` — admit only the first ``sink`` tokens; everything

@@ -62,12 +62,15 @@ def test_backends_satisfy_protocol(served):
 # dense backend parity: streamed tokens == legacy dense rollout
 # ==========================================================================
 def _legacy_dense_rollout(params, cfg, prompt, max_new, capacity=128):
-    """Reference full-KV greedy rollout (prefill + decode loop with the
-    repo's first-token convention: re-feed prompt[-1] after prefill)."""
+    """Reference full-KV greedy rollout: the first token comes from the
+    prefill's own last-position logits (no re-feed of prompt[-1] — the
+    retired convention double-wrote KV at position n and shifted every
+    later position by one), subsequent tokens from the decode loop."""
     toks = jnp.asarray(prompt, jnp.int32)[None]
-    _, caches = I.prefill(params, cfg, toks, use_wgkv=False, max_len=capacity)
-    cur, out = prompt[-1], []
-    for _ in range(max_new):
+    po, caches = I.prefill(params, cfg, toks, use_wgkv=False, max_len=capacity)
+    cur = int(jnp.argmax(po.logits[0]))
+    out = [cur]
+    for _ in range(max_new - 1):
         logits, caches, _ = I.decode_step(
             params, cfg, jnp.asarray([cur], jnp.int32), caches)
         cur = int(jnp.argmax(logits[0]))
@@ -95,12 +98,13 @@ def test_dense_stream_matches_legacy_dense_rollout(served):
 
 def test_dense_capacity_overflow_fails_loudly(served):
     """Decode past the dense buffer must raise, not silently drop writes
-    (JAX OOB scatter) and serve a corrupted cache."""
+    (JAX OOB scatter) and serve a corrupted cache — and it must raise at
+    DISPATCH time, before the overflowing step is enqueued."""
     cfg, params = served
     eng = make_backend("dense", params, cfg, slots=1, capacity=40)
     with pytest.raises(AssertionError):
         eng.start_prefill(list(range(48)))  # prompt alone exceeds capacity
-    prefix = eng.prefill(list(range(36)))   # t = 37 after first token
+    prefix = eng.prefill(list(range(36)))   # t = 36 (first token is free)
     eng.insert(prefix, 0)
     with pytest.raises(RuntimeError, match="dense cache overflow"):
         for _ in range(8):
@@ -174,6 +178,59 @@ def test_free_slot_resets_last_token(served):
     eng.last_token[0] = 123
     with pytest.raises(AssertionError, match="stale"):
         eng.generate()
+
+
+# ==========================================================================
+# two-phase decode: dispatch/collect == generate, dispatch-ahead safe
+# ==========================================================================
+def test_dispatch_collect_matches_generate(served):
+    """The two-phase surface must emit exactly what the synchronous shim
+    does: dispatching step t+1 before collecting step t (depth 2) cannot
+    change any live row's greedy token."""
+    cfg, params = served
+    prompts = [list(range(10, 58)), list(range(30, 78))]
+
+    def rollout(two_phase):
+        eng = make_backend("wgkv", params, cfg, slots=2, capacity=128,
+                           mirror_paged=False)
+        for s, p in enumerate(prompts):
+            eng.insert(eng.prefill(p), s)
+        out = [[], []]
+        if two_phase:
+            inflight = [eng.dispatch_decode()]  # depth 2: t+1 behind t
+            for _ in range(4):
+                inflight.append(eng.dispatch_decode())
+                got = eng.collect(inflight.pop(0))
+                for s, t in got.items():
+                    out[s].append(t)
+            got = eng.collect(inflight.pop(0))
+            for s, t in got.items():
+                out[s].append(t)
+        else:
+            for _ in range(5):
+                for s, t in eng.generate().items():
+                    out[s].append(t)
+        return out
+
+    assert rollout(True) == rollout(False)
+
+
+def test_collect_discards_freed_slot(served):
+    """A slot freed between dispatch and collect must not deliver its
+    token (generation guard): the cancelled request's output can never
+    leak into a successor, and double-collect is refused."""
+    cfg, params = served
+    eng = make_backend("wgkv", params, cfg, slots=2, capacity=128,
+                       mirror_paged=False)
+    eng.insert(eng.prefill(list(range(10, 58))), 0)
+    eng.insert(eng.prefill(list(range(30, 78))), 1)
+    step = eng.dispatch_decode()
+    eng.free_slot(0)                     # cancel slot 0 mid-flight
+    out = eng.collect(step)
+    assert set(out) == {1}               # slot 0's token discarded
+    assert eng.last_token[0] == 0
+    with pytest.raises(AssertionError, match="twice"):
+        eng.collect(step)
 
 
 # ==========================================================================
@@ -264,7 +321,9 @@ def test_lazy_ring_pages_short_prompt(wide_ring):
     prefix = eng.prefill(list(range(10)), emit_first=True)  # 10 << w_local
     eng.insert(prefix, 0)
     w = cfg.wgkv.w_local
-    n_local = 11  # prompt + first-token decode write
+    # exactly the prompt: the first token is sampled from the prefill's
+    # last-position logits, so it adds no KV write of its own
+    n_local = 10
     local_tables = [t for k, t in eng.pool.tables.items() if k[-1] == "local"]
     assert local_tables, "no local streams mirrored"
     for t in local_tables:

@@ -10,8 +10,9 @@ from conftest import make_cfg
 from repro.models import inference as I
 from repro.models import transformer as T
 from repro.serving.engine import Engine
-from repro.serving.orchestrator import (Orchestrator, QueueFull, RequestQueue,
-                                        Scheduler, SchedulerConfig)
+from repro.serving.orchestrator import (InvalidRequest, Orchestrator,
+                                        QueueFull, RequestQueue, Scheduler,
+                                        SchedulerConfig)
 
 
 @pytest.fixture(scope="module")
@@ -35,6 +36,28 @@ def test_queue_fifo_and_backpressure():
     assert q.pop() is None
     r2 = q.submit([7], max_new=1)  # drained -> accepts again
     assert q.pop().rid == r2
+
+
+def test_queue_validates_requests():
+    """Malformed requests fail with a typed error at the queue boundary,
+    not deep inside the backend's start_prefill."""
+    q = RequestQueue(max_pending=4)
+    with pytest.raises(InvalidRequest, match="non-empty"):
+        q.submit([], max_new=4)
+    with pytest.raises(InvalidRequest, match="max_new"):
+        q.submit([1, 2], max_new=0)
+    with pytest.raises(InvalidRequest, match="deadline"):
+        q.submit([1, 2], max_new=4, deadline_s=0.0)
+    assert len(q) == 0 and q.rejected == 0  # validation is not shed load
+
+
+def test_queue_full_is_typed():
+    """QueueFull carries the queue state so a frontend can back off."""
+    q = RequestQueue(max_pending=1)
+    q.submit([1], max_new=1)
+    with pytest.raises(QueueFull) as ei:
+        q.submit([2], max_new=1)
+    assert ei.value.depth == 1 and ei.value.max_pending == 1
 
 
 def test_scheduler_plan_respects_limits():

@@ -71,7 +71,11 @@ def test_engine_paged_mirror_exact(served):
 
 
 def test_engine_matches_raw_decode(served):
-    """Engine output tokens == direct prefill+decode greedy rollout."""
+    """Engine output tokens == direct prefill+decode greedy rollout.
+
+    The first token comes from the prefill's own last-position logits
+    (the retired convention re-fed ``prompt[-1]``, double-writing its KV
+    at position n); later tokens from the decode loop."""
     cfg, params = served
     prompt = list(range(20, 68))  # 48 tokens = 3 x w_local
     eng = Engine(params, cfg, slots=1, capacity=128, mirror_paged=False)
@@ -81,9 +85,9 @@ def test_engine_matches_raw_decode(served):
     toks = jnp.asarray(prompt, jnp.int32)[None]
     po, caches = I.prefill(params, cfg, toks,
                            budget=cfg.wgkv.global_budget(128), max_len=128)
-    cur = prompt[-1]
-    want = []
-    for _ in range(5):
+    cur = int(jnp.argmax(po.logits[0]))
+    want = [cur]
+    for _ in range(4):
         logits, caches, _ = I.decode_step(
             params, cfg, jnp.asarray([cur], jnp.int32), caches)
         cur = int(jnp.argmax(logits[0]))

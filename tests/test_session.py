@@ -1,0 +1,229 @@
+"""ServeSession client surface + async dispatch/collect driver.
+
+Covers the acceptance criteria of the async serving API redesign:
+
+  * greedy-token parity: the dispatch-ahead driver (dispatch_ahead >= 1)
+    emits byte-identical streams to the synchronous baseline on one
+    arrival trace;
+  * mid-stream cancellation during chunked prefill AND during decode:
+    the slot is freed, paged-pool pages are reclaimed, and surviving
+    requests' greedy tokens are bit-identical to an uncancelled run;
+  * typed backpressure (QueueFull) and boundary validation
+    (InvalidRequest) surface through ServeSession.submit;
+  * per-request deadlines cancel overdue requests mid-stream;
+  * sync and async iteration off the handle.
+"""
+import asyncio
+
+import jax
+import pytest
+
+from conftest import make_cfg
+from repro.models import transformer as T
+from repro.serving.backend import make_backend
+from repro.serving.orchestrator import (InvalidRequest, QueueFull,
+                                        SchedulerConfig, ServeSession)
+
+pytestmark = pytest.mark.backends
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = make_cfg("qwen3-0.6b", global_budget_frac=0.5)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+PROMPTS = [list(range(10 + i, 58 + i)) for i in range(3)]
+
+
+def _session(params, cfg, *, dispatch_ahead=1, mirror=False, slots=2,
+             **kw):
+    eng = make_backend("wgkv", params, cfg, slots=slots, capacity=128,
+                       mirror_paged=mirror)
+    return ServeSession(eng, sched=SchedulerConfig(
+        chunk_tokens=16, dispatch_ahead=dispatch_ahead), **kw)
+
+
+def _serve_all(sess, prompts=PROMPTS, max_new=5):
+    hs = [sess.submit(p, max_new=max_new) for p in prompts]
+    sess.run()
+    sess.close()
+    return [h.tokens() for h in hs]
+
+
+# ==========================================================================
+# async driver parity: dispatch-ahead == synchronous baseline, bytewise
+# ==========================================================================
+def test_async_driver_matches_sync(served):
+    cfg, params = served
+    want = _serve_all(_session(params, cfg, dispatch_ahead=0))
+    for depth in (1, 2):
+        got = _serve_all(_session(params, cfg, dispatch_ahead=depth))
+        assert got == want, f"dispatch_ahead={depth} diverged"
+
+
+def test_async_driver_parity_with_mirror(served):
+    """Paged-pool mirroring runs at collect time (overlapped with the
+    next in-flight step) — it must not change tokens, and every page
+    must be reclaimed once the trace drains."""
+    cfg, params = served
+    want = _serve_all(_session(params, cfg, dispatch_ahead=0))
+    sess = _session(params, cfg, dispatch_ahead=1, mirror=True)
+    eng = sess.engine
+    got = _serve_all(sess)
+    assert got == want
+    assert eng.pool.pages_in_use == 0
+    assert not eng.pool.tables
+
+
+# ==========================================================================
+# mid-stream cancellation (satellite): prefill stage and decode stage
+# ==========================================================================
+def _run_with_victim(params, cfg, cancel_stage=None, *, min_tokens=2):
+    """Serve two survivors + one victim; optionally cancel the victim
+    once it reaches ``cancel_stage``. Returns (survivor streams, victim
+    handle, engine)."""
+    sess = _session(params, cfg, dispatch_ahead=1, mirror=True)
+    eng = sess.engine
+    survivors = [sess.submit(p, max_new=6) for p in PROMPTS[:2]]
+    victim = sess.submit(list(range(30, 78)), max_new=6)
+    if cancel_stage is not None:
+        for _ in range(10_000):
+            if victim.state == cancel_stage:
+                break
+            sess.tick()
+        assert victim.state == cancel_stage
+        if cancel_stage == "decode":
+            while len(victim.tokens()) < min_tokens:
+                sess.tick()
+        assert victim.cancel()
+        assert victim.cancelled
+        assert not victim.cancel()          # idempotent: already terminal
+    sess.run()
+    sess.close()
+    return [h.tokens() for h in survivors], victim, eng
+
+
+def test_cancel_during_prefill(served):
+    cfg, params = served
+    base, full_victim, _ = _run_with_victim(params, cfg, None)
+    got, victim, eng = _run_with_victim(params, cfg, "prefill")
+    assert victim.cancelled and victim.tokens() == []
+    # survivors are bit-identical to the uncancelled run
+    assert got == base
+    # the reserved slot was released and reused or left free; nothing
+    # lingers in the pool once the trace drains
+    assert not any(eng.live)
+    assert eng.pool.pages_in_use == 0
+
+
+def test_cancel_during_decode(served):
+    """Cancel mid-stream with a step in flight: the slot frees, its pool
+    pages return to the allocator immediately, the partial stream closes
+    as cancelled, and survivors are bit-identical."""
+    cfg, params = served
+    base, full_victim, _ = _run_with_victim(params, cfg, None)
+    got, victim, eng = _run_with_victim(params, cfg, "decode")
+    assert victim.cancelled
+    toks = victim.tokens()
+    assert 2 <= len(toks) < 6                      # partial stream
+    assert toks == full_victim.tokens()[:len(toks)]  # prefix of full run
+    assert got == base
+    assert not any(eng.live)
+    assert eng.pool.pages_in_use == 0
+    assert not eng.pool.tables                     # streams freed NOW
+
+
+def test_cancel_frees_pool_pages_immediately(served):
+    """Pool pages of a cancelled mid-decode request return to the
+    allocator at cancel time, not when the trace drains."""
+    cfg, params = served
+    sess = _session(params, cfg, dispatch_ahead=1, mirror=True, slots=2)
+    eng = sess.engine
+    victim = sess.submit(list(range(30, 78)), max_new=32)
+    for _ in range(10_000):
+        if victim.state == "decode" and len(victim.tokens()) >= 2:
+            break
+        sess.tick()
+    assert eng.pool.pages_in_use > 0
+    assert victim.cancel()
+    assert eng.pool.pages_in_use == 0              # reclaimed on the spot
+    sess.run()
+    sess.close()
+
+
+# ==========================================================================
+# typed backpressure + validation through the session
+# ==========================================================================
+def test_session_backpressure_and_validation(served):
+    cfg, params = served
+    sess = _session(params, cfg, max_pending=1)
+    with pytest.raises(InvalidRequest):
+        sess.submit([], max_new=4)
+    with pytest.raises(InvalidRequest):
+        sess.submit([1, 2], max_new=0)
+    h = sess.submit(PROMPTS[0], max_new=2)  # fills the pending queue
+    with pytest.raises(QueueFull) as ei:
+        sess.submit(PROMPTS[1], max_new=2)
+    assert ei.value.max_pending == 1 and ei.value.depth == 1
+    sess.tick()                             # admission drains the queue
+    h2 = sess.submit(PROMPTS[1], max_new=2)  # room again: accepted
+    sess.run()
+    sess.close()
+    assert h.done and len(h.tokens()) == 2
+    assert h2.done and len(h2.tokens()) == 2
+    assert sess.telemetry.counters["rejected"] == 1
+
+
+# ==========================================================================
+# deadlines: overdue requests cancel mid-stream
+# ==========================================================================
+def test_deadline_cancels_mid_stream(served):
+    cfg, params = served
+    fake = {"t": 0.0}
+    eng = make_backend("wgkv", params, cfg, slots=1, capacity=128,
+                       mirror_paged=False)
+    sess = ServeSession(eng, sched=SchedulerConfig(chunk_tokens=16,
+                                                   dispatch_ahead=1),
+                        clock=lambda: fake["t"])
+    h = sess.submit(PROMPTS[0], max_new=64, deadline_s=5.0)
+    ok = sess.submit(PROMPTS[1], max_new=4)  # no deadline: must finish
+    for _ in range(200):
+        fake["t"] += 0.1                     # 0.1 "s" per tick
+        sess.tick()
+        if h.cancelled and ok.done:
+            break
+    assert h.cancelled                      # deadline hit mid-stream
+    assert 0 < len(h.tokens()) < 64
+    assert ok.done
+    assert sess.telemetry.counters["deadline_expired"] == 1
+    sess.run()
+    sess.close()
+
+
+# ==========================================================================
+# streaming: sync iterator and asyncio adapter drive the loop themselves
+# ==========================================================================
+def test_handle_iterators(served):
+    cfg, params = served
+    want = _serve_all(_session(params, cfg, dispatch_ahead=1))
+
+    # sync: interleaved iteration over two handles
+    sess = _session(params, cfg, dispatch_ahead=1)
+    hs = [sess.submit(p, max_new=5) for p in PROMPTS]
+    assert [list(h) for h in hs] == want
+    sess.close()
+
+    # async: concurrent astream consumers on one event loop
+    sess = _session(params, cfg, dispatch_ahead=1)
+    hs = [sess.submit(p, max_new=5) for p in PROMPTS]
+
+    async def consume(h):
+        return [t async for t in h.astream()]
+
+    async def main():
+        return await asyncio.gather(*(consume(h) for h in hs))
+
+    assert asyncio.run(main()) == want
+    sess.close()

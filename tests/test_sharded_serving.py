@@ -162,10 +162,11 @@ params = T.init_model(jax.random.PRNGKey(0), cfg)
 mesh = build_mesh("2x4")
 prompts = [list(range(7 + i, 39 + i)) for i in range(3)]
 
-def serve(name, m):
+def serve(name, m, depth):
     eng = make_backend(name, params, cfg, slots=2, capacity=128,
                        mirror_paged=False, mesh=m)
-    orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=16))
+    orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=16,
+                                                   dispatch_ahead=depth))
     for p in prompts:
         orch.submit(p, max_new=4)
     orch.run()
@@ -175,7 +176,8 @@ def serve(name, m):
 
 out = {}
 for name in ("wgkv", "dense"):
-    out[name] = {"mesh": serve(name, mesh), "flat": serve(name, None)}
+    out[name] = {"mesh": serve(name, mesh, 0), "flat": serve(name, None, 0),
+                 "mesh_async": serve(name, mesh, 1)}
 print("RESULT" + json.dumps(out))
 """
 
@@ -202,6 +204,9 @@ def test_sharded_parity_vs_unsharded():
         assert flat_run["devices"] is None
         assert mesh_run["tokens"] == flat_run["tokens"], name
         assert all(len(t) == 4 for t in mesh_run["tokens"])
+        # the async dispatch/collect driver on the mesh streams the same
+        # bytes: the on-device sampled-token feed survives SPMD placement
+        assert out[name]["mesh_async"]["tokens"] == flat_run["tokens"], name
 
 
 # ==========================================================================
@@ -229,6 +234,9 @@ def test_bench_serving_smoke_mesh(tmp_path):
         assert m["ttft_p50_s"] is not None and m["ttft_p99_s"] is not None
         assert m["kv_bytes_per_shard_peak"] is not None
         assert m["kv_bytes_per_shard_peak"] <= m["kv_bytes_peak"]
+        # async driver metrics ride along (sync baseline + speedup ratio)
+        assert m["sync_tokens_per_s"] is not None
+        assert m["async_speedup_vs_sync"] > 0
     assert "ab" in rec and "wgkv" in rec["ab"]
 
 
