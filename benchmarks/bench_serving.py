@@ -12,23 +12,33 @@ policy behind the ``EngineBackend`` protocol changes.
         --backends wgkv,dense [--smoke] [--arrival poisson:0.5] \
         [--mesh 2x4] [--slo-tolerance 0.25]
 
-Two drivers replay every trace:
+Three drivers replay every trace:
 
-  * the **async** dispatch-ahead driver (``ServeSession``, dispatch/
-    collect with ``dispatch_ahead=1``) — the production path and the
-    source of each backend's headline metrics;
-  * the **synchronous** baseline (``dispatch_ahead=0``, the pre-async
-    ``generate()`` tick) — recorded as ``sync_tokens_per_s`` with the
-    ratio ``async_speedup_vs_sync``, so the overlap the two-phase
-    surface buys is itself regression-tracked. Greedy token streams from
-    the two drivers are asserted byte-identical before timing is
-    trusted.
+  * the **async batched** driver (``ServeSession``, dispatch/collect
+    with ``dispatch_ahead=1`` and batched ragged prefill — every
+    in-flight prefill advances in ONE jitted device call per tick) —
+    the production path and the source of each backend's headline
+    metrics;
+  * the **synchronous** baseline (``dispatch_ahead=0``) — recorded as
+    ``sync_tokens_per_s`` with the ratio ``async_speedup_vs_sync``, so
+    the overlap the two-phase surface buys is regression-tracked;
+  * the **per-request prefill** baseline
+    (``SchedulerConfig(batched_prefill=False)``: one batch-1
+    ``prefill_step`` call per task per tick) — recorded as
+    ``unbatched_prefill_tokens_per_s`` with the ratio
+    ``batched_prefill_speedup``, so the coalescing win of
+    ``prefill_step_batch`` is regression-tracked too.
+
+Greedy token streams from all drivers are asserted byte-identical
+before any timing is trusted.
 
 SLO regression gate: with ``--slo-tolerance T`` the run compares each
-backend's p99 TTFT against the committed ``BENCH_serving.json`` history
-(same trace signature) and exits nonzero when the new p99 exceeds the
-old by more than ``T`` (fractional, e.g. 0.25 = +25%); the roadmap's
-"alert when the TTFT tail regresses across PRs" as a CI-visible check.
+backend's p99 TTFT AND p99 TPOT against the committed
+``BENCH_serving.json`` history (same trace signature) and exits nonzero
+when a new p99 exceeds the old by more than ``T`` (fractional, e.g.
+0.25 = +25%) — the TTFT tail alert the roadmap called for, plus the
+decode-latency guard that keeps batched prefill from regressing TPOT
+unnoticed.
 
 Arrival processes: the default ``burst`` trace scatters arrivals over the
 first ``n`` scheduler ticks; ``poisson:<rate>`` draws i.i.d. exponential
@@ -123,13 +133,15 @@ def record_trace(n: int, vocab: int, *, prompt_len: int, max_new: int,
 
 
 def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
-           dispatch_ahead: int = DISPATCH_AHEAD
+           dispatch_ahead: int = DISPATCH_AHEAD,
+           batched_prefill: bool = True
            ) -> Tuple[ServeSession, List[List[int]]]:
     """Replay a recorded trace through a ServeSession: submit each
     request at its arrival tick, tick until drained. Returns the closed
     session and each request's token stream (submission order)."""
     sess = ServeSession(eng, sched=SchedulerConfig(
-        chunk_tokens=chunk, dispatch_ahead=dispatch_ahead))
+        chunk_tokens=chunk, dispatch_ahead=dispatch_ahead,
+        batched_prefill=batched_prefill))
     handles = []
     pending = list(trace)
     tick = 0
@@ -145,6 +157,24 @@ def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
     return sess, [h.tokens() for h in handles]
 
 
+def _prefill_tok_rate(s: Dict) -> Optional[float]:
+    """Prompt-ingest throughput of one replay: prefill tokens over the
+    wall time of the tick loop's prefill-advance STAGE (not the whole
+    replay — decode-heavy traces would drown the prefill signal)."""
+    t = s["counters"].get("prefill_time_s")
+    return s["counters"]["prefill_tokens"] / t if t else None
+
+
+def _extend_tok_rate(s: Dict) -> Optional[float]:
+    """Throughput of the extend-phase advances alone (engine counters:
+    extend_tokens / extend_time_s, the device-synced wall of each
+    coalesced call). First-chunk opens are excluded — they are identical
+    in the batched and per-request drivers, so this is the clean axis
+    ``batched_prefill_speedup`` compares."""
+    t = s["counters"].get("extend_time_s")
+    return s["counters"].get("extend_tokens", 0.0) / t if t else None
+
+
 def _backend_record(s: Dict) -> Dict:
     return {
         "requests": s["requests"],
@@ -157,6 +187,7 @@ def _backend_record(s: Dict) -> Dict:
         "tpot_mean_s": s["tpot_mean_s"],
         "tpot_p50_s": s["tpot_p50_s"],
         "tpot_p90_s": s["tpot_p90_s"],
+        "tpot_p99_s": s["tpot_p99_s"],
         "mean_admission": s["mean_admission"],
         "mean_admission_decode": s["mean_admission_decode"],
         "pool_utilization": s["pool_util_mean"],
@@ -166,12 +197,17 @@ def _backend_record(s: Dict) -> Dict:
         "kv_bytes_per_shard_peak": s["kv_bytes_per_shard_peak"],
         "decode_steps": s["counters"]["decode_steps"],
         "prefill_chunks": s["counters"]["prefill_chunks"],
+        "prefill_batches": s["counters"]["prefill_batches"],
+        # prefill_tokens_per_s is filled in by run() from the best stage
+        # rate across the interleaved replays, not this single summary
     }
 
 
 def check_slo(prev: Optional[Dict], record: Dict,
               tolerance: float) -> List[str]:
-    """Compare per-backend p99 TTFT against the committed history.
+    """Compare per-backend p99 TTFT and p99 TPOT against the committed
+    history (TPOT so batched prefill cannot regress decode latency
+    unnoticed — coalesced prefill work shares ticks with decode).
 
     Returns human-readable violations (empty = pass). History with a
     different trace signature is skipped: changed traffic is not a
@@ -187,14 +223,16 @@ def check_slo(prev: Optional[Dict], record: Dict,
         return []
     out = []
     for name, rec in record["backends"].items():
-        old = prev.get("backends", {}).get(name, {}).get("ttft_p99_s")
-        new = rec.get("ttft_p99_s")
-        if old is None or new is None:
-            continue
-        if new > old * (1.0 + tolerance):
-            out.append(
-                f"{name}: p99 TTFT {new * 1e3:.1f}ms > "
-                f"{old * 1e3:.1f}ms * (1 + {tolerance:g}) from history")
+        for metric, label in (("ttft_p99_s", "p99 TTFT"),
+                              ("tpot_p99_s", "p99 TPOT")):
+            old = prev.get("backends", {}).get(name, {}).get(metric)
+            new = rec.get(metric)
+            if old is None or new is None:
+                continue
+            if new > old * (1.0 + tolerance):
+                out.append(
+                    f"{name}: {label} {new * 1e3:.1f}ms > "
+                    f"{old * 1e3:.1f}ms * (1 + {tolerance:g}) from history")
     return out
 
 
@@ -235,37 +273,72 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
         if paged:
             eng.mirror = False
         # warmup: compile prefill/extend/decode/sampler shapes on the same
-        # engine (the jit caches live on the engine's partials), then
-        # replay the measured trace fresh per driver. The two drivers
-        # share one code path (sync IS the two-phase surface at depth 0),
-        # so their true timing difference is small; replays are
-        # INTERLEAVED (sync, async, sync, async, ...) and each driver
-        # keeps its best, so a shared-box noise burst lands on both
-        # drivers instead of silently skewing the async/sync ratio.
+        # engine (the jit caches live on the engine's partials) for BOTH
+        # prefill drivers, then replay the measured trace fresh per
+        # driver. The drivers share one code path (sync IS the two-phase
+        # surface at depth 0; per-request prefill IS the batch-of-one
+        # shim), so their true timing differences are small; replays are
+        # INTERLEAVED (sync, async, unbatched, sync, ...) and each driver
+        # keeps its best, so a shared-box noise burst lands on every
+        # driver instead of silently skewing a ratio.
         replay(eng, warmup)
-        best: Dict[int, Tuple] = {}
+        replay(eng, warmup, batched_prefill=False)
+        drivers = {
+            "sync": dict(dispatch_ahead=0),
+            "async": dict(dispatch_ahead=DISPATCH_AHEAD),
+            "unbatched": dict(dispatch_ahead=DISPATCH_AHEAD,
+                              batched_prefill=False),
+        }
+        best: Dict[str, Tuple] = {}
+        best_prefill: Dict[str, float] = {}
+        best_extend: Dict[str, float] = {}
         for _ in range(3):
-            for depth in (0, DISPATCH_AHEAD):
-                sess, toks = replay(eng, trace, dispatch_ahead=depth)
+            for dname, kw in drivers.items():
+                sess, toks = replay(eng, trace, **kw)
                 summ = sess.telemetry.summary()
-                if depth not in best or ((summ["tokens_per_s"] or 0.0)
-                                         > (best[depth][0]["tokens_per_s"]
+                if dname not in best or ((summ["tokens_per_s"] or 0.0)
+                                         > (best[dname][0]["tokens_per_s"]
                                             or 0.0)):
-                    best[depth] = (summ, toks)
-        s_sync, sync_toks = best[0]
-        s, async_toks = best[DISPATCH_AHEAD]
-        # the async driver must not change WHAT is served, only when the
-        # host syncs: greedy streams are byte-identical by construction
+                    best[dname] = (summ, toks)
+                best_prefill[dname] = max(best_prefill.get(dname, 0.0),
+                                          _prefill_tok_rate(summ) or 0.0)
+                best_extend[dname] = max(best_extend.get(dname, 0.0),
+                                         _extend_tok_rate(summ) or 0.0)
+        s_sync, sync_toks = best["sync"]
+        s, async_toks = best["async"]
+        unb_toks = best["unbatched"][1]
+        # no driver may change WHAT is served, only how the work is
+        # scheduled on the device: greedy streams are byte-identical by
+        # construction, checked before any timing is trusted
         if async_toks != sync_toks:
             raise AssertionError(
                 f"{name}: async dispatch/collect driver diverged from the "
                 f"synchronous baseline on the same trace")
+        if unb_toks != async_toks:
+            raise AssertionError(
+                f"{name}: batched ragged prefill diverged from the "
+                f"per-request prefill driver on the same trace")
         rec = _backend_record(s)
         rec["sync_tokens_per_s"] = s_sync["tokens_per_s"]
         rec["sync_ttft_p99_s"] = s_sync["ttft_p99_s"]
         if s["tokens_per_s"] and s_sync["tokens_per_s"]:
             rec["async_speedup_vs_sync"] = (
                 s["tokens_per_s"] / s_sync["tokens_per_s"])
+        # each driver's BEST rate across the interleaved replays: the
+        # ratios compare the drivers' achievable rates instead of
+        # whichever replay won on total tokens_per_s. prefill_tokens_per_s
+        # is the whole prefill stage (opens + extends); the speedup is
+        # the extend-phase ratio — opens are identical in both drivers,
+        # so including them would only dilute the coalescing signal
+        rec["prefill_tokens_per_s"] = best_prefill["async"] or None
+        rec["unbatched_prefill_tokens_per_s"] = (best_prefill["unbatched"]
+                                                 or None)
+        rec["prefill_extend_tokens_per_s"] = best_extend["async"] or None
+        rec["unbatched_prefill_extend_tokens_per_s"] = (
+            best_extend["unbatched"] or None)
+        if best_extend["async"] and best_extend["unbatched"]:
+            rec["batched_prefill_speedup"] = (
+                best_extend["async"] / best_extend["unbatched"])
         if paged:
             # extra replay on the warm engine with mirroring ON: physical
             # pool telemetry (pages peak / utilization), kept out of the

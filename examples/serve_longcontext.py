@@ -6,8 +6,10 @@ dual cache + paged physical memory + chunked prefill + token streaming.
 serving
 -------
 The orchestrator wraps the JetStream-style engine backend
-(prefill/insert/generate) with a request queue, a chunked-prefill
-scheduler, per-request token streams, and latency telemetry::
+(prefill/insert/dispatch-collect) with a request queue, a batched
+chunked-prefill scheduler (every in-flight prefill advances in one
+ragged jitted call per tick), per-request token streams, and latency
+telemetry::
 
     from repro.serving.engine import Engine
     from repro.serving.orchestrator import Orchestrator, SchedulerConfig

@@ -42,9 +42,16 @@ def main() -> None:
     ap.add_argument("--capacity", type=int, default=512)
     ap.add_argument("--chunk-tokens", type=int, default=64,
                     help="prefill chunk per scheduler tick (w_local-aligned)")
+    ap.add_argument("--max-prefill-batch", type=int, default=None,
+                    help="cap on prefill tasks advanced per tick in the one "
+                         "batched ragged device call (default: all in-flight "
+                         "prefills, bounded by --slots)")
+    ap.add_argument("--no-batched-prefill", action="store_true",
+                    help="advance prefills one batch-1 call per task per "
+                         "tick (the per-request parity baseline)")
     ap.add_argument("--dispatch-ahead", type=int, default=1,
                     help="decode steps kept in flight on the device "
-                         "(0 = synchronous generate() baseline)")
+                         "(0 = synchronous one-step-per-tick baseline)")
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request latency deadline; overdue requests "
                          "are cancelled mid-stream")
@@ -67,6 +74,8 @@ def main() -> None:
         ap.error("--chunk-tokens must be >= 1")
     if args.dispatch_ahead < 0:
         ap.error("--dispatch-ahead must be >= 0")
+    if args.max_prefill_batch is not None and args.max_prefill_batch < 1:
+        ap.error("--max-prefill-batch must be >= 1")
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     cfg = cfg.replace(dtype="float32")
     if not cfg.has_attention_cache:
@@ -89,7 +98,9 @@ def main() -> None:
     session = ServeSession(
         eng,
         sched=SchedulerConfig(chunk_tokens=args.chunk_tokens,
-                              dispatch_ahead=args.dispatch_ahead),
+                              dispatch_ahead=args.dispatch_ahead,
+                              max_prefill_batch=args.max_prefill_batch,
+                              batched_prefill=not args.no_batched_prefill),
         max_pending=args.max_pending)
 
     def on_token(rid: int, tok: int, is_last: bool) -> None:

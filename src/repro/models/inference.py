@@ -401,3 +401,67 @@ def prefill_extend(params: Params, cfg: ModelConfig, tokens: jax.Array,
     caches, (logits, trig, adm) = jax.lax.scan(body, caches, tokens.T)
     return logits[-1], caches, {"evict_triggers": trig.sum(),
                                 "mean_admission": adm.mean()}
+
+
+def prefill_extend_ragged(params: Params, cfg: ModelConfig,
+                          tokens: jax.Array, lengths: jax.Array,
+                          caches: CacheTree, *, moe_groups: int = 1,
+                          opts: DecodeOptions = DecodeOptions(),
+                          scan_unroll: bool = False
+                          ) -> Tuple[jax.Array, CacheTree,
+                                     Dict[str, jax.Array]]:
+    """Ragged multi-row chunked prefill: advance B tasks in ONE scan.
+
+    ``tokens`` [B, S] holds each row's next prompt chunk left-aligned;
+    ``lengths`` [B] says how many of those S positions are real. Every
+    position runs through :func:`decode_step` exactly like the batch-1
+    extend, but all cache writes (KV, ring pointer, gate/eviction state)
+    at positions >= ``lengths[i]`` are masked out by a per-row select
+    against the pre-step tree — a short row's final cache state is
+    bit-identical to running the sequential scan over its real tokens
+    only, and a length-0 row is pure padding. Returns
+
+      * ``last_logits`` [B, V]: each row's logits at its LAST real
+        position (zeros for length-0 rows — the caller keeps its prior
+        logits for those),
+      * the advanced caches,
+      * per-row stats ``{"evict_trigger_rows": [B], "adm_sum_rows":
+        [B]}`` (sums over that row's real positions only), so serving
+        backends can account admission/eviction per request.
+    """
+    # batch axes differ per subtree ("t"/stem batch-leading, "blocks"
+    # stacked [n_repeats, B, ...], "obs" [n_repeats, n_attn, B, ...]);
+    # the splice helpers own that rule (lazy import: no load-time cycle)
+    from repro.launch.specs import cache_batch_axis
+
+    b, s = tokens.shape
+    active_mat = (jnp.arange(s, dtype=jnp.int32)[:, None]
+                  < lengths[None, :].astype(jnp.int32))       # [S, B]
+    logits_s = jax.eval_shape(
+        lambda c: decode_step(params, cfg, tokens[:, 0], c,
+                              moe_groups=moe_groups, opts=opts,
+                              scan_unroll=scan_unroll)[0], caches)
+
+    def body(carry, xs):
+        old, last_logits = carry
+        tok, active = xs                                      # [B], [B] bool
+
+        def keep(path, new_leaf, old_leaf):
+            shape = [1] * jnp.ndim(new_leaf)
+            shape[cache_batch_axis(path)] = b
+            return jnp.where(active.reshape(shape), new_leaf, old_leaf)
+
+        logits, new, st = decode_step(params, cfg, tok, old,
+                                      moe_groups=moe_groups, opts=opts,
+                                      scan_unroll=scan_unroll)
+        merged = jax.tree_util.tree_map_with_path(keep, new, old)
+        last_logits = jnp.where(active[:, None], logits, last_logits)
+        trig = jnp.where(active, st["evict_trigger_rows"], 0.0)
+        adm = jnp.where(active, st["mean_admission"], 0.0)
+        return (merged, last_logits), (trig, adm)
+
+    init = (caches, jnp.zeros(logits_s.shape, logits_s.dtype))
+    (caches, last_logits), (trig, adm) = jax.lax.scan(
+        body, init, (tokens.T, active_mat))
+    return last_logits, caches, {"evict_trigger_rows": trig.sum(axis=0),
+                                 "adm_sum_rows": adm.sum(axis=0)}

@@ -9,11 +9,20 @@ decode speedup) are comparative, so serving the baselines under the SAME
 scheduler/queue/telemetry stack is what makes an apples-to-apples A/B
 possible (``benchmarks/bench_serving.py --backends wgkv,dense``).
 
-Protocol surface (one request = one batch-1 prefill + one decode slot):
+Protocol surface (one request = one chunked prefill + one decode slot):
 
   * ``start_prefill(prompt) -> PrefillTask`` — open a chunked prefill.
-  * ``prefill_step(task, max_tokens) -> bool`` — advance by one chunk;
-    True once the full prompt is resident in the task's caches.
+  * ``prefill_step_batch(tasks, max_tokens) -> [bool]`` — advance EVERY
+    task by at most one chunk, running the model math for all
+    mid-prefill tasks as ONE batched ragged jitted call (tokens
+    ``[B, S]`` + per-row lengths; writes past a row's length are masked,
+    so each row's cache state is bit-identical to the sequential batch-1
+    path). Returns each task's done flag. Gated by
+    ``BackendCapabilities.batched_prefill``.
+  * ``prefill_step(task, max_tokens) -> bool`` — DEPRECATED batch-of-one
+    shim over ``prefill_step_batch`` (one deprecation cycle, like
+    ``generate()`` before it); kept so single-request callers and
+    backends without batched prefill keep working.
   * ``finish_prefill(task, emit_first=True) -> Prefix`` — seal the task;
     with ``emit_first`` the first generated token is sampled from the
     prefill's own last-position logits (no extra decode step, no
@@ -43,14 +52,13 @@ Decode is a TWO-PHASE surface so host work never blocks the device:
     discarded and its pool streams are left exactly as ``free_slot`` /
     ``insert`` put them (per-slot generation counters guard the race).
 
-``generate() -> {slot: token}`` remains as a synchronous shim —
-literally ``collect(dispatch_decode())`` — for one deprecation cycle so
-existing single-step callers and parity tests keep working; new drivers
-(ServeSession, the async orchestrator path) use dispatch/collect.
+(The ``generate()`` synchronous shim — ``collect(dispatch_decode())`` —
+served its one deprecation cycle and is gone; single-step callers run
+the two-phase surface directly.)
 
 Lifecycle of one request (slots are rows of one batched cache tree)::
 
-    submit ──> start_prefill ──> prefill_step* ──> finish_prefill
+    submit ──> start_prefill ──> prefill_step_batch* ──> finish_prefill
                                                         │ first token
                                                         v
                                        insert(prefix, slot)
@@ -137,6 +145,10 @@ class BackendCapabilities:
     # decode/extend run SPMD over a data x model device mesh (slots batch
     # over "data", KV heads over "model"; serving/sharded.py)
     sharded: bool = False
+    # prefill_step_batch advances every mid-prefill task in one batched
+    # ragged jitted call (the scheduler falls back to per-task
+    # prefill_step when False)
+    batched_prefill: bool = False
 
 
 @runtime_checkable
@@ -152,6 +164,10 @@ class EngineBackend(Protocol):
 
     def start_prefill(self, prompt: List[int]) -> PrefillTask: ...
 
+    def prefill_step_batch(self, tasks: List[PrefillTask],
+                           max_tokens: Optional[int] = None) -> List[bool]: ...
+
+    # deprecated batch-of-one shim: prefill_step_batch([task])[0]
     def prefill_step(self, task: PrefillTask,
                      max_tokens: Optional[int] = None) -> bool: ...
 
@@ -163,9 +179,6 @@ class EngineBackend(Protocol):
     def dispatch_decode(self) -> Optional[InflightStep]: ...
 
     def collect(self, step: InflightStep) -> Dict[int, int]: ...
-
-    # deprecated synchronous shim: collect(dispatch_decode())
-    def generate(self) -> Dict[int, int]: ...
 
     def free_slot(self, slot: int) -> None: ...
 

@@ -8,13 +8,13 @@ one arrival trace through this backend and the WG-KV backend yields the
 paper's comparative numbers (memory reduction, decode speedup) as a
 serving-level A/B instead of a microbenchmark.
 
-Shares the batched slot machinery (insert/generate/free via
+Shares the batched slot machinery (insert/dispatch-collect/free via
 launch/specs.py splice helpers) with the Engine base class; only the
 prefill path and the memory accounting differ:
 
   * prefill: dense causal attention has no window-alignment constraint, so
     the first chunk runs ``I.prefill(use_wgkv=False)`` at any length and
-    later chunks extend through the same teacher-forced scan (decode_step
+    later chunks ride the same batched ragged extend (decode_step
     dispatches on the cache type).
   * memory: no paged-pool mirror — the dense baseline's resident KV is
     exactly ``t`` tokens per (layer, kv-head) stream, reported logically
@@ -57,7 +57,7 @@ class DenseEngine(Engine):
         return BackendCapabilities(
             name="dense", gated=False, paged=False,
             description="uncompressed full-KV cache (no admission)",
-            sharded=self.mesh is not None)
+            sharded=self.mesh is not None, batched_prefill=True)
 
     def memory_snapshot(self) -> Dict[str, float]:
         toks = 0
@@ -101,40 +101,30 @@ class DenseEngine(Engine):
             f"prompt {len(prompt)} needs dense capacity > {len(prompt)}"
         return PrefillTask(prompt=list(prompt))
 
-    def prefill_step(self, task: PrefillTask,
-                     max_tokens: Optional[int] = None) -> bool:
-        if max_tokens is not None and max_tokens < 1:
-            raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
+    def _prefill_open(self, task: PrefillTask,
+                      max_tokens: Optional[int]) -> bool:
+        """Dense first chunk: no window-alignment constraint, so the
+        whole chunk runs through ``I.prefill(use_wgkv=False)`` at any
+        length and the task always consumes its tick (later chunks join
+        the shared ragged batched extend — decode_step dispatches on the
+        cache type)."""
         n = len(task.prompt)
-        if task.caches is None:
-            cap = n if max_tokens is None else min(n, max_tokens)
-            toks = jnp.asarray(task.prompt[:cap], jnp.int32)[None]
-            po, task.caches = I.prefill(
-                self.params, self.cfg, toks, use_wgkv=False,
-                max_len=self.capacity, opts=self.opts)
-            task.last_logits = po.logits
-            task.pos = cap
-            task.adm_weighted += 1.0 * cap     # dense admits every token
-            return task.done
-        remaining = n - task.pos
-        if remaining <= 0:
-            return True
-        take = remaining if max_tokens is None else min(remaining, max_tokens)
-        if max_tokens is not None and take == max_tokens:
-            # full chunk: one jitted scan call (stable shape -> one compile)
-            toks = jnp.asarray(task.prompt[task.pos:task.pos + take],
-                               jnp.int32)[None]
-            logits, task.caches, _ = self._extend(self.params, toks,
-                                                  task.caches)
-        else:
-            # ragged tail: fixed-shape batch-1 decode per token
-            for tok in task.prompt[task.pos:task.pos + take]:
-                logits, task.caches, _ = self._decode(
-                    self.params, jnp.asarray([tok], jnp.int32), task.caches)
-        task.last_logits = logits
-        task.adm_weighted += 1.0 * take
-        task.pos += take
-        return task.done
+        cap = n if max_tokens is None else min(n, max_tokens)
+        toks = jnp.asarray(task.prompt[:cap], jnp.int32)[None]
+        po, task.caches = I.prefill(
+            self.params, self.cfg, toks, use_wgkv=False,
+            max_len=self.capacity, opts=self.opts)
+        # sync like the wgkv open (whose float(mean_admission) blocks):
+        # the scheduler's prefill_time_s stage timer must see the open's
+        # device time, or dense's prefill_tokens_per_s reads inflated
+        jax.block_until_ready(po.logits)
+        task.last_logits = po.logits
+        task.pos = cap
+        task.adm_weighted += 1.0 * cap     # dense admits every token
+        return True
+
+    def _extend_admission(self, adm_sum, take: int, full: bool) -> float:
+        return 1.0 * take                  # dense admits every token
 
     # ------------------------------------------------------------------
     # capacity guard: a dense slot grows by one token per decode step

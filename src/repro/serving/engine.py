@@ -11,11 +11,14 @@ continuous-batching orchestrator (serving/orchestrator/) schedules
 backend-agnostically (dense full-KV and static-admission siblings live in
 serving/dense.py and serving/static_admission.py):
 
-  * ``start_prefill`` / ``prefill_step`` / ``finish_prefill`` — chunked
-    batch-1 prefill: the first chunk runs the budgeted vertical-slash
-    prefill on a ``w_local``-aligned prefix, later chunks extend the cache
-    through the teacher-forced ``prefill_extend`` scan, so a long prompt
-    never stalls in-flight decodes for more than one chunk.
+  * ``start_prefill`` / ``prefill_step_batch`` / ``finish_prefill`` —
+    chunked prefill: each task's first chunk runs the budgeted
+    vertical-slash prefill on a ``w_local``-aligned prefix (batch-1, its
+    own attention path), and EVERY mid-prefill task then advances through
+    one batched ragged ``prefill_extend_ragged`` scan per call — tokens
+    ``[B, S]`` with per-row lengths, masked so each row's cache state is
+    bit-identical to the sequential batch-1 path. ``prefill_step`` is the
+    deprecated batch-of-one shim over the same call.
   * ``insert(prefix, slot)`` — splice the batch-1 cache tree into the
     batched decode state (launch/specs.py helpers) and mirror it into the
     physical paged pool.
@@ -24,8 +27,8 @@ serving/dense.py and serving/static_admission.py):
     slots with the sampled next-token feed staying on device (so a
     second step can be dispatched behind it), collect is the host sync
     point that pulls tokens, folds stats, and applies the paged-mirror
-    delta. ``generate()`` is the synchronous ``collect(dispatch())``
-    shim kept for one deprecation cycle.
+    delta. (The ``generate()`` synchronous shim served its deprecation
+    cycle and is gone.)
   * ``free_slot(slot)`` — release the slot and reclaim its pool pages.
 
 The legacy fixed-slot loop (``add_request``/``step``/``run``) is kept as a
@@ -37,6 +40,7 @@ correctness check that theoretical paging actually serves the right bytes.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -105,10 +109,15 @@ class Engine(ShardedDecodeMixin):
             self.pool = paged.PagedKVPool(pool_pages, cfg.head_dim)
         self.params = self._sharding_setup(params, mesh)
         self._decode = self._make_decode()
-        self._extend = self._make_extend()
+        self._extend_batch = self._make_extend_batch()
         self._sample = self._make_sampler()
         self._tok_dev = jnp.zeros((slots,), jnp.int32)
-        self.stats = {"steps": 0, "evict_triggers": 0.0, "decode_adm_sum": 0.0}
+        self.stats = {"steps": 0, "evict_triggers": 0.0, "decode_adm_sum": 0.0,
+                      # extend-phase advances only (the path batching
+                      # coalesces; first-chunk opens excluded): wall time
+                      # is a true device measure because _extend_ragged
+                      # syncs on the step's stats before returning
+                      "extend_time_s": 0.0, "extend_tokens": 0.0}
 
     # ------------------------------------------------------------------
     # EngineBackend protocol: descriptor + memory telemetry
@@ -117,7 +126,7 @@ class Engine(ShardedDecodeMixin):
         return BackendCapabilities(
             name="wgkv", gated=True, paged=self.mirror,
             description="write-gated dual cache (learned admission)",
-            sharded=self.mesh is not None)
+            sharded=self.mesh is not None, batched_prefill=True)
 
     def memory_snapshot(self) -> Dict[str, float]:
         """Point-in-time memory telemetry: resident logical KV tokens/bytes
@@ -160,59 +169,116 @@ class Engine(ShardedDecodeMixin):
 
     def prefill_step(self, task: PrefillTask,
                      max_tokens: Optional[int] = None) -> bool:
-        """Advance a prefill task by at most ``max_tokens`` prompt tokens
-        (None = the whole remaining prompt). The first chunk runs the
-        budgeted vertical-slash prefill on a window-aligned prefix; later
-        chunks extend through the jitted teacher-forced scan. Returns True
-        when the full prompt is resident in the task's caches."""
+        """DEPRECATED batch-of-one shim over :meth:`prefill_step_batch`
+        (one deprecation cycle, like ``generate()`` before it): single-
+        request callers advance through the same ragged batched path at
+        B = 1, so the shim and the batch are bit-identical by
+        construction."""
+        return self.prefill_step_batch([task], max_tokens)[0]
+
+    def prefill_step_batch(self, tasks: List[PrefillTask],
+                           max_tokens: Optional[int] = None) -> List[bool]:
+        """Advance EVERY task by at most ``max_tokens`` prompt tokens
+        (None = each task's whole remaining prompt). A task's first
+        chunk runs the budgeted vertical-slash prefill on a
+        window-aligned prefix (batch-1 — a different attention path than
+        the extend scan, so it cannot join the ragged batch without
+        changing bits); every other mid-prefill task advances through
+        ONE batched ragged jitted extend — tokens ``[B, S]`` plus
+        per-row lengths, writes past a row's length masked so shorter
+        rows are pure padding with cache state bit-identical to the
+        sequential batch-1 path. Returns each task's done flag."""
         if max_tokens is not None and max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
+        extend: List[PrefillTask] = []
+        for task in tasks:
+            if task.caches is None and self._prefill_open(task, max_tokens):
+                continue        # aligned one-shot head consumed this tick
+            if task.pos < len(task.prompt):
+                extend.append(task)
+        if extend:
+            self._extend_ragged(extend, max_tokens)
+        return [t.done for t in tasks]
+
+    def _prefill_open(self, task: PrefillTask,
+                      max_tokens: Optional[int]) -> bool:
+        """Open a fresh task's caches. Runs the budgeted one-shot prefill
+        over the window-aligned prompt head when at least one full window
+        fits this chunk (returns True: the task consumed its tick), else
+        allocates empty decode caches so the task can join this tick's
+        ragged extend batch (returns False)."""
         w = self._w_align
         n = len(task.prompt)
-        budget = self.cfg.wgkv.global_budget(self.capacity)
-        if task.caches is None:
-            cap = n if max_tokens is None else min(n, max_tokens)
-            n0 = (cap // w) * w
-            if n0 >= w:
-                toks = jnp.asarray(task.prompt[:n0], jnp.int32)[None]
-                po, task.caches = I.prefill(
-                    self.params, self.cfg, toks, budget=budget,
-                    max_len=self.capacity, opts=self.opts)
-                task.pos = n0
-                task.adm_weighted += float(po.mean_admission) * n0
-                task.last_logits = po.logits
-                return task.done
-            task.caches = build_decode_caches(
-                self.cfg, 1, self.capacity, use_wgkv=True, prefilled=0)
-            if self.opts.evict_hard_budget is not None:
-                task.caches["obs"] = I._init_obs_tree(self.cfg, 1, self.opts)
-        remaining = n - task.pos
-        if remaining <= 0:
+        cap = n if max_tokens is None else min(n, max_tokens)
+        n0 = (cap // w) * w
+        if n0 >= w:
+            budget = self.cfg.wgkv.global_budget(self.capacity)
+            toks = jnp.asarray(task.prompt[:n0], jnp.int32)[None]
+            po, task.caches = I.prefill(
+                self.params, self.cfg, toks, budget=budget,
+                max_len=self.capacity, opts=self.opts)
+            task.pos = n0
+            task.adm_weighted += float(po.mean_admission) * n0
+            task.last_logits = po.logits
             return True
-        take = remaining if max_tokens is None else min(remaining, max_tokens)
-        if max_tokens is not None and take == max_tokens:
-            # full chunk: one jitted scan call (stable shape -> one compile)
-            toks = jnp.asarray(task.prompt[task.pos:task.pos + take],
-                               jnp.int32)[None]
-            logits, task.caches, st = self._extend(self.params, toks,
-                                                   task.caches)
-            self.stats["evict_triggers"] += float(st["evict_triggers"])
-            task.adm_weighted += float(st["mean_admission"]) * take
+        task.caches = build_decode_caches(
+            self.cfg, 1, self.capacity, use_wgkv=True, prefilled=0)
+        if self.opts.evict_hard_budget is not None:
+            task.caches["obs"] = I._init_obs_tree(self.cfg, 1, self.opts)
+        return False
+
+    def _extend_ragged(self, tasks: List[PrefillTask],
+                       max_tokens: Optional[int]) -> None:
+        """ONE batched ragged extend for every mid-prefill task. ``S`` is
+        pinned to ``max_tokens`` when chunked, and rounded up to a
+        ``w_align`` multiple when unchunked — one compiled shape per
+        batch width instead of one per distinct tail length; rows whose
+        remaining prompt is shorter are masked padding past their
+        length. At B = 1 the task's own batch-1 tree feeds the scan
+        directly — no stack/unstack round trip."""
+        t_wall = time.perf_counter()
+        takes = [len(t.prompt) - t.pos if max_tokens is None
+                 else min(len(t.prompt) - t.pos, max_tokens) for t in tasks]
+        if max_tokens is None:
+            q = self._w_align
+            s = -(-max(takes) // q) * q
         else:
-            # ragged tail: reuse the fixed-shape batch-1 decode per token
-            # instead of compiling a scan for every distinct tail length;
-            # stats stay on device until the loop ends (no per-token sync)
-            trigs, adms = [], []
-            for tok in task.prompt[task.pos:task.pos + take]:
-                logits, task.caches, st = self._decode(
-                    self.params, jnp.asarray([tok], jnp.int32), task.caches)
-                trigs.append(st["evict_triggers"])
-                adms.append(st["mean_admission"][0])
-            self.stats["evict_triggers"] += float(jnp.stack(trigs).sum())
-            task.adm_weighted += float(jnp.stack(adms).sum())
-        task.last_logits = logits
-        task.pos += take
-        return task.done
+            s = max_tokens
+        b = len(tasks)
+        toks = np.zeros((b, s), np.int32)
+        for i, (t, take) in enumerate(zip(tasks, takes)):
+            toks[i, :take] = t.prompt[t.pos:t.pos + take]
+        batched = tasks[0].caches if b == 1 \
+            else self.batched_prefill_stack([t.caches for t in tasks])
+        logits, batched, st = self._extend_batch(
+            self.params,
+            (jnp.asarray(toks), jnp.asarray(takes, jnp.int32)), batched)
+        outs = (batched,) if b == 1 \
+            else self.batched_prefill_unstack(batched, b)
+        trig, adm = jax.device_get((st["evict_trigger_rows"],
+                                    st["adm_sum_rows"]))
+        # the device_get above blocked on the extend, so this wall delta
+        # is a true device+host measure of the coalesced advance — the
+        # batched-vs-per-request axis bench_serving's speedup rides on
+        self.stats["extend_time_s"] += time.perf_counter() - t_wall
+        self.stats["extend_tokens"] += float(sum(takes))
+        self.stats["evict_triggers"] += float(trig.sum())
+        for i, (t, take) in enumerate(zip(tasks, takes)):
+            t.caches = outs[i]
+            t.last_logits = logits[i:i + 1]
+            t.adm_weighted += self._extend_admission(
+                adm[i], take, full=(max_tokens is not None
+                                    and take == max_tokens))
+            t.pos += take
+
+    def _extend_admission(self, adm_sum, take: int, full: bool) -> float:
+        """Admission mass one ragged extend adds to a task's
+        ``adm_weighted``, mirroring the sequential accounting: a full
+        chunk records mean * take (float32 mean, like the device scan's),
+        a ragged tail the raw per-step sum."""
+        if full:
+            return float(np.float32(adm_sum) / np.float32(take)) * take
+        return float(adm_sum)
 
     def finish_prefill(self, task: PrefillTask, *,
                        emit_first: bool = True) -> Prefix:
@@ -246,7 +312,7 @@ class Engine(ShardedDecodeMixin):
         return self.finish_prefill(task, emit_first=emit_first)
 
     # ------------------------------------------------------------------
-    # JetStream-style backend API: insert / generate / free
+    # JetStream-style backend API: insert / dispatch-collect / free
     # ------------------------------------------------------------------
     def insert(self, prefix: Prefix, slot: int) -> None:
         """Splice a prefix's caches into batch row ``slot`` (device-put
@@ -336,13 +402,6 @@ class Engine(ShardedDecodeMixin):
             self.last_token[s] = tok
             out[s] = tok
         return out
-
-    def generate(self) -> Dict[int, int]:
-        """Deprecated synchronous shim: one batched decode step, i.e.
-        ``collect(dispatch_decode())``. New drivers use the two-phase
-        surface directly."""
-        step = self.dispatch_decode()
-        return self.collect(step) if step is not None else {}
 
     def _decode_admission(self, st, live_rows: List[int]) -> float:
         """Mean write-gate admission over live rows for one decode step."""
@@ -493,7 +552,7 @@ class Engine(ShardedDecodeMixin):
                         self.pool.overwrite(lkey_, p, kvec, vvec)
 
     # ------------------------------------------------------------------
-    # legacy fixed-slot loop (thin layer over prefill/insert/generate)
+    # legacy fixed-slot loop (thin layer over prefill/insert/dispatch)
     # ------------------------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int = 32) -> int:
         rid = self._next_rid
@@ -531,7 +590,8 @@ class Engine(ShardedDecodeMixin):
             req.out.append(prefix.first_token)
             emitted[req.rid] = prefix.first_token
             self._retire_if_done(req, slot, prefix.first_token)
-        emitted_slots = self.generate()
+        inflight = self.dispatch_decode()
+        emitted_slots = self.collect(inflight) if inflight is not None else {}
         for slot, tok in emitted_slots.items():
             rid = self.slot_rid[slot]
             if rid is None:

@@ -47,6 +47,10 @@ class ServeRequest:
     out: List[int] = dataclasses.field(default_factory=list)
     finish_t: Optional[float] = None
     mean_admission: Optional[float] = None
+    # chunks THIS request's prefill advanced by (batched advances still
+    # count one chunk per task per tick; the per-request view dashboards
+    # keep when the global prefill_chunks/prefill_batches split changed)
+    prefill_chunks: int = 0
     # absolute wall-clock deadline (arrival_t + deadline_s); the
     # orchestrator cancels the request when the clock passes it
     deadline_t: Optional[float] = None

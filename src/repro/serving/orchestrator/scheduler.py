@@ -16,18 +16,24 @@ Each tick interleaves four kinds of work:
      ``dispatch_ahead`` steps in flight (the on-device sampled-token
      feed lets step t+1 queue behind step t — JetStream's driver-thread
      overlap without threads);
-  3. **chunked prefill** — advance in-flight prefill tasks by one
-     ``chunk_tokens`` chunk (``w_local``-aligned inside the engine), so a
-     long prompt never blocks the batched decode for more than a chunk;
-     when a task completes it is inserted and its first token streams
-     immediately (TTFT ends here, JetStream-style). All of this host +
-     batch-1 work overlaps the in-flight batched decode;
+  3. **batched chunked prefill** — advance up to ``max_prefill_batch``
+     in-flight prefill tasks by one ``chunk_tokens`` chunk in ONE
+     batched ragged jitted call (``prefill_step_batch``: tokens
+     ``[B, S]`` + per-row lengths, Sarathi-style piggybacked chunking),
+     so a long prompt never blocks the batched decode for more than a
+     chunk and concurrent prefills no longer serialize into B batch-1
+     dispatches; when a task completes it is inserted and its first
+     token streams immediately (TTFT ends here, JetStream-style). All
+     of this work overlaps the in-flight batched decode. Backends
+     without ``capabilities().batched_prefill`` (and runs with
+     ``SchedulerConfig.batched_prefill=False``, the parity baseline)
+     fall back to per-task ``prefill_step`` calls;
   4. **collect** — synchronize the OLDEST in-flight step (host
      mirroring, sampling pull, stats) and stream one token per live
      request; finished requests free their slot and paged-pool pages on
      the spot so the next arrival can join. With ``dispatch_ahead=0``
-     this degrades to the synchronous ``generate()`` path (the PR-3
-     behavior, kept as the parity baseline).
+     this degrades to one synchronous dispatch+collect per tick (the
+     PR-3 behavior, kept as the parity baseline).
 
 The Scheduler is the pure policy (how many to admit, how many prefill
 tasks to advance, whether to decode); the Orchestrator executes the plan
@@ -47,15 +53,33 @@ from repro.serving.orchestrator.queue import (InvalidRequest, QueueFull,
 from repro.serving.orchestrator.stream import OnToken, StreamMux
 from repro.serving.orchestrator.telemetry import Telemetry
 
+# engine-side stat counters mirrored into telemetry as deltas relative to
+# the orchestrator's birth (engines are reusable across replays):
+# eviction/admission plus the extend-phase advance counters
+# (extend_tokens / extend_time_s — the batched-prefill coalescing axis)
+_ENGINE_STAT_KEYS = ("evict_triggers", "decode_adm_sum",
+                     "extend_time_s", "extend_tokens")
+
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     chunk_tokens: int = 64        # prefill tokens per task per tick
-    prefill_concurrency: int = 1  # prefill tasks advanced per tick
+    # prefill tasks advanced per tick — in ONE batched ragged device call
+    # when the backend supports it. None = every in-flight prefill, every
+    # tick (bounded by the slot count, since each task holds a reserved
+    # slot); set a cap to bound the batched call's latency on deep models.
+    # (Replaces the retired ``prefill_concurrency`` knob, whose "how many
+    # separate batch-1 calls per tick" semantics the batched path made
+    # vacuous.)
+    max_prefill_batch: Optional[int] = None
+    # False = advance each task through a separate per-task prefill_step
+    # call even when the backend can batch (the parity/regression
+    # baseline bench_serving A/Bs against)
+    batched_prefill: bool = True
     decode_while_prefill: bool = True  # decode between prefill chunks
     # decode steps kept in flight on the device (two-phase
-    # dispatch/collect; backend.py). 0 = synchronous generate() per tick
-    # (the pre-async behavior, kept as the parity/regression baseline);
+    # dispatch/collect; backend.py). 0 = one synchronous dispatch+collect
+    # per tick (the pre-async behavior, the parity/regression baseline);
     # >= 1 dispatches step t+1 before step t's result touches the host,
     # so per-tick host work (paged-pool mirroring, sampling pulls,
     # chunked prefill) overlaps device compute.
@@ -72,8 +96,8 @@ class SchedulerConfig:
     def __post_init__(self):
         if self.chunk_tokens < 1:
             raise ValueError(f"chunk_tokens must be >= 1, got {self.chunk_tokens}")
-        if self.prefill_concurrency < 1:
-            raise ValueError("prefill_concurrency must be >= 1")
+        if self.max_prefill_batch is not None and self.max_prefill_batch < 1:
+            raise ValueError("max_prefill_batch must be >= 1 or None")
         if self.dispatch_ahead < 0:
             raise ValueError("dispatch_ahead must be >= 0")
         if self.memory_sample_every < 1:
@@ -96,7 +120,9 @@ class Scheduler:
     def plan(self, *, free_slots: int, queue_depth: int,
              active_prefills: int, live_decodes: int) -> Plan:
         admit = min(free_slots, queue_depth)
-        advance = min(active_prefills + admit, self.cfg.prefill_concurrency)
+        advance = active_prefills + admit
+        if self.cfg.max_prefill_batch is not None:
+            advance = min(advance, self.cfg.max_prefill_batch)
         decode = live_decodes > 0 and (
             self.cfg.decode_while_prefill or (active_prefills + admit) == 0)
         return Plan(admit=admit, advance_prefills=advance, decode=decode)
@@ -127,6 +153,10 @@ class Orchestrator:
         # engines are reusable (e.g. benchmark warmup); report stat deltas
         # relative to this orchestrator's birth, not engine lifetime totals
         self._stats0 = dict(engine.stats)
+        # one capability probe at construction: whether prefill advances
+        # go through the batched ragged call or per-task shim calls
+        self._batched_prefill = (sched.batched_prefill
+                                 and engine.capabilities().batched_prefill)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 32,
@@ -240,24 +270,44 @@ class Orchestrator:
             self._prefills[req.rid] = (req, self.engine.start_prefill(req.prompt))
             worked = True
 
-        # 2) chunked prefill: advance the oldest in-flight tasks (runs
-        # while up to ``depth`` decode steps from earlier ticks are still
-        # in flight — the overlap dispatch-ahead exists for)
-        for rid in list(self._prefills)[:plan.advance_prefills]:
-            req, task = self._prefills[rid]
-            pos0 = task.pos
-            done = self.engine.prefill_step(
-                task, self.scheduler.cfg.chunk_tokens)
-            self.telemetry.bump("prefill_chunks")
-            self.telemetry.bump("prefill_tokens", task.pos - pos0)
+        # 2) batched chunked prefill: advance the oldest in-flight tasks,
+        # ALL through one batched ragged device call when the backend can
+        # (runs while up to ``depth`` decode steps from earlier ticks are
+        # still in flight — the overlap dispatch-ahead exists for)
+        adv = list(self._prefills)[:plan.advance_prefills]
+        if adv:
+            pairs = [self._prefills[rid] for rid in adv]
+            tasks = [task for _, task in pairs]
+            pos0 = [task.pos for task in tasks]
+            chunk = self.scheduler.cfg.chunk_tokens
+            t0 = self.clock()
+            if self._batched_prefill:
+                dones = self.engine.prefill_step_batch(tasks, chunk)
+            else:
+                # per-task fallback: the deprecated batch-of-one shim
+                dones = [self.engine.prefill_step(task, chunk)
+                         for task in tasks]
+            # stage wall time + advance calls (one batched call vs one
+            # per task): the axes bench_serving's batched_prefill_speedup
+            # rides on — total replay wall would drown the prefill stage
+            # in decode time on decode-heavy traces
+            self.telemetry.bump("prefill_time_s", self.clock() - t0)
+            self.telemetry.bump("prefill_batches",
+                                1 if self._batched_prefill else len(tasks))
             worked = True
-            if done:
-                prefix = self.engine.finish_prefill(task, emit_first=True)
-                self.engine.insert(prefix, req.slot)
-                req.state = "decode"
-                req.mean_admission = prefix.mean_admission
-                del self._prefills[rid]
-                self._deliver(req, prefix.first_token)
+            for rid, (req, task), p0, done in zip(adv, pairs, pos0, dones):
+                # per-task accounting is unchanged by batching: one chunk
+                # per task per tick, tokens from the task's own cursor
+                self.telemetry.bump("prefill_chunks")
+                self.telemetry.bump("prefill_tokens", task.pos - p0)
+                req.prefill_chunks += 1
+                if done:
+                    prefix = self.engine.finish_prefill(task, emit_first=True)
+                    self.engine.insert(prefix, req.slot)
+                    req.state = "decode"
+                    req.mean_admission = prefix.mean_admission
+                    del self._prefills[rid]
+                    self._deliver(req, prefix.first_token)
 
         # 3) dispatch-ahead: top up the in-flight window AFTER inserts
         # (a freshly inserted row joins the very next step, exactly like
@@ -281,7 +331,7 @@ class Orchestrator:
                 worked = True
 
         # 4) decode result: collect the OLDEST in-flight step (the host
-        # sync point), or run one synchronous generate() when async
+        # sync point), or run one synchronous dispatch+collect when async
         # dispatch is off
         out: Dict[int, int] = {}
         if self._inflight:
@@ -289,8 +339,9 @@ class Orchestrator:
             self.telemetry.bump("decode_steps")
             worked = True
         elif depth == 0 and plan.decode:
-            out = self.engine.generate()
-            if out:
+            step = self.engine.dispatch_decode()
+            if step is not None:
+                out = self.engine.collect(step)
                 self.telemetry.bump("decode_steps")
                 worked = True
         for slot, tok in out.items():
@@ -299,7 +350,7 @@ class Orchestrator:
                 self._deliver(req, tok)
 
         self.telemetry.counters["rejected"] = float(self.queue.rejected)
-        for k in ("evict_triggers", "decode_adm_sum"):
+        for k in _ENGINE_STAT_KEYS:
             self.telemetry.counters[k] = \
                 self.engine.stats.get(k, 0.0) - self._stats0.get(k, 0.0)
         return worked
@@ -323,7 +374,8 @@ class Orchestrator:
                 rid=req.rid, prompt_len=len(req.prompt), n_out=len(req.out),
                 ttft=st.ttft, tpot=st.tpot,
                 e2e=req.finish_t - req.arrival_t,
-                mean_admission=req.mean_admission)
+                mean_admission=req.mean_admission,
+                prefill_chunks=req.prefill_chunks)
 
     # ------------------------------------------------------------------
     def drain(self) -> None:
@@ -339,7 +391,7 @@ class Orchestrator:
                     self._deliver(req, tok)
             # collect folded this step's eviction/admission stats into
             # engine.stats after the last tick's counter sync ran
-            for k in ("evict_triggers", "decode_adm_sum"):
+            for k in _ENGINE_STAT_KEYS:
                 self.telemetry.counters[k] = \
                     self.engine.stats.get(k, 0.0) - self._stats0.get(k, 0.0)
 

@@ -25,6 +25,9 @@ class RequestRecord:
     tpot: Optional[float]
     e2e: Optional[float]
     mean_admission: Optional[float]
+    # chunks this request's prefill took (batched ticks count one chunk
+    # per task, same as the per-request driver)
+    prefill_chunks: int = 0
 
 
 def _pct(xs: List[float], q: float) -> Optional[float]:
@@ -44,6 +47,18 @@ class Telemetry:
         self.t_end: Optional[float] = None
         self.counters: Dict[str, float] = {
             "ticks": 0, "decode_steps": 0, "prefill_chunks": 0,
+            # prefill ADVANCE calls: one batched ragged call covers many
+            # tasks, so prefill_batches <= prefill_chunks (equal only
+            # under the per-request driver) — prefill_chunks keeps its
+            # one-per-task-per-tick meaning. (A task's first aligned
+            # chunk additionally runs its own batch-1 prefill inside the
+            # call, so this is not an exact device-dispatch count.)
+            "prefill_batches": 0,
+            # wall seconds spent in the tick loop's prefill-advance stage
+            # (open + batched/per-task extend calls, incl. their device
+            # sync): prefill_tokens / prefill_time_s is the prompt-ingest
+            # rate the batched-prefill A/B compares
+            "prefill_time_s": 0.0,
             "prefill_tokens": 0, "generated_tokens": 0, "completed": 0,
             "rejected": 0, "evict_triggers": 0.0,
             # async driver + client-surface lifecycle (scheduler/session)
@@ -87,9 +102,11 @@ class Telemetry:
     def record_request(self, *, rid: int, prompt_len: int, n_out: int,
                        ttft: Optional[float], tpot: Optional[float],
                        e2e: Optional[float],
-                       mean_admission: Optional[float]) -> None:
+                       mean_admission: Optional[float],
+                       prefill_chunks: int = 0) -> None:
         self.records.append(RequestRecord(rid, prompt_len, n_out, ttft,
-                                          tpot, e2e, mean_admission))
+                                          tpot, e2e, mean_admission,
+                                          prefill_chunks))
         self.bump("completed")
         self.bump("generated_tokens", n_out)
 
@@ -121,6 +138,9 @@ class Telemetry:
             "tpot_mean_s": _mean(tpots),
             "tpot_p50_s": _pct(tpots, 50),
             "tpot_p90_s": _pct(tpots, 90),
+            "tpot_p99_s": _pct(tpots, 99),
+            "prefill_chunks_per_request_mean": _mean(
+                [float(r.prefill_chunks) for r in self.records]),
             "e2e_mean_s": _mean(e2es),
             "mean_admission": _mean(adms),
             "pool_util_mean": _mean(self.pool_util_samples),
@@ -155,7 +175,8 @@ class Telemetry:
             f"throughput: {f(s['requests_per_s'])} req/s, "
             f"{f(s['tokens_per_s'])} tok/s "
             f"(decode_steps={c['decode_steps']:.0f}, "
-            f"prefill_chunks={c['prefill_chunks']:.0f}, "
+            f"prefill_chunks={c['prefill_chunks']:.0f} "
+            f"in {c['prefill_batches']:.0f} batches, "
             f"prefill_tokens={c['prefill_tokens']:.0f})",
             f"TTFT: mean={f(s['ttft_mean_s'], 'ms', 1e3)} "
             f"p50={f(s['ttft_p50_s'], 'ms', 1e3)} "

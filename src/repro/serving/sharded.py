@@ -1,9 +1,11 @@
 """Mesh-sharded serving execution: one SPMD decode step over all slots.
 
 The serving backends (engine.py / dense.py / static_admission.py) jit the
-same two model entry points — ``decode_step`` over the batched slot state
-and ``prefill_extend`` over a batch-1 chunk. This module is the single
-place where a ``jax.sharding.Mesh`` enters that path, so every backend
+same two model entry points — ``decode_step`` over the batched slot
+state and the ragged ``prefill_extend_ragged`` over every mid-prefill
+task at once (rows over "data"; a batch-of-one call serves the
+single-task shim). This module is the single place where a
+``jax.sharding.Mesh`` enters that path, so every backend
 (and therefore the whole A/B harness) scales across a data x model device
 mesh without the orchestrator or scheduler changing at all:
 
@@ -15,10 +17,10 @@ mesh without the orchestrator or scheduler changing at all:
     batch over "data", KV heads over "model" (with the repo's
     divisibility fallback to replication — phi3's 10 KV heads on a
     model=4 mesh replicate rather than pad).
-  * ``decode_step`` / ``prefill_extend`` are jitted with **explicit
-    in/out shardings** (memoized per input structure, since the batched
-    and batch-1 trees differ), so the cache layout is pinned across
-    steps instead of drifting with whatever GSPMD infers.
+  * ``decode_step`` / ``prefill_extend_ragged`` are jitted with
+    **explicit in/out shardings** (memoized per input structure, since
+    the batched and batch-1 trees differ), so the cache layout is pinned
+    across steps instead of drifting with whatever GSPMD infers.
   * ``insert`` splices a batch-1 prefix into the batched tree under jit
     with the prefix device-put row-wise and the output pinned back to
     the canonical batched shardings.
@@ -41,7 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.launch.specs import splice_caches
+from repro.launch.specs import (alloc_batched_caches, extract_slot_caches,
+                                splice_caches)
 from repro.models import inference as I
 from repro.serving.sampling import sample
 from repro.sharding import rules
@@ -152,15 +155,21 @@ class ShardedDecodeMixin:
         return jax.jit(fn) if self.mesh is None \
             else self._mesh_jit(fn, kind="decode")
 
-    def _make_extend(self) -> Callable:
-        """(params, tokens [B, S], caches) -> (logits, caches, stats)."""
+    def _make_extend_batch(self) -> Callable:
+        """(params, (tokens [B, S], lengths [B]), caches) ->
+        (last_logits [B, V], caches, per-row stats): the batched ragged
+        prefill extend. Under a mesh the prefill rows shard over "data"
+        (tokens, lengths, logits, and the batched cache tree all pinned
+        with explicit in/out shardings via the same memoized-spec
+        machinery as decode)."""
 
-        def fn(params, tokens, caches):
-            return I.prefill_extend(params, self.cfg, tokens, caches,
-                                    opts=self.opts)
+        def fn(params, feed, caches):
+            tokens, lengths = feed
+            return I.prefill_extend_ragged(params, self.cfg, tokens,
+                                           lengths, caches, opts=self.opts)
 
         return jax.jit(fn) if self.mesh is None \
-            else self._mesh_jit(fn, kind="extend")
+            else self._mesh_jit(fn, kind="extend_batch")
 
     def _make_sampler(self) -> Callable:
         """(key, logits [B, V]) -> tokens [B] int32, sampled ON DEVICE.
@@ -182,8 +191,9 @@ class ShardedDecodeMixin:
     def _mesh_jit(self, fn: Callable, *, kind: str) -> Callable:
         """Wrap ``fn(params, tokens, caches)`` with explicit in/out
         shardings, memoized per (tokens, caches) structure — the batched
-        decode and the batch-1 prefill tail share one engine but need
-        different placements."""
+        decode, the batch-1 prefill tail, and the ragged batched extend
+        (where ``tokens`` is a ``(tokens [B, S], lengths [B])`` feed
+        tree) share one engine but need different placements."""
 
         def call(params, tokens, caches):
             key = (kind,) + _struct_key((tokens, caches))
@@ -202,8 +212,12 @@ class ShardedDecodeMixin:
     def _build_mesh_jit(self, fn, tokens, caches):
         mesh, cfg = self.mesh, self.cfg
         csh = self.cache_shardings_for(caches)
-        b = int(np.shape(tokens)[0])
-        tok_sh = self._row_sharding(b, np.ndim(tokens))
+        # every leaf of the feed tree (a bare token array, or the ragged
+        # extend's (tokens, lengths) pair) is batch-leading: rows over
+        # "data" when the batch divides
+        b = int(np.shape(jax.tree_util.tree_leaves(tokens)[0])[0])
+        tok_sh = jax.tree.map(
+            lambda x: self._row_sharding(b, np.ndim(x)), tokens)
         out_struct = jax.eval_shape(fn, self.params, tokens, caches)
         logits_s, caches_s, stats_s = out_struct
 
@@ -218,6 +232,68 @@ class ShardedDecodeMixin:
         jfn = jax.jit(fn, in_shardings=(self._param_sh, tok_sh, csh),
                       out_shardings=out_sh)
         return jfn, tok_sh, csh
+
+    # ------------------------------------------------------------------
+    # batched ragged prefill: stack / unstack around the one jitted call
+    # ------------------------------------------------------------------
+    def batched_prefill_stack(self, trees):
+        """Stack B batch-1 prefill cache trees into one batch-B tree in a
+        single jitted call (memoized per structure; under a mesh the
+        result is pinned to the canonical batched shardings — prefill
+        rows over "data", KV heads over "model").
+
+        Rows are written with the same dynamic-update-slice splice the
+        decode ``insert`` path uses, NOT a batch-axis concatenate: XLA
+        CPU's SPMD partitioner miscomputes mixed-tiling concats (the
+        PR-3 gate_features bug all over again — replicated batch-1
+        inputs concatenated straight into a "data"-sharded batch axis
+        come out permuted)."""
+        trees = tuple(trees)
+        n = len(trees)
+        key = ("stack", n) + _struct_key(trees)
+        ent = self._fn_cache.get(key)
+        if ent is None:
+
+            def fn(ts):
+                out = alloc_batched_caches(ts[0], n)
+                for i, t in enumerate(ts):
+                    out = splice_caches(out, t, i)
+                return out
+
+            if self.mesh is None:
+                ent = (jax.jit(fn), None)
+            else:
+                osh = rules.cache_shardings(
+                    jax.eval_shape(fn, trees), self.mesh, self.cfg)
+                ish = tuple(self.cache_shardings_for(t) for t in trees)
+                ent = (jax.jit(fn, in_shardings=(ish,),
+                               out_shardings=osh), ish)
+            self._fn_cache[key] = ent
+        jfn, ish = ent
+        if ish is not None:
+            trees = jax.device_put(trees, ish)
+        return jfn(trees)
+
+    def batched_prefill_unstack(self, batched, n: int):
+        """Slice a batch-``n`` prefill cache tree back into ``n`` batch-1
+        trees in a single jitted call (inverse of
+        :meth:`batched_prefill_stack`; bitwise row-preserving)."""
+        key = ("unstack", n) + _struct_key(batched)
+        ent = self._fn_cache.get(key)
+        if ent is None:
+
+            def fn(bt):
+                return tuple(extract_slot_caches(bt, i) for i in range(n))
+
+            if self.mesh is None:
+                ent = jax.jit(fn)
+            else:
+                osh = tuple(rules.cache_shardings(t, self.mesh, self.cfg)
+                            for t in jax.eval_shape(fn, batched))
+                ent = jax.jit(fn, in_shardings=(
+                    self.cache_shardings_for(batched),), out_shardings=osh)
+            self._fn_cache[key] = ent
+        return ent(batched)
 
     # ------------------------------------------------------------------
     # sharded slot splice (insert)

@@ -71,4 +71,4 @@ class StaticAdmissionEngine(Engine):
             name=self.policy, gated=True, paged=self.mirror,
             description="static admission baseline "
                         "(position/head-only write gate)",
-            sharded=self.mesh is not None)
+            sharded=self.mesh is not None, batched_prefill=True)

@@ -21,6 +21,13 @@ from repro.serving.paged import PAGE_SIZE
 pytestmark = pytest.mark.backends
 
 
+def _generate(eng):
+    """One synchronous batched decode step through the two-phase surface
+    (the retired ``generate()`` shim, inlined at its call sites)."""
+    step = eng.dispatch_decode()
+    return eng.collect(step) if step is not None else {}
+
+
 @pytest.fixture(scope="module")
 def served():
     # tau=0.5 gates a nonzero fraction of tokens even at random init, so
@@ -108,7 +115,7 @@ def test_dense_capacity_overflow_fails_loudly(served):
     eng.insert(prefix, 0)
     with pytest.raises(RuntimeError, match="dense cache overflow"):
         for _ in range(8):
-            eng.generate()
+            _generate(eng)
 
 
 def test_dense_chunked_prefill_matches_one_shot(served):
@@ -163,30 +170,31 @@ def test_ab_admission_gated_only(served):
 def test_free_slot_resets_last_token(served):
     """A retired slot keeps decoding (masked) in the batched step; its
     ``last_token`` must be zeroed on free so the dead row feeds token 0,
-    not a replay of its final token — and generate() enforces it."""
+    not a replay of its final token — and dispatch_decode enforces it."""
     cfg, params = served
     eng = make_backend("wgkv", params, cfg, slots=2, capacity=128,
                        mirror_paged=False)
     eng.insert(eng.prefill(list(range(10, 58))), 0)
     eng.insert(eng.prefill(list(range(30, 78))), 1)
-    assert eng.generate().keys() == {0, 1}
+    assert _generate(eng).keys() == {0, 1}
     eng.free_slot(0)
     assert eng.last_token[0] == 0
-    out = eng.generate()            # row 0 dead: only slot 1 emits
+    out = _generate(eng)            # row 0 dead: only slot 1 emits
     assert set(out) == {1}
-    # a stale token on a dead row is exactly the bug generate() refuses
+    # a stale token on a dead row is exactly the bug dispatch refuses
     eng.last_token[0] = 123
     with pytest.raises(AssertionError, match="stale"):
-        eng.generate()
+        _generate(eng)
 
 
 # ==========================================================================
-# two-phase decode: dispatch/collect == generate, dispatch-ahead safe
+# two-phase decode: pipelined dispatch/collect == synchronous, safe
 # ==========================================================================
-def test_dispatch_collect_matches_generate(served):
-    """The two-phase surface must emit exactly what the synchronous shim
-    does: dispatching step t+1 before collecting step t (depth 2) cannot
-    change any live row's greedy token."""
+def test_dispatch_ahead_matches_synchronous(served):
+    """The pipelined two-phase surface must emit exactly what the
+    synchronous one-step-at-a-time driver does: dispatching step t+1
+    before collecting step t (depth 2) cannot change any live row's
+    greedy token."""
     cfg, params = served
     prompts = [list(range(10, 58)), list(range(30, 78))]
 
@@ -208,7 +216,7 @@ def test_dispatch_collect_matches_generate(served):
                 out[s].append(t)
         else:
             for _ in range(5):
-                for s, t in eng.generate().items():
+                for s, t in _generate(eng).items():
                     out[s].append(t)
         return out
 
@@ -333,7 +341,7 @@ def test_lazy_ring_pages_short_prompt(wide_ring):
 
     # decode past the wrap: stream grows page-by-page, then stabilizes at W
     for _ in range(w):
-        eng.generate()
+        _generate(eng)
     for t in local_tables:
         assert t.length == w
         assert len(t.pages) == 2

@@ -61,13 +61,20 @@ def test_queue_full_is_typed():
 
 
 def test_scheduler_plan_respects_limits():
-    s = Scheduler(SchedulerConfig(chunk_tokens=16, prefill_concurrency=1,
+    s = Scheduler(SchedulerConfig(chunk_tokens=16, max_prefill_batch=1,
                                   decode_while_prefill=False))
     p = s.plan(free_slots=2, queue_depth=5, active_prefills=0, live_decodes=1)
-    assert p.admit == 2 and p.advance_prefills == 1
+    assert p.admit == 2 and p.advance_prefills == 1  # capped at the knob
     assert not p.decode  # decode_while_prefill=False and prefills pending
     p = s.plan(free_slots=0, queue_depth=5, active_prefills=0, live_decodes=2)
     assert p.admit == 0 and p.decode
+    # default: every in-flight prefill advances every tick (one batched
+    # ragged device call), bounded only by the slot count
+    s = Scheduler(SchedulerConfig(chunk_tokens=16))
+    p = s.plan(free_slots=2, queue_depth=5, active_prefills=3, live_decodes=0)
+    assert p.advance_prefills == 5
+    with pytest.raises(ValueError, match="max_prefill_batch"):
+        SchedulerConfig(max_prefill_batch=0)
 
 
 # ==========================================================================
@@ -208,6 +215,10 @@ def test_telemetry_records(served):
     assert s["counters"]["generated_tokens"] == 12
     assert s["counters"]["decode_steps"] > 0
     assert s["counters"]["prefill_chunks"] >= 3
+    # batched advance: one device call covers many tasks' chunks, while
+    # prefill_chunks keeps its one-per-task-per-tick meaning
+    assert 0 < s["counters"]["prefill_batches"] <= s["counters"]["prefill_chunks"]
+    assert s["prefill_chunks_per_request_mean"] >= 1.0
     assert s["pool_util_mean"] is not None
     rep = orch.telemetry.report()
     assert "TTFT" in rep and "admission" in rep

@@ -162,11 +162,16 @@ params = T.init_model(jax.random.PRNGKey(0), cfg)
 mesh = build_mesh("2x4")
 prompts = [list(range(7 + i, 39 + i)) for i in range(3)]
 
-def serve(name, m, depth):
-    eng = make_backend(name, params, cfg, slots=2, capacity=128,
-                       mirror_paged=False, mesh=m)
-    orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=16,
-                                                   dispatch_ahead=depth))
+engines = {}  # engines are reusable: jit caches amortize across drivers
+
+def serve(name, m, depth, batched=True):
+    key = (name, m is not None)
+    if key not in engines:
+        engines[key] = make_backend(name, params, cfg, slots=2, capacity=128,
+                                    mirror_paged=False, mesh=m)
+    eng = engines[key]
+    orch = Orchestrator(eng, sched=SchedulerConfig(
+        chunk_tokens=16, dispatch_ahead=depth, batched_prefill=batched))
     for p in prompts:
         orch.submit(p, max_new=4)
     orch.run()
@@ -177,7 +182,9 @@ def serve(name, m, depth):
 out = {}
 for name in ("wgkv", "dense"):
     out[name] = {"mesh": serve(name, mesh, 0), "flat": serve(name, None, 0),
-                 "mesh_async": serve(name, mesh, 1)}
+                 "mesh_async": serve(name, mesh, 1),
+                 "mesh_seq_prefill": serve(name, mesh, 0, batched=False),
+                 "flat_seq_prefill": serve(name, None, 0, batched=False)}
 print("RESULT" + json.dumps(out))
 """
 
@@ -207,6 +214,13 @@ def test_sharded_parity_vs_unsharded():
         # the async dispatch/collect driver on the mesh streams the same
         # bytes: the on-device sampled-token feed survives SPMD placement
         assert out[name]["mesh_async"]["tokens"] == flat_run["tokens"], name
+        # batched ragged prefill (the default driver above) streams the
+        # same bytes as the per-request prefill driver — on the mesh AND
+        # unsharded (the acceptance axis of the batched-prefill PR)
+        assert out[name]["mesh_seq_prefill"]["tokens"] == \
+            mesh_run["tokens"], name
+        assert out[name]["flat_seq_prefill"]["tokens"] == \
+            flat_run["tokens"], name
 
 
 # ==========================================================================
@@ -259,7 +273,7 @@ def test_sharded_memory_snapshot_and_free():
     snap = eng.memory_snapshot()
     assert snap["mesh_devices"] == float(N_DEVICES)
     assert 0 < snap["kv_bytes_per_shard"] <= snap["kv_bytes"]
-    out = eng.generate()
+    out = eng.collect(eng.dispatch_decode())
     assert set(out) == {0}
     eng.free_slot(0)
     assert eng.last_token[0] == 0
