@@ -10,7 +10,7 @@ policy behind the ``EngineBackend`` protocol changes.
 
     PYTHONPATH=src python -m benchmarks.bench_serving \
         --backends wgkv,dense [--smoke] [--arrival poisson:0.5] \
-        [--mesh 2x4] [--slo-tolerance 0.25]
+        [--mesh 2x4] [--slo-tolerance 0.25] [--trace-out trace.json]
 
 Three drivers replay every trace:
 
@@ -51,11 +51,18 @@ the debug recipe ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
 Emits CSV rows for benchmarks.run and writes ``BENCH_serving.json``
 (``{"trace": ..., "backends": {name: metrics}, "ab": ratios-vs-dense}``)
-so the serving trajectory is tracked across PRs.
+so the serving trajectory is tracked across PRs. Each backend record
+carries a ``phases`` tick-phase wall-time breakdown (prefill with its
+open/extend sub-phases, dispatch, collect, evict, memory_sample, admit,
+vs the measured tick total) from the orchestrator's always-on phase
+counters. ``--trace-out`` additionally runs one dedicated traced replay
+per backend (after the timed A/B, so timing stays tracing-free) and
+writes validated Chrome-trace JSONs (repro.serving.obs).
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
 import sys
@@ -65,7 +72,10 @@ import jax
 
 from benchmarks.common import trained_model
 from repro.serving.backend import BACKEND_NAMES, make_backend
+from repro.serving.obs import (Tracer, validate_chrome_trace,
+                               write_chrome_trace)
 from repro.serving.orchestrator import SchedulerConfig, ServeSession
+from repro.serving.orchestrator.telemetry import PHASE_TIME_KEYS
 from repro.serving.sharded import build_mesh
 
 N_REQUESTS = 12
@@ -78,6 +88,10 @@ DISPATCH_AHEAD = 1
 SMOKE = dict(n_requests=4, prompt_len=48, max_new=4)
 
 JSON_PATH = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+# BENCH_serving.json artifact schema; v2 added the per-backend tick-phase
+# wall-time breakdown ("phases") and top-level self-description
+BENCH_SCHEMA_VERSION = 2
 
 # trace fields that must match before an SLO comparison against history
 # is meaningful (different traffic -> different tails, not a regression)
@@ -134,14 +148,16 @@ def record_trace(n: int, vocab: int, *, prompt_len: int, max_new: int,
 
 def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
            dispatch_ahead: int = DISPATCH_AHEAD,
-           batched_prefill: bool = True
+           batched_prefill: bool = True, tracer: Optional[Tracer] = None
            ) -> Tuple[ServeSession, List[List[int]]]:
     """Replay a recorded trace through a ServeSession: submit each
     request at its arrival tick, tick until drained. Returns the closed
-    session and each request's token stream (submission order)."""
+    session and each request's token stream (submission order). With
+    ``tracer`` the replay records lifecycle/phase spans (the timed A/B
+    replays run without one, so the timed numbers stay tracing-free)."""
     sess = ServeSession(eng, sched=SchedulerConfig(
         chunk_tokens=chunk, dispatch_ahead=dispatch_ahead,
-        batched_prefill=batched_prefill))
+        batched_prefill=batched_prefill), tracer=tracer)
     handles = []
     pending = list(trace)
     tick = 0
@@ -175,6 +191,22 @@ def _extend_tok_rate(s: Dict) -> Optional[float]:
     return s["counters"].get("extend_tokens", 0.0) / t if t else None
 
 
+def _phase_breakdown(s: Dict) -> Dict:
+    """Tick-phase wall-time decomposition of one replay (seconds), from
+    the orchestrator's always-on phase counters: the disjoint per-tick
+    stages (``phase_sum_s`` = their sum, <= the measured ``tick_time_s``
+    total — the rest is scheduler/stream/telemetry glue) plus the
+    engine-side prefill sub-phases (``open``/``extend``, contained in
+    ``prefill_time_s``)."""
+    c = s["counters"]
+    out = {k: float(c.get(k, 0.0)) for k in PHASE_TIME_KEYS}
+    out["open_time_s"] = float(c.get("open_time_s", 0.0))
+    out["extend_time_s"] = float(c.get("extend_time_s", 0.0))
+    out["tick_time_s"] = float(c.get("tick_time_s", 0.0))
+    out["phase_sum_s"] = sum(float(c.get(k, 0.0)) for k in PHASE_TIME_KEYS)
+    return out
+
+
 def _backend_record(s: Dict) -> Dict:
     return {
         "requests": s["requests"],
@@ -198,6 +230,8 @@ def _backend_record(s: Dict) -> Dict:
         "decode_steps": s["counters"]["decode_steps"],
         "prefill_chunks": s["counters"]["prefill_chunks"],
         "prefill_batches": s["counters"]["prefill_batches"],
+        # where the best async replay's tick wall time went, per stage
+        "phases": _phase_breakdown(s),
         # prefill_tokens_per_s is filled in by run() from the best stage
         # rate across the interleaved replays, not this single summary
     }
@@ -236,8 +270,15 @@ def check_slo(prev: Optional[Dict], record: Dict,
     return out
 
 
+def _trace_path(base: str, name: str) -> str:
+    """Per-backend trace artifact path: trace.json -> trace.wgkv.json."""
+    stem, ext = os.path.splitext(base)
+    return f"{stem}.{name}{ext or '.json'}"
+
+
 def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
-        arrival: str = "burst", mesh: Optional[str] = None):
+        arrival: str = "burst", mesh: Optional[str] = None,
+        trace_out: Optional[str] = None):
     names = tuple(backends) if backends else ("wgkv", "dense")
     for n in names:
         if n not in BACKEND_NAMES:
@@ -256,6 +297,9 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
     warmup = record_trace(SLOTS, cfg.vocab_size, prompt_len=plen,
                           max_new=2, seed=99)
     record: Dict = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "generated_at": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
         "trace": {"requests": n_req, "prompt_len": plen, "max_new": mnew,
                   "arrival": arrival, "mesh": mesh,
                   "arrival_ticks": [r["arrival_tick"] for r in trace],
@@ -339,6 +383,26 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
         if best_extend["async"] and best_extend["unbatched"]:
             rec["batched_prefill_speedup"] = (
                 best_extend["async"] / best_extend["unbatched"])
+        if trace_out:
+            # dedicated traced replay on the warm engine, AFTER the timed
+            # A/B (spans cover the production async driver; the timed
+            # numbers above stay tracing-free). The artifact is validated
+            # here, not just written — an instrumentation regression that
+            # empties a span family should fail the bench, not ship a
+            # hollow trace.
+            tracer = Tracer()
+            replay(eng, trace, tracer=tracer)
+            tpath = _trace_path(trace_out, name)
+            obj = write_chrome_trace(
+                tracer, tpath,
+                meta={"backend": name, "arrival": arrival,
+                      "requests": n_req, "smoke": smoke})
+            errs = validate_chrome_trace(obj)
+            if errs:
+                raise AssertionError(
+                    f"{name}: invalid trace artifact {tpath}: {errs[:3]}")
+            rows.append((f"serving/{name}/trace_out", 0.0,
+                         f"{tpath} events={len(obj['traceEvents'])}"))
         if paged:
             # extra replay on the warm engine with mirroring ON: physical
             # pool telemetry (pages peak / utilization), kept out of the
@@ -360,6 +424,11 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
             (f"serving/{name}/memory", 0.0,
              f"kv_tokens_peak={rec['kv_tokens_peak']} "
              f"pool_pages_peak={rec['pool_pages_peak']}"),
+            (f"serving/{name}/phases",
+             rec["phases"]["tick_time_s"] * 1e6,
+             "phase_sum={phase_sum_s:.3f}s prefill={prefill_time_s:.3f}s "
+             "dispatch={dispatch_time_s:.3f}s collect={collect_time_s:.3f}s"
+             .format(**rec["phases"])),
         ]
     # comparative ratios vs the dense full-KV baseline: the paper's
     # speedup and memory-reduction claims as serving-level numbers
@@ -404,6 +473,11 @@ def main() -> None:
                     help="fail (exit 1) when a backend's p99 TTFT exceeds "
                          "the committed BENCH_serving.json history by more "
                          "than this fraction (e.g. 0.25 = +25%%)")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="record a dedicated traced replay per backend "
+                         "(after the timed A/B) and write validated "
+                         "Chrome-trace JSONs, one per backend "
+                         "(trace.json -> trace.wgkv.json, ...)")
     args = ap.parse_args()
     # snapshot the committed history BEFORE run() overwrites it
     prev_record = None
@@ -411,7 +485,8 @@ def main() -> None:
         with open(JSON_PATH) as fh:
             prev_record = json.load(fh)
     rows = run(backends=args.backends.split(","), smoke=args.smoke,
-               arrival=args.arrival, mesh=args.mesh)
+               arrival=args.arrival, mesh=args.mesh,
+               trace_out=args.trace_out)
     for r in rows:
         print(",".join(str(x) for x in r))
     if args.slo_tolerance is not None:

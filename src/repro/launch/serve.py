@@ -11,6 +11,9 @@ Quest / SnapKV composition).
         --arch qwen3-0.6b --reduced --backend dense --requests 4
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-0.6b --reduced --dispatch-ahead 0     # sync baseline
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen3-0.6b --reduced --trace-out trace.json \
+        --metrics-interval 5                               # observability
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.serve --arch qwen3-0.6b --reduced --mesh 2x4
 """
@@ -24,6 +27,7 @@ from repro.configs import ARCH_NAMES, get_config, get_reduced_config
 from repro.models import inference as I
 from repro.models import transformer as T
 from repro.serving.backend import BACKEND_NAMES, make_backend
+from repro.serving.obs import Tracer, write_chrome_trace
 from repro.serving.orchestrator import (QueueFull, SchedulerConfig,
                                         ServeSession)
 from repro.serving.sharded import build_mesh
@@ -67,6 +71,21 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quiet-stream", action="store_true",
                     help="suppress per-token stream prints")
+    # observability (repro.serving.obs): lifecycle + tick-phase tracing
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="record request-lifecycle and tick-phase spans and "
+                         "write a Chrome-trace/Perfetto JSON on exit "
+                         "(open in chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--trace-capacity", type=int, default=1 << 16,
+                    help="tracer ring-buffer span capacity (oldest dropped)")
+    ap.add_argument("--device-annotations", action="store_true",
+                    help="also wrap traced phases in jax.profiler."
+                         "TraceAnnotation so device profiles show them")
+    ap.add_argument("--metrics-interval", type=float, default=None,
+                    metavar="SECONDS",
+                    help="print a live rolling metrics line (windowed tok/s "
+                         "+ latency percentiles + memory gauges) at most "
+                         "every SECONDS while serving")
     args = ap.parse_args()
     if args.max_pending is not None and args.max_pending < 1:
         ap.error("--max-pending must be >= 1")
@@ -76,6 +95,10 @@ def main() -> None:
         ap.error("--dispatch-ahead must be >= 0")
     if args.max_prefill_batch is not None and args.max_prefill_batch < 1:
         ap.error("--max-prefill-batch must be >= 1")
+    if args.trace_capacity < 1:
+        ap.error("--trace-capacity must be >= 1")
+    if args.metrics_interval is not None and args.metrics_interval <= 0:
+        ap.error("--metrics-interval must be > 0")
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     cfg = cfg.replace(dtype="float32")
     if not cfg.has_attention_cache:
@@ -95,13 +118,19 @@ def main() -> None:
                        temperature=args.temperature, seed=args.seed,
                        mesh=mesh)
     print(f"backend: {eng.capabilities()}")
+    tracer = None
+    if args.trace_out or args.device_annotations:
+        tracer = Tracer(capacity=args.trace_capacity,
+                        annotate_device=args.device_annotations)
     session = ServeSession(
         eng,
         sched=SchedulerConfig(chunk_tokens=args.chunk_tokens,
                               dispatch_ahead=args.dispatch_ahead,
                               max_prefill_batch=args.max_prefill_batch,
                               batched_prefill=not args.no_batched_prefill),
-        max_pending=args.max_pending)
+        max_pending=args.max_pending,
+        tracer=tracer,
+        metrics_interval_s=args.metrics_interval)
 
     def on_token(rid: int, tok: int, is_last: bool) -> None:
         if not args.quiet_stream:
@@ -155,6 +184,15 @@ def main() -> None:
         print(f"\npaged-vs-logical max deviation (live request): {dev:.2e}")
         session.run()
     session.close()
+    if args.trace_out and tracer is not None:
+        obj = write_chrome_trace(
+            tracer, args.trace_out,
+            meta={"arch": args.arch, "backend": args.backend,
+                  "requests": args.requests, "slots": args.slots,
+                  "dispatch_ahead": args.dispatch_ahead})
+        print(f"\ntrace: {args.trace_out} "
+              f"({len(obj['traceEvents'])} events, "
+              f"{obj['otherData']['spans_dropped']} dropped)")
 
 
 if __name__ == "__main__":

@@ -159,6 +159,12 @@ class EngineBackend(Protocol):
     eos: Optional[int]
     live: List[bool]
     stats: Dict[str, float]
+    # observability handle (repro.serving.obs.trace.Tracer). Backends
+    # default it to NULL_TRACER; the Orchestrator overwrites it with its
+    # own tracer at construction so engine-side sub-phase spans
+    # (prefill_open / prefill_extend_ragged / decode dispatch) land on
+    # the same timeline as the scheduler's tick phases.
+    tracer: Any
 
     def capabilities(self) -> BackendCapabilities: ...
 

@@ -56,6 +56,7 @@ from repro.models import inference as I
 from repro.serving import paged
 from repro.serving.backend import (BackendCapabilities, InflightStep,  # noqa: F401,E501
                                    Prefix, PrefillTask)
+from repro.serving.obs.trace import NULL_TRACER
 from repro.serving.sampling import sample
 from repro.serving.sharded import ShardedDecodeMixin
 
@@ -117,7 +118,15 @@ class Engine(ShardedDecodeMixin):
                       # coalesces; first-chunk opens excluded): wall time
                       # is a true device measure because _extend_ragged
                       # syncs on the step's stats before returning
-                      "extend_time_s": 0.0, "extend_tokens": 0.0}
+                      "extend_time_s": 0.0, "extend_tokens": 0.0,
+                      # first-chunk opens (batch-1 budgeted prefill / empty
+                      # cache alloc) — the other prefill sub-phase, so the
+                      # BENCH breakdown can split the prefill stage into
+                      # open vs coalesced-extend time
+                      "open_time_s": 0.0, "open_tokens": 0.0}
+        # observability handle; the Orchestrator overwrites this with its
+        # own tracer so engine-side sub-phase spans share its timeline
+        self.tracer = NULL_TRACER
 
     # ------------------------------------------------------------------
     # EngineBackend protocol: descriptor + memory telemetry
@@ -190,9 +199,23 @@ class Engine(ShardedDecodeMixin):
         sequential batch-1 path. Returns each task's done flag."""
         if max_tokens is not None and max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
+        consumed: set = set()
+        fresh = [t for t in tasks if t.caches is None]
+        if fresh:
+            # first-chunk opens run batch-1 on their own attention path —
+            # timed as the "open" sub-phase of the prefill stage (the
+            # ragged extend below is the other), so the BENCH breakdown
+            # can split prefill into open vs coalesced-extend time
+            t_open = time.perf_counter()
+            with self.tracer.span("prefill_open", n=len(fresh)):
+                for task in fresh:
+                    if self._prefill_open(task, max_tokens):
+                        consumed.add(id(task))
+            self.stats["open_time_s"] += time.perf_counter() - t_open
+            self.stats["open_tokens"] += float(sum(t.pos for t in fresh))
         extend: List[PrefillTask] = []
         for task in tasks:
-            if task.caches is None and self._prefill_open(task, max_tokens):
+            if id(task) in consumed:
                 continue        # aligned one-shot head consumed this tick
             if task.pos < len(task.prompt):
                 extend.append(task)
@@ -250,13 +273,15 @@ class Engine(ShardedDecodeMixin):
             toks[i, :take] = t.prompt[t.pos:t.pos + take]
         batched = tasks[0].caches if b == 1 \
             else self.batched_prefill_stack([t.caches for t in tasks])
-        logits, batched, st = self._extend_batch(
-            self.params,
-            (jnp.asarray(toks), jnp.asarray(takes, jnp.int32)), batched)
-        outs = (batched,) if b == 1 \
-            else self.batched_prefill_unstack(batched, b)
-        trig, adm = jax.device_get((st["evict_trigger_rows"],
-                                    st["adm_sum_rows"]))
+        with self.tracer.span("prefill_extend_ragged", batch=b, s=s,
+                              tokens=int(sum(takes))):
+            logits, batched, st = self._extend_batch(
+                self.params,
+                (jnp.asarray(toks), jnp.asarray(takes, jnp.int32)), batched)
+            outs = (batched,) if b == 1 \
+                else self.batched_prefill_unstack(batched, b)
+            trig, adm = jax.device_get((st["evict_trigger_rows"],
+                                        st["adm_sum_rows"]))
         # the device_get above blocked on the extend, so this wall delta
         # is a true device+host measure of the coalesced advance — the
         # batched-vs-per-request axis bench_serving's speedup rides on
@@ -349,10 +374,13 @@ class Engine(ShardedDecodeMixin):
                    if not self.live[s]), \
             f"dead rows carry stale last tokens: {self.last_token}"
         before = self.caches
-        logits, self.caches, st = self._decode(
-            self.params, self._tok_dev, before)
-        self.key, sk = jax.random.split(self.key)
-        nxt = self._sample(sk, logits)
+        # device bridge: with annotate_device the jitted step + sampler
+        # dispatches carry the serving phase name into device profiles
+        with self.tracer.device_scope("decode_step"):
+            logits, self.caches, st = self._decode(
+                self.params, self._tok_dev, before)
+            self.key, sk = jax.random.split(self.key)
+            nxt = self._sample(sk, logits)
         # dead rows keep feeding token 0 (free_slot's invariant) even
         # though the batched step sampled garbage for them
         live_vec = jnp.asarray(self.live)

@@ -13,7 +13,15 @@ Layering:
                  per-request deadlines
   stream.py    — per-request token streaming with TTFT/TPOT timestamps
   telemetry.py — throughput / latency percentiles / memory snapshots /
-                 admission-rate aggregation
+                 admission-rate aggregation, on top of the
+                 repro.serving.obs metrics registry (tick-phase
+                 wall-time breakdown + live windowed report line)
+
+Observability (repro.serving.obs): pass ``tracer=Tracer(...)`` to the
+Orchestrator/ServeSession to record per-request lifecycle spans and
+per-tick phase spans into a ring buffer, exportable as Chrome-trace JSON
+(``repro.serving.obs.export.write_chrome_trace``); pass
+``metrics_interval_s=...`` for a live periodic metrics line.
 
 The Orchestrator drives any backend implementing the
 :class:`repro.serving.backend.EngineBackend` protocol through its

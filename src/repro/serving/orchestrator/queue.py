@@ -54,6 +54,10 @@ class ServeRequest:
     # absolute wall-clock deadline (arrival_t + deadline_s); the
     # orchestrator cancels the request when the clock passes it
     deadline_t: Optional[float] = None
+    # lifecycle transition timestamps for the request-lane trace spans:
+    # queued ends at admit_t, decode runs insert_t -> finish_t
+    admit_t: Optional[float] = None
+    insert_t: Optional[float] = None
     # TTFT/TPOT live on the request's TokenStream (stream.py), the single
     # source of truth for per-token timing
 

@@ -48,6 +48,8 @@ import time
 from typing import Callable, Deque, Dict, List, Optional
 
 from repro.serving.backend import EngineBackend, InflightStep, PrefillTask
+from repro.serving.obs.trace import (CAT_ENGINE, CAT_REQUEST, LANE_REQ,
+                                     LANE_TICK, NULL_TRACER, Tracer)
 from repro.serving.orchestrator.queue import (InvalidRequest, QueueFull,
                                               RequestQueue, ServeRequest)
 from repro.serving.orchestrator.stream import OnToken, StreamMux
@@ -55,10 +57,38 @@ from repro.serving.orchestrator.telemetry import Telemetry
 
 # engine-side stat counters mirrored into telemetry as deltas relative to
 # the orchestrator's birth (engines are reusable across replays):
-# eviction/admission plus the extend-phase advance counters
-# (extend_tokens / extend_time_s — the batched-prefill coalescing axis)
+# eviction/admission plus the prefill sub-phase counters (open_* for the
+# batch-1 first chunks, extend_* for the coalesced ragged advances — the
+# batched-prefill coalescing axis and the BENCH phase-breakdown columns)
 _ENGINE_STAT_KEYS = ("evict_triggers", "decode_adm_sum",
-                     "extend_time_s", "extend_tokens")
+                     "extend_time_s", "extend_tokens",
+                     "open_time_s", "open_tokens")
+
+
+class _Phase:
+    """Times one tick phase against the orchestrator's clock, folding the
+    duration into a telemetry counter AND emitting an engine-lane tracer
+    span. With the default :data:`NULL_TRACER` the span add is a no-op
+    branch, so always-on phase accounting costs two clock reads."""
+    __slots__ = ("orch", "name", "counter", "args", "t0")
+
+    def __init__(self, orch: "Orchestrator", name: str, counter: str,
+                 args: Optional[Dict]):
+        self.orch = orch
+        self.name = name
+        self.counter = counter
+        self.args = args
+
+    def __enter__(self) -> "_Phase":
+        self.t0 = self.orch.clock()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        t1 = self.orch.clock()
+        self.orch.telemetry.bump(self.counter, t1 - self.t0)
+        self.orch.tracer.add(self.name, self.t0, t1, cat=CAT_ENGINE,
+                             lane=(LANE_TICK, 0), args=self.args)
+        return False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,10 +164,21 @@ class Orchestrator:
     def __init__(self, engine: EngineBackend, *,
                  sched: SchedulerConfig = SchedulerConfig(),
                  max_pending: Optional[int] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer: Optional[Tracer] = None,
+                 metrics_interval_s: Optional[float] = None,
+                 on_metrics: Callable[[str], None] = print):
         self.engine = engine
         self.scheduler = Scheduler(sched)
         self.clock = clock
+        # observability: the tracer records request-lifecycle and
+        # tick-phase spans (NULL_TRACER = disabled, branch-cheap); the
+        # engine gets the same handle so its prefill_open/extend_ragged
+        # sub-phases land on the same timeline
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        engine.tracer = self.tracer
+        self._metrics_interval = metrics_interval_s
+        self._on_metrics = on_metrics
         self.queue = RequestQueue(max_pending, clock)
         self.mux = StreamMux(clock)
         self.telemetry = Telemetry(clock)
@@ -197,6 +238,7 @@ class Orchestrator:
         req = self.queue.requests.get(rid)
         if req is None or req.state in ("done", "cancelled"):
             return False
+        was = req.state
         if req.state == "queued":
             self.queue.remove(rid)
         elif req.state == "prefill":
@@ -205,15 +247,40 @@ class Orchestrator:
             self._prefills.pop(rid, None)
             self.slot_req[req.slot] = None
         elif req.state == "decode":
-            self.engine.free_slot(req.slot)
+            with self._phase("evict", counter="evict_time_s",
+                             slot=req.slot, rid=rid):
+                self.engine.free_slot(req.slot)
             self.slot_req[req.slot] = None
         req.state = "cancelled"
         req.finish_t = self.clock()
+        self._close_request_spans(req)
+        self.tracer.instant(reason, cat=CAT_REQUEST, lane=(LANE_REQ, rid),
+                            rid=rid, was=was)
         self.mux.close(rid, cancelled=True)
         self.telemetry.bump("cancelled")
         if reason == "deadline":
             self.telemetry.bump("deadline_expired")
         return True
+
+    # ------------------------------------------------------------------
+    # observability helpers (tick phases + request-lane spans)
+    # ------------------------------------------------------------------
+    def _phase(self, name: str, *, counter: Optional[str] = None,
+               **args) -> _Phase:
+        """Engine-lane phase timer: accumulates into the telemetry
+        counter (default ``<name>_time_s``) and traces a span."""
+        return _Phase(self, name, counter or f"{name}_time_s",
+                      args or None)
+
+    def _close_request_spans(self, req: ServeRequest) -> None:
+        """Emit the request's terminal lifecycle span: the decode phase
+        runs from insert to finish/cancel (prefill/queued spans were
+        emitted at their own transitions)."""
+        if req.insert_t is not None and req.finish_t is not None:
+            self.tracer.add("decode", req.insert_t, req.finish_t,
+                            cat=CAT_REQUEST, lane=(LANE_REQ, req.rid),
+                            args={"rid": req.rid, "slot": req.slot,
+                                  "n_out": len(req.out)})
 
     def _dispatch_is_useful(self) -> bool:
         """True while some decoding request still wants a token beyond
@@ -244,14 +311,16 @@ class Orchestrator:
         """One scheduling round; returns True if any work was done."""
         self.telemetry.start()
         self.telemetry.bump("ticks")
+        tick_no = int(self.telemetry.counters["ticks"])
+        t_tick0 = self.clock()
         self._expire_deadlines()
         depth = self.scheduler.cfg.dispatch_ahead
         # sample BEFORE dispatching: the snapshot syncs small per-layer
         # counters, so taken later it would wait on the step dispatched
         # this tick and forfeit the overlap dispatch-ahead buys
-        if (self.telemetry.counters["ticks"] - 1) % \
-                self.scheduler.cfg.memory_sample_every == 0:
-            self.telemetry.sample_memory(self.engine.memory_snapshot())
+        if (tick_no - 1) % self.scheduler.cfg.memory_sample_every == 0:
+            with self._phase("memory_sample", tick=tick_no):
+                self.telemetry.sample_memory(self.engine.memory_snapshot())
         plan = self.scheduler.plan(
             free_slots=len(self._free_slots()),
             queue_depth=self.queue.depth,
@@ -260,15 +329,27 @@ class Orchestrator:
         worked = False
 
         # 1) admit: queued request -> reserved slot + prefill task
-        for _ in range(plan.admit):
-            req = self.queue.pop()
-            if req is None:
-                break
-            slot = self._free_slots()[0]
-            req.slot, req.state = slot, "prefill"
-            self.slot_req[slot] = req
-            self._prefills[req.rid] = (req, self.engine.start_prefill(req.prompt))
-            worked = True
+        if plan.admit:
+            with self._phase("admit", tick=tick_no, n=plan.admit):
+                for _ in range(plan.admit):
+                    req = self.queue.pop()
+                    if req is None:
+                        break
+                    slot = self._free_slots()[0]
+                    req.slot, req.state = slot, "prefill"
+                    now = self.clock()
+                    req.admit_t = now
+                    # request-lane lifecycle: the queued wait ends here
+                    self.tracer.add("queued", req.arrival_t, now,
+                                    cat=CAT_REQUEST,
+                                    lane=(LANE_REQ, req.rid),
+                                    args={"rid": req.rid, "slot": slot,
+                                          "prompt_len": len(req.prompt)})
+                    self.slot_req[slot] = req
+                    self._prefills[req.rid] = (req,
+                                               self.engine.start_prefill(
+                                                   req.prompt))
+                    worked = True
 
         # 2) batched chunked prefill: advance the oldest in-flight tasks,
         # ALL through one batched ragged device call when the backend can
@@ -280,31 +361,47 @@ class Orchestrator:
             tasks = [task for _, task in pairs]
             pos0 = [task.pos for task in tasks]
             chunk = self.scheduler.cfg.chunk_tokens
-            t0 = self.clock()
-            if self._batched_prefill:
-                dones = self.engine.prefill_step_batch(tasks, chunk)
-            else:
-                # per-task fallback: the deprecated batch-of-one shim
-                dones = [self.engine.prefill_step(task, chunk)
-                         for task in tasks]
             # stage wall time + advance calls (one batched call vs one
             # per task): the axes bench_serving's batched_prefill_speedup
             # rides on — total replay wall would drown the prefill stage
-            # in decode time on decode-heavy traces
-            self.telemetry.bump("prefill_time_s", self.clock() - t0)
+            # in decode time on decode-heavy traces. The phase span also
+            # brackets the engine-side prefill_open /
+            # prefill_extend_ragged sub-spans on the trace timeline.
+            with self._phase("prefill_advance", counter="prefill_time_s",
+                             tick=tick_no, batch=len(tasks)) as ph:
+                if self._batched_prefill:
+                    dones = self.engine.prefill_step_batch(tasks, chunk)
+                else:
+                    # per-task fallback: the deprecated batch-of-one shim
+                    dones = [self.engine.prefill_step(task, chunk)
+                             for task in tasks]
             self.telemetry.bump("prefill_batches",
                                 1 if self._batched_prefill else len(tasks))
             worked = True
+            t_adv1 = self.clock()
             for rid, (req, task), p0, done in zip(adv, pairs, pos0, dones):
                 # per-task accounting is unchanged by batching: one chunk
                 # per task per tick, tokens from the task's own cursor
                 self.telemetry.bump("prefill_chunks")
                 self.telemetry.bump("prefill_tokens", task.pos - p0)
                 req.prefill_chunks += 1
+                # request-lane chunk span: every advanced task shares the
+                # batched call's wall window (batch attr says how many)
+                self.tracer.add(f"prefill[chunk {req.prefill_chunks - 1}]",
+                                ph.t0, t_adv1, cat=CAT_REQUEST,
+                                lane=(LANE_REQ, rid),
+                                args={"rid": rid, "tokens": task.pos - p0,
+                                      "pos": task.pos,
+                                      "batch": len(tasks)})
                 if done:
+                    t_ins0 = self.clock()
                     prefix = self.engine.finish_prefill(task, emit_first=True)
                     self.engine.insert(prefix, req.slot)
                     req.state = "decode"
+                    req.insert_t = self.clock()
+                    self.tracer.add("insert", t_ins0, req.insert_t,
+                                    cat=CAT_REQUEST, lane=(LANE_REQ, rid),
+                                    args={"rid": rid, "slot": req.slot})
                     req.mean_admission = prefix.mean_admission
                     del self._prefills[rid]
                     self._deliver(req, prefix.first_token)
@@ -321,27 +418,38 @@ class Orchestrator:
         # exceeds the tokens already in flight — past that the step is
         # provably wasted (pipeline-flush work the sync path never does).
         if depth > 0 and plan.decode:
-            while (len(self._inflight) < depth + 1
-                   and self._dispatch_is_useful()):
-                step = self.engine.dispatch_decode()
-                if step is None:
-                    break
-                self._inflight.append(step)
-                self.telemetry.bump("dispatched_steps")
-                worked = True
+            with self._phase("dispatch_decode", counter="dispatch_time_s",
+                             tick=tick_no,
+                             width=sum(self.engine.live)):
+                while (len(self._inflight) < depth + 1
+                       and self._dispatch_is_useful()):
+                    step = self.engine.dispatch_decode()
+                    if step is None:
+                        break
+                    self._inflight.append(step)
+                    self.telemetry.bump("dispatched_steps")
+                    worked = True
 
         # 4) decode result: collect the OLDEST in-flight step (the host
         # sync point), or run one synchronous dispatch+collect when async
         # dispatch is off
         out: Dict[int, int] = {}
         if self._inflight:
-            out = self.engine.collect(self._inflight.popleft())
+            step = self._inflight.popleft()
+            with self._phase("collect", tick=tick_no,
+                             width=sum(step.live)):
+                out = self.engine.collect(step)
             self.telemetry.bump("decode_steps")
             worked = True
         elif depth == 0 and plan.decode:
-            step = self.engine.dispatch_decode()
+            with self._phase("dispatch_decode", counter="dispatch_time_s",
+                             tick=tick_no,
+                             width=sum(self.engine.live)):
+                step = self.engine.dispatch_decode()
             if step is not None:
-                out = self.engine.collect(step)
+                with self._phase("collect", tick=tick_no,
+                                 width=sum(step.live)):
+                    out = self.engine.collect(step)
                 self.telemetry.bump("decode_steps")
                 worked = True
         for slot, tok in out.items():
@@ -353,6 +461,11 @@ class Orchestrator:
         for k in _ENGINE_STAT_KEYS:
             self.telemetry.counters[k] = \
                 self.engine.stats.get(k, 0.0) - self._stats0.get(k, 0.0)
+        self.telemetry.bump("tick_time_s", self.clock() - t_tick0)
+        if self._metrics_interval is not None:
+            line = self.telemetry.live_line(self._metrics_interval)
+            if line:
+                self._on_metrics(line)
         return worked
 
     def _deliver(self, req: ServeRequest, token: int) -> None:
@@ -367,8 +480,14 @@ class Orchestrator:
             req.state = "done"
             req.finish_t = now
             if req.slot is not None and self.slot_req[req.slot] is req:
-                self.engine.free_slot(req.slot)
+                with self._phase("evict", counter="evict_time_s",
+                                 slot=req.slot, rid=req.rid):
+                    self.engine.free_slot(req.slot)
                 self.slot_req[req.slot] = None
+            self._close_request_spans(req)
+            self.tracer.instant("finish", cat=CAT_REQUEST,
+                                lane=(LANE_REQ, req.rid), rid=req.rid,
+                                n_out=len(req.out))
             st = self.mux.streams[req.rid]
             self.telemetry.record_request(
                 rid=req.rid, prompt_len=len(req.prompt), n_out=len(req.out),
@@ -383,7 +502,13 @@ class Orchestrator:
         once the queue drains so engine stats and the paged mirror are
         settled; tokens for freed rows are discarded by the engine)."""
         while self._inflight:
-            out = self.engine.collect(self._inflight.popleft())
+            # drain iterations are mini-ticks for phase accounting: their
+            # collect time counts toward tick_time_s so the phase-sum <=
+            # tick-wall invariant holds over whole runs
+            t0 = self.clock()
+            step = self._inflight.popleft()
+            with self._phase("collect", drain=True, width=sum(step.live)):
+                out = self.engine.collect(step)
             self.telemetry.bump("decode_steps")
             for slot, tok in out.items():
                 req = self.slot_req[slot]
@@ -394,6 +519,7 @@ class Orchestrator:
             for k in _ENGINE_STAT_KEYS:
                 self.telemetry.counters[k] = \
                     self.engine.stats.get(k, 0.0) - self._stats0.get(k, 0.0)
+            self.telemetry.bump("tick_time_s", self.clock() - t0)
 
     def run(self, max_ticks: int = 10_000) -> None:
         """Tick until every submitted request has completed (or been

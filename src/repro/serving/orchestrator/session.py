@@ -186,5 +186,12 @@ class ServeSession:
     def telemetry(self):
         return self.orchestrator.telemetry
 
+    @property
+    def tracer(self):
+        """The orchestrator's span tracer (pass ``tracer=Tracer(...)`` at
+        construction; defaults to the no-op NULL_TRACER). Export with
+        :func:`repro.serving.obs.export.write_chrome_trace`."""
+        return self.orchestrator.tracer
+
     def report(self) -> str:
         return self.orchestrator.telemetry.report()
