@@ -12,25 +12,33 @@ policy behind the ``EngineBackend`` protocol changes.
         --backends wgkv,dense [--smoke] [--arrival poisson:0.5] \
         [--mesh 2x4] [--slo-tolerance 0.25] [--trace-out trace.json]
 
-Three drivers replay every trace:
+Four drivers replay every trace:
 
-  * the **async batched** driver (``ServeSession``, dispatch/collect
-    with ``dispatch_ahead=1`` and batched ragged prefill — every
-    in-flight prefill advances in ONE jitted device call per tick) —
-    the production path and the source of each backend's headline
-    metrics;
-  * the **synchronous** baseline (``dispatch_ahead=0``) — recorded as
-    ``sync_tokens_per_s`` with the ratio ``async_speedup_vs_sync``, so
-    the overlap the two-phase surface buys is regression-tracked;
-  * the **per-request prefill** baseline
-    (``SchedulerConfig(batched_prefill=False)``: one batch-1
-    ``prefill_step`` call per task per tick) — recorded as
-    ``unbatched_prefill_tokens_per_s`` with the ratio
-    ``batched_prefill_speedup``, so the coalescing win of
-    ``prefill_step_batch`` is regression-tracked too.
+  * the **async fused** driver (``ServeSession``, ``dispatch_ahead=1``
+    with the fused megabatch tick — ONE jitted ragged device call per
+    tick advancing every live request: first chunks, mid-prefill
+    extends, and decode rows together, with in-jit sampling) — the
+    production path and the source of each backend's headline metrics;
+  * the **synchronous fused** baseline (``dispatch_ahead=0``) —
+    recorded as ``sync_tokens_per_s`` with the ratio
+    ``async_speedup_vs_sync``, so the overlap the two-phase surface
+    buys is regression-tracked;
+  * the **unfused** baseline (``SchedulerConfig(fused_step=False)``:
+    the split extend/dispatch-decode paths of PR 5, first chunks
+    riding the same scan-from-empty the fused splice uses) — recorded
+    as ``unfused_prefill_tokens_per_s`` with the ratio
+    ``fused_step_speedup``, so the win of folding the per-tick
+    dispatches into the one fused call is regression-tracked;
+  * the **per-request prefill** baseline (fused off AND
+    ``batched_prefill=False``: one batch-1 call per task per tick) —
+    recorded as ``unbatched_prefill_tokens_per_s`` with the ratio
+    ``batched_prefill_speedup``, the coalescing win of
+    ``prefill_step_batch`` alone.
 
 Greedy token streams from all drivers are asserted byte-identical
-before any timing is trusted.
+before any timing is trusted. Warmup replays run first per backend and
+their wall time is recorded as ``compile_time_s``, so the steady-state
+numbers above never pay jit compilation.
 
 SLO regression gate: with ``--slo-tolerance T`` the run compares each
 backend's p99 TTFT AND p99 TPOT against the committed
@@ -53,7 +61,7 @@ Emits CSV rows for benchmarks.run and writes ``BENCH_serving.json``
 (``{"trace": ..., "backends": {name: metrics}, "ab": ratios-vs-dense}``)
 so the serving trajectory is tracked across PRs. Each backend record
 carries a ``phases`` tick-phase wall-time breakdown (prefill with its
-open/extend sub-phases, dispatch, collect, evict, memory_sample, admit,
+extend sub-phase, dispatch, collect, evict, memory_sample, admit,
 vs the measured tick total) from the orchestrator's always-on phase
 counters. ``--trace-out`` additionally runs one dedicated traced replay
 per backend (after the timed A/B, so timing stays tracing-free) and
@@ -66,6 +74,7 @@ import datetime
 import json
 import os
 import sys
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -90,8 +99,10 @@ SMOKE = dict(n_requests=4, prompt_len=48, max_new=4)
 JSON_PATH = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
 
 # BENCH_serving.json artifact schema; v2 added the per-backend tick-phase
-# wall-time breakdown ("phases") and top-level self-description
-BENCH_SCHEMA_VERSION = 2
+# wall-time breakdown ("phases") and top-level self-description; v3 made
+# the fused megabatch tick the headline driver and added compile_time_s,
+# fused_step_speedup, and the fused phase counters
+BENCH_SCHEMA_VERSION = 3
 
 # trace fields that must match before an SLO comparison against history
 # is meaningful (different traffic -> different tails, not a regression)
@@ -148,7 +159,8 @@ def record_trace(n: int, vocab: int, *, prompt_len: int, max_new: int,
 
 def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
            dispatch_ahead: int = DISPATCH_AHEAD,
-           batched_prefill: bool = True, tracer: Optional[Tracer] = None
+           batched_prefill: bool = True, fused_step: bool = True,
+           tracer: Optional[Tracer] = None
            ) -> Tuple[ServeSession, List[List[int]]]:
     """Replay a recorded trace through a ServeSession: submit each
     request at its arrival tick, tick until drained. Returns the closed
@@ -157,7 +169,8 @@ def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
     replays run without one, so the timed numbers stay tracing-free)."""
     sess = ServeSession(eng, sched=SchedulerConfig(
         chunk_tokens=chunk, dispatch_ahead=dispatch_ahead,
-        batched_prefill=batched_prefill), tracer=tracer)
+        batched_prefill=batched_prefill, fused_step=fused_step),
+        tracer=tracer)
     handles = []
     pending = list(trace)
     tick = 0
@@ -175,18 +188,25 @@ def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
 
 def _prefill_tok_rate(s: Dict) -> Optional[float]:
     """Prompt-ingest throughput of one replay: prefill tokens over the
-    wall time of the tick loop's prefill-advance STAGE (not the whole
-    replay — decode-heavy traces would drown the prefill signal)."""
-    t = s["counters"].get("prefill_time_s")
-    return s["counters"]["prefill_tokens"] / t if t else None
+    wall time spent advancing them (not the whole replay —
+    decode-heavy traces would drown the prefill signal). Fused replays
+    have no separate prefill stage; their prefill share of the fused
+    call's wall is apportioned by the engine
+    (``fused_prefill_time_s``/``fused_prefill_tokens``)."""
+    c = s["counters"]
+    if c.get("fused_steps", 0):
+        t = c.get("fused_prefill_time_s")
+        return c.get("fused_prefill_tokens", 0.0) / t if t else None
+    t = c.get("prefill_time_s")
+    return c["prefill_tokens"] / t if t else None
 
 
 def _extend_tok_rate(s: Dict) -> Optional[float]:
     """Throughput of the extend-phase advances alone (engine counters:
     extend_tokens / extend_time_s, the device-synced wall of each
-    coalesced call). First-chunk opens are excluded — they are identical
-    in the batched and per-request drivers, so this is the clean axis
-    ``batched_prefill_speedup`` compares."""
+    coalesced call). With the batch-1 open path gone this covers every
+    prefill token in both the batched and per-request drivers, so this
+    is the clean axis ``batched_prefill_speedup`` compares."""
     t = s["counters"].get("extend_time_s")
     return s["counters"].get("extend_tokens", 0.0) / t if t else None
 
@@ -196,12 +216,17 @@ def _phase_breakdown(s: Dict) -> Dict:
     the orchestrator's always-on phase counters: the disjoint per-tick
     stages (``phase_sum_s`` = their sum, <= the measured ``tick_time_s``
     total — the rest is scheduler/stream/telemetry glue) plus the
-    engine-side prefill sub-phases (``open``/``extend``, contained in
-    ``prefill_time_s``)."""
+    engine-side prefill sub-phase (``extend``, contained in
+    ``prefill_time_s``; ``open_time_s`` is retained one cycle, always
+    0 — the batch-1 open path is gone)."""
     c = s["counters"]
     out = {k: float(c.get(k, 0.0)) for k in PHASE_TIME_KEYS}
     out["open_time_s"] = float(c.get("open_time_s", 0.0))
     out["extend_time_s"] = float(c.get("extend_time_s", 0.0))
+    # fused replays: the megabatch call's wall (inside dispatch_time_s)
+    # and its prefill-row apportionment
+    out["fused_time_s"] = float(c.get("fused_time_s", 0.0))
+    out["fused_prefill_time_s"] = float(c.get("fused_prefill_time_s", 0.0))
     out["tick_time_s"] = float(c.get("tick_time_s", 0.0))
     out["phase_sum_s"] = sum(float(c.get(k, 0.0)) for k in PHASE_TIME_KEYS)
     return out
@@ -316,22 +341,27 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
         # is measured separately below
         if paged:
             eng.mirror = False
-        # warmup: compile prefill/extend/decode/sampler shapes on the same
-        # engine (the jit caches live on the engine's partials) for BOTH
-        # prefill drivers, then replay the measured trace fresh per
-        # driver. The drivers share one code path (sync IS the two-phase
-        # surface at depth 0; per-request prefill IS the batch-of-one
-        # shim), so their true timing differences are small; replays are
-        # INTERLEAVED (sync, async, unbatched, sync, ...) and each driver
-        # keeps its best, so a shared-box noise burst lands on every
-        # driver instead of silently skewing a ratio.
+        # warmup: compile every driver's shapes on the same engine (the
+        # jit caches live on the engine's partials) — fused (slots,chunk)
+        # + (slots,1), split extend/decode, and the batch-of-one
+        # shim — then replay the measured trace fresh per driver. The
+        # warmup wall is recorded as compile_time_s so steady-state
+        # numbers never pay jit compilation. Timed replays are
+        # INTERLEAVED (sync, async, unfused, unbatched, sync, ...) and
+        # each driver keeps its best, so a shared-box noise burst lands
+        # on every driver instead of silently skewing a ratio.
+        t0 = time.perf_counter()
         replay(eng, warmup)
-        replay(eng, warmup, batched_prefill=False)
+        replay(eng, warmup, fused_step=False)
+        replay(eng, warmup, fused_step=False, batched_prefill=False)
+        compile_time_s = time.perf_counter() - t0
         drivers = {
             "sync": dict(dispatch_ahead=0),
             "async": dict(dispatch_ahead=DISPATCH_AHEAD),
+            "unfused": dict(dispatch_ahead=DISPATCH_AHEAD,
+                            fused_step=False),
             "unbatched": dict(dispatch_ahead=DISPATCH_AHEAD,
-                              batched_prefill=False),
+                              fused_step=False, batched_prefill=False),
         }
         best: Dict[str, Tuple] = {}
         best_prefill: Dict[str, float] = {}
@@ -350,6 +380,7 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
                                          _extend_tok_rate(summ) or 0.0)
         s_sync, sync_toks = best["sync"]
         s, async_toks = best["async"]
+        unf_toks = best["unfused"][1]
         unb_toks = best["unbatched"][1]
         # no driver may change WHAT is served, only how the work is
         # scheduled on the device: greedy streams are byte-identical by
@@ -358,11 +389,16 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
             raise AssertionError(
                 f"{name}: async dispatch/collect driver diverged from the "
                 f"synchronous baseline on the same trace")
+        if unf_toks != async_toks:
+            raise AssertionError(
+                f"{name}: fused megabatch tick diverged from the split "
+                f"extend/decode driver on the same trace")
         if unb_toks != async_toks:
             raise AssertionError(
                 f"{name}: batched ragged prefill diverged from the "
                 f"per-request prefill driver on the same trace")
         rec = _backend_record(s)
+        rec["compile_time_s"] = compile_time_s
         rec["sync_tokens_per_s"] = s_sync["tokens_per_s"]
         rec["sync_ttft_p99_s"] = s_sync["ttft_p99_s"]
         if s["tokens_per_s"] and s_sync["tokens_per_s"]:
@@ -370,19 +406,29 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
                 s["tokens_per_s"] / s_sync["tokens_per_s"])
         # each driver's BEST rate across the interleaved replays: the
         # ratios compare the drivers' achievable rates instead of
-        # whichever replay won on total tokens_per_s. prefill_tokens_per_s
-        # is the whole prefill stage (opens + extends); the speedup is
-        # the extend-phase ratio — opens are identical in both drivers,
-        # so including them would only dilute the coalescing signal
+        # whichever replay won on total tokens_per_s.
+        # prefill_tokens_per_s is the whole prefill stage (fused driver:
+        # the fused call's prefill-row apportionment; unfused: the
+        # ragged extends, which now carry every prefill token).
+        # fused_step_speedup is that stage ratio — the win of folding
+        # the per-tick dispatches into the one megabatch call. The
+        # batched_prefill_speedup axis stays the extend-phase ratio of
+        # the two UNFUSED drivers, so the coalescing signal stays
+        # undiluted.
         rec["prefill_tokens_per_s"] = best_prefill["async"] or None
+        rec["unfused_prefill_tokens_per_s"] = (best_prefill["unfused"]
+                                               or None)
         rec["unbatched_prefill_tokens_per_s"] = (best_prefill["unbatched"]
                                                  or None)
-        rec["prefill_extend_tokens_per_s"] = best_extend["async"] or None
+        if best_prefill["async"] and best_prefill["unfused"]:
+            rec["fused_step_speedup"] = (
+                best_prefill["async"] / best_prefill["unfused"])
+        rec["prefill_extend_tokens_per_s"] = best_extend["unfused"] or None
         rec["unbatched_prefill_extend_tokens_per_s"] = (
             best_extend["unbatched"] or None)
-        if best_extend["async"] and best_extend["unbatched"]:
+        if best_extend["unfused"] and best_extend["unbatched"]:
             rec["batched_prefill_speedup"] = (
-                best_extend["async"] / best_extend["unbatched"])
+                best_extend["unfused"] / best_extend["unbatched"])
         if trace_out:
             # dedicated traced replay on the warm engine, AFTER the timed
             # A/B (spans cover the production async driver; the timed
@@ -421,6 +467,10 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
              f"tok_per_s={s['tokens_per_s']:.1f}"),
             (f"serving/{name}/async_vs_sync", 0.0,
              f"speedup={rec.get('async_speedup_vs_sync', 0.0):.3f}"),
+            (f"serving/{name}/fused_step", compile_time_s * 1e6,
+             f"speedup={rec.get('fused_step_speedup', 0.0):.3f} "
+             f"prefill_tok_per_s={rec.get('prefill_tokens_per_s') or 0.0:.1f} "
+             f"compile={compile_time_s:.2f}s"),
             (f"serving/{name}/memory", 0.0,
              f"kv_tokens_peak={rec['kv_tokens_peak']} "
              f"pool_pages_peak={rec['pool_pages_peak']}"),

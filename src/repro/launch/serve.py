@@ -12,6 +12,8 @@ Quest / SnapKV composition).
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-0.6b --reduced --dispatch-ahead 0     # sync baseline
     PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen3-0.6b --reduced --no-fused-step  # split-path baseline
+    PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-0.6b --reduced --trace-out trace.json \
         --metrics-interval 5                               # observability
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
@@ -53,6 +55,11 @@ def main() -> None:
     ap.add_argument("--no-batched-prefill", action="store_true",
                     help="advance prefills one batch-1 call per task per "
                          "tick (the per-request parity baseline)")
+    ap.add_argument("--no-fused-step", action="store_true",
+                    help="disable the fused megabatch tick (one jitted "
+                         "ragged call advancing every live request) and use "
+                         "the split prefill/decode dispatch paths instead "
+                         "(the fused-parity baseline)")
     ap.add_argument("--dispatch-ahead", type=int, default=1,
                     help="decode steps kept in flight on the device "
                          "(0 = synchronous one-step-per-tick baseline)")
@@ -127,7 +134,8 @@ def main() -> None:
         sched=SchedulerConfig(chunk_tokens=args.chunk_tokens,
                               dispatch_ahead=args.dispatch_ahead,
                               max_prefill_batch=args.max_prefill_batch,
-                              batched_prefill=not args.no_batched_prefill),
+                              batched_prefill=not args.no_batched_prefill,
+                              fused_step=not args.no_fused_step),
         max_pending=args.max_pending,
         tracer=tracer,
         metrics_interval_s=args.metrics_interval)

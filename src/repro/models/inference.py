@@ -428,6 +428,15 @@ def prefill_extend_ragged(params: Params, cfg: ModelConfig,
       * per-row stats ``{"evict_trigger_rows": [B], "adm_sum_rows":
         [B]}`` (sums over that row's real positions only), so serving
         backends can account admission/eviction per request.
+
+    Rows are independent per position, which is what the fused serving
+    megabatch tick (serving/engine.py ``step_batch``) builds on: a
+    FIRST-CHUNK row is just a freshly-spliced EMPTY cache row (per-row
+    ``t`` starts its scan at position 0 — no separate batch-1 open
+    path), and a live DECODE row rides along as a length-1 row whose
+    single position computes exactly the batch-1 ``decode_step`` —
+    so opens, mid-prefill extends, and decode steps share this one
+    compiled call.
     """
     # batch axes differ per subtree ("t"/stem batch-leading, "blocks"
     # stacked [n_repeats, B, ...], "obs" [n_repeats, n_attn, B, ...]);

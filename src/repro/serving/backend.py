@@ -12,37 +12,48 @@ possible (``benchmarks/bench_serving.py --backends wgkv,dense``).
 Protocol surface (one request = one chunked prefill + one decode slot):
 
   * ``start_prefill(prompt) -> PrefillTask`` — open a chunked prefill.
-  * ``prefill_step_batch(tasks, max_tokens) -> [bool]`` — advance EVERY
-    task by at most one chunk, running the model math for all
-    mid-prefill tasks as ONE batched ragged jitted call (tokens
-    ``[B, S]`` + per-row lengths; writes past a row's length are masked,
-    so each row's cache state is bit-identical to the sequential batch-1
-    path). Returns each task's done flag. Gated by
-    ``BackendCapabilities.batched_prefill``.
-  * ``prefill_step(task, max_tokens) -> bool`` — DEPRECATED batch-of-one
-    shim over ``prefill_step_batch`` (one deprecation cycle, like
-    ``generate()`` before it); kept so single-request callers and
-    backends without batched prefill keep working.
+  * ``step_batch(tasks, max_tokens, decode=True) -> FusedStep | None`` —
+    THE fused megabatch tick: ONE jitted ragged device call advances
+    every live row of the persistent batched cache tree, whatever its
+    phase. A first-chunk row is spliced in as an EMPTY row (per-row
+    ``t`` offsets make the ragged scan start it from position 0 — no
+    separately-compiled batch-1 open), a mid-prefill row takes its next
+    prompt chunk, a live decode row piggybacks as a length-1 ragged row
+    fed from the on-device sampled-token vector, and a dead row is
+    length-0 padding whose state is kept bit-identical by per-leaf
+    masked writes. Sampling runs inside the same jitted call; the
+    result is an uncollected :class:`FusedStep` (dispatch-ahead works
+    exactly as with ``dispatch_decode``). Gated by
+    ``BackendCapabilities.fused_step``.
+  * ``prefill_step_batch(tasks, max_tokens) -> [bool]`` — DEPRECATED
+    (one cycle): advance EVERY task by at most one chunk as ONE batched
+    ragged jitted call over per-task batch-1 trees (tokens ``[B, S]`` +
+    per-row lengths). Still the unfused parity baseline; gated by
+    ``BackendCapabilities.batched_prefill``. (The older batch-of-one
+    ``prefill_step`` shim served its cycle and is gone.)
   * ``finish_prefill(task, emit_first=True) -> Prefix`` — seal the task;
     with ``emit_first`` the first generated token is sampled from the
     prefill's own last-position logits (no extra decode step, no
     duplicate KV write — JetStream semantics: TTFT ends at prefill).
+    Fused-path tasks never reach it: their first token comes out of
+    ``collect`` on the step whose chunk completed the prompt.
   * ``insert(prefix, slot)`` — splice the batch-1 caches into decode row
-    ``slot`` of the batched state.
+    ``slot`` of the batched state (unfused path only; fused-path rows
+    are already resident).
   * ``free_slot(slot)`` — retire a slot and release its physical memory.
   * ``capabilities() -> BackendCapabilities`` — static descriptor
-    (gated? physically paged?) the orchestrator/telemetry key off.
+    (gated? physically paged? fused?) the orchestrator/telemetry key off.
   * ``memory_snapshot() -> dict`` — point-in-time memory telemetry
     (resident KV tokens/bytes, paged-pool pages/utilization when paged).
 
 Decode is a TWO-PHASE surface so host work never blocks the device:
 
-  * ``dispatch_decode() -> InflightStep | None`` — enqueue one jitted
-    batched decode step over all live slots WITHOUT synchronizing. The
-    sampled next-token vector stays on device and becomes the feed of
-    the next dispatch, so the driver may dispatch step t+1 before
-    step t's result has ever touched the host (dispatch-ahead depth
-    >= 1). Returns None when no slot is live.
+  * ``step_batch(...) -> FusedStep | None`` / ``dispatch_decode() ->
+    InflightStep | None`` — enqueue one jitted batched step WITHOUT
+    synchronizing. The sampled next-token vector stays on device and
+    becomes the feed of the next dispatch, so the driver may dispatch
+    step t+1 before step t's result has ever touched the host
+    (dispatch-ahead depth >= 1). Returns None when nothing can advance.
   * ``collect(step) -> {slot: token}`` — the sync point: pull the
     sampled tokens to host, fold eviction/admission stats into
     ``stats``, and apply the step's cache delta to the paged mirror.
@@ -51,12 +62,29 @@ Decode is a TWO-PHASE surface so host work never blocks the device:
     re-inserted) between dispatch and collect is skipped — its token is
     discarded and its pool streams are left exactly as ``free_slot`` /
     ``insert`` put them (per-slot generation counters guard the race).
+    For a :class:`FusedStep` the token map also carries FIRST tokens of
+    rows whose prompt completed in that step (``step.finishing``).
 
 (The ``generate()`` synchronous shim — ``collect(dispatch_decode())`` —
 served its one deprecation cycle and is gone; single-step callers run
 the two-phase surface directly.)
 
-Lifecycle of one request (slots are rows of one batched cache tree)::
+Fused lifecycle (default; slots are rows of ONE persistent batched tree)::
+
+    submit ──> start_prefill (slot reserved; row spliced empty on the
+              │                first step_batch that includes the task)
+              v
+        step_batch(tasks, chunk) ──> [device: ONE fused ragged step]
+              │   prefill rows: next chunk   decode rows: length-1
+              │   dead rows: length-0 (bit-identical padding)
+              ├──> step_batch(...)  [device: step t+1, dispatch-ahead]
+              v
+        collect(step t) ── {slot: token} (decode tokens + first tokens
+              │                           of rows finishing prompt)
+              v
+        free_slot(slot)          (finished / cancelled)
+
+Unfused lifecycle (deprecated, kept one cycle as the parity baseline)::
 
     submit ──> start_prefill ──> prefill_step_batch* ──> finish_prefill
                                                         │ first token
@@ -102,7 +130,11 @@ class Prefix:
 
 @dataclasses.dataclass
 class PrefillTask:
-    """Incremental chunked-prefill state (one request, batch 1)."""
+    """Incremental chunked-prefill state (one request).
+
+    Unfused path: ``caches`` is the task's own batch-1 tree. Fused path:
+    the task's state lives as row ``slot`` of the engine's persistent
+    batched tree (``caches`` stays None; ``done`` keys off ``slot``)."""
     prompt: List[int]
     pos: int = 0                       # prompt tokens already in the cache
     caches: Any = None
@@ -111,10 +143,14 @@ class PrefillTask:
     # is done these are the first-token logits (finish_prefill samples
     # them directly instead of re-feeding prompt[-1] through decode_step)
     last_logits: Any = None
+    # fused path: the decode row this task is resident in (set by the
+    # scheduler at admit; step_batch requires it)
+    slot: Optional[int] = None
 
     @property
     def done(self) -> bool:
-        return self.caches is not None and self.pos >= len(self.prompt)
+        opened = self.caches is not None or self.slot is not None
+        return opened and self.pos >= len(self.prompt)
 
 
 @dataclasses.dataclass
@@ -135,6 +171,27 @@ class InflightStep:
     collected: bool = False
 
 
+@dataclasses.dataclass
+class FusedStep(InflightStep):
+    """One dispatched-but-uncollected FUSED megabatch step.
+
+    Extends :class:`InflightStep` with the per-row role bookkeeping of a
+    fused tick: which rows took prompt chunks (and whether that chunk
+    completed the prompt), which rows decoded, and which were length-0
+    padding. ``tokens`` holds the on-device sampled vector — the next
+    token for decode rows AND the first generated token for finishing
+    prefill rows (their last-real-position logits are the prompt's final
+    logits, so sampling them inside the fused call IS JetStream's
+    emit-first semantics with zero extra device work)."""
+    tasks: Tuple[PrefillTask, ...] = ()   # prefill rows advanced this step
+    takes: Tuple[int, ...] = ()           # prompt tokens each task consumed
+    fulls: Tuple[bool, ...] = ()          # task chunk == full chunk width?
+    finishing: Tuple[bool, ...] = ()      # task's prompt completed this step?
+    decode_rows: Tuple[int, ...] = ()     # rows that decoded (length-1)
+    had_prefill: bool = False
+    t_dispatch: float = 0.0               # host wall clock at dispatch
+
+
 @dataclasses.dataclass(frozen=True)
 class BackendCapabilities:
     """Static backend descriptor consumed by orchestrator/telemetry/bench."""
@@ -147,8 +204,12 @@ class BackendCapabilities:
     sharded: bool = False
     # prefill_step_batch advances every mid-prefill task in one batched
     # ragged jitted call (the scheduler falls back to per-task
-    # prefill_step when False)
+    # prefill_step_batch([task]) calls when False)
     batched_prefill: bool = False
+    # step_batch fuses prefill opens/extends and decode rows into ONE
+    # jitted ragged call per tick over a persistent batched cache tree
+    # (the scheduler falls back to the unfused phases when False)
+    fused_step: bool = False
 
 
 @runtime_checkable
@@ -162,7 +223,7 @@ class EngineBackend(Protocol):
     # observability handle (repro.serving.obs.trace.Tracer). Backends
     # default it to NULL_TRACER; the Orchestrator overwrites it with its
     # own tracer at construction so engine-side sub-phase spans
-    # (prefill_open / prefill_extend_ragged / decode dispatch) land on
+    # (fused_open / prefill_extend_ragged / decode dispatch) land on
     # the same timeline as the scheduler's tick phases.
     tracer: Any
 
@@ -170,18 +231,24 @@ class EngineBackend(Protocol):
 
     def start_prefill(self, prompt: List[int]) -> PrefillTask: ...
 
+    # fused megabatch tick (gated by capabilities().fused_step): one
+    # jitted ragged call advancing prefill chunks + piggybacked decode
+    # rows; collect() accepts the returned FusedStep
+    def step_batch(self, tasks: List[PrefillTask],
+                   max_tokens: Optional[int] = None, *,
+                   decode: bool = True) -> Optional[FusedStep]: ...
+
+    # deprecated (one cycle): unfused batched ragged prefill over
+    # per-task batch-1 trees — the fused path's parity baseline
     def prefill_step_batch(self, tasks: List[PrefillTask],
                            max_tokens: Optional[int] = None) -> List[bool]: ...
-
-    # deprecated batch-of-one shim: prefill_step_batch([task])[0]
-    def prefill_step(self, task: PrefillTask,
-                     max_tokens: Optional[int] = None) -> bool: ...
 
     def finish_prefill(self, task: PrefillTask, *,
                        emit_first: bool = True) -> Prefix: ...
 
     def insert(self, prefix: Prefix, slot: int) -> None: ...
 
+    # deprecated (one cycle): unfused decode-only dispatch
     def dispatch_decode(self) -> Optional[InflightStep]: ...
 
     def collect(self, step: InflightStep) -> Dict[int, int]: ...

@@ -12,10 +12,12 @@ Shares the batched slot machinery (insert/dispatch-collect/free via
 launch/specs.py splice helpers) with the Engine base class; only the
 prefill path and the memory accounting differ:
 
-  * prefill: dense causal attention has no window-alignment constraint, so
-    the first chunk runs ``I.prefill(use_wgkv=False)`` at any length and
-    later chunks ride the same batched ragged extend (decode_step
-    dispatches on the cache type).
+  * prefill: every chunk — the first included — rides the shared batched
+    ragged extend scan from an empty DENSE cache template (decode_step
+    dispatches on the cache type); for full causal attention the scan is
+    mathematically the one-shot ``I.prefill(use_wgkv=False)``, and
+    sharing the per-token path with the fused tick keeps fused-vs-unfused
+    streams byte-identical.
   * memory: no paged-pool mirror — the dense baseline's resident KV is
     exactly ``t`` tokens per (layer, kv-head) stream, reported logically
     via ``memory_snapshot`` for the A/B memory comparison.
@@ -29,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.launch.specs import build_decode_caches
 from repro.models import inference as I
 from repro.models.attention import DenseCache
 from repro.serving.backend import BackendCapabilities, PrefillTask
@@ -57,7 +60,8 @@ class DenseEngine(Engine):
         return BackendCapabilities(
             name="dense", gated=False, paged=False,
             description="uncompressed full-KV cache (no admission)",
-            sharded=self.mesh is not None, batched_prefill=True)
+            sharded=self.mesh is not None, batched_prefill=True,
+            fused_step=True)
 
     def memory_snapshot(self) -> Dict[str, float]:
         toks = 0
@@ -92,7 +96,8 @@ class DenseEngine(Engine):
         return out
 
     # ------------------------------------------------------------------
-    # chunked prefill (dense: no window alignment; first chunk any size)
+    # chunked prefill (dense: scan-from-empty like the base class; only
+    # the capacity guard differs — the prompt must fit the dense buffer)
     # ------------------------------------------------------------------
     def start_prefill(self, prompt: List[int]) -> PrefillTask:
         # the first token is sampled from the prefill's own last-position
@@ -101,30 +106,15 @@ class DenseEngine(Engine):
             f"prompt {len(prompt)} needs dense capacity > {len(prompt)}"
         return PrefillTask(prompt=list(prompt))
 
-    def _prefill_open(self, task: PrefillTask,
-                      max_tokens: Optional[int]) -> bool:
-        """Dense first chunk: no window-alignment constraint, so the
-        whole chunk runs through ``I.prefill(use_wgkv=False)`` at any
-        length and the task always consumes its tick (later chunks join
-        the shared ragged batched extend — decode_step dispatches on the
-        cache type)."""
-        n = len(task.prompt)
-        cap = n if max_tokens is None else min(n, max_tokens)
-        toks = jnp.asarray(task.prompt[:cap], jnp.int32)[None]
-        po, task.caches = I.prefill(
-            self.params, self.cfg, toks, use_wgkv=False,
-            max_len=self.capacity, opts=self.opts)
-        # sync like the wgkv open (whose float(mean_admission) blocks):
-        # the scheduler's prefill_time_s stage timer must see the open's
-        # device time, or dense's prefill_tokens_per_s reads inflated
-        jax.block_until_ready(po.logits)
-        task.last_logits = po.logits
-        task.pos = cap
-        task.adm_weighted += 1.0 * cap     # dense admits every token
-        return True
-
     def _extend_admission(self, adm_sum, take: int, full: bool) -> float:
         return 1.0 * take                  # dense admits every token
+
+    def _build_empty_caches(self):
+        # fused first-chunk open: an empty DENSE tree (t=0); the ragged
+        # scan appends the chunk token-by-token, which for full causal
+        # attention is mathematically the one-shot prefill
+        return build_decode_caches(self.cfg, 1, self.capacity,
+                                   use_wgkv=False, prefilled=0)
 
     # ------------------------------------------------------------------
     # capacity guard: a dense slot grows by one token per decode step
@@ -150,6 +140,23 @@ class DenseEngine(Engine):
                 if step.live[s]:
                     self._slot_len[s] += 1
         return step
+
+    def _pre_fused_dispatch(self, prefill, decode_rows) -> None:
+        # same dispatch-time overflow guard for the fused step: a prefill
+        # row grows by its chunk take, a decode row by one token
+        for s, take in prefill:
+            if self._slot_len[s] + take > self.capacity:
+                raise RuntimeError(
+                    f"dense cache overflow: slot {s} at t={self._slot_len[s]} "
+                    f"+ chunk {take} > capacity {self.capacity}")
+            self._slot_len[s] += take
+        for s in decode_rows:
+            if self._slot_len[s] >= self.capacity:
+                raise RuntimeError(
+                    f"dense cache overflow: slot {s} at t={self._slot_len[s]} "
+                    f"== capacity {self.capacity}; raise capacity or lower "
+                    "max_new")
+            self._slot_len[s] += 1
 
     def free_slot(self, slot: int) -> None:
         super().free_slot(slot)

@@ -11,24 +11,40 @@ continuous-batching orchestrator (serving/orchestrator/) schedules
 backend-agnostically (dense full-KV and static-admission siblings live in
 serving/dense.py and serving/static_admission.py):
 
+  * ``step_batch(tasks, chunk, decode=True)`` — the FUSED megabatch
+    tick: one jitted ragged call over the persistent batched cache tree
+    advances every live row whatever its phase. A first-chunk task is
+    spliced in as an EMPTY row (per-row ``t`` makes the ragged scan
+    start it at position 0 — the batch-1 budgeted open path is gone
+    from the fused tick), mid-prefill rows take their next prompt
+    chunk, live decode rows piggyback as length-1 rows fed from the
+    on-device sampled vector, dead rows are length-0 bit-identical
+    padding. Sampling runs inside the same call; ``collect`` returns
+    decode tokens AND the first tokens of rows whose prompt finished.
   * ``start_prefill`` / ``prefill_step_batch`` / ``finish_prefill`` —
-    chunked prefill: each task's first chunk runs the budgeted
-    vertical-slash prefill on a ``w_local``-aligned prefix (batch-1, its
-    own attention path), and EVERY mid-prefill task then advances through
-    one batched ragged ``prefill_extend_ragged`` scan per call — tokens
-    ``[B, S]`` with per-row lengths, masked so each row's cache state is
-    bit-identical to the sequential batch-1 path. ``prefill_step`` is the
-    deprecated batch-of-one shim over the same call.
+    the DEPRECATED unfused chunked prefill (one cycle; it is the fused
+    path's parity baseline): a fresh task opens as the same EMPTY
+    batch-1 template the fused splice uses, and EVERY task — first
+    chunk included — advances through one batched ragged
+    ``prefill_extend_ragged`` scan per call — tokens ``[B, S]`` with
+    per-row lengths, masked so each row's cache state is bit-identical
+    to the sequential batch-1 path. The batch-1 budgeted one-shot open
+    is gone from serving entirely (both drivers share one per-token
+    computation path, which is what makes fused-vs-unfused streams
+    byte-identical); ``I.prefill`` remains the offline/eval surface.
+    (The batch-of-one ``prefill_step`` shim served its deprecation
+    cycle and is gone.)
   * ``insert(prefix, slot)`` — splice the batch-1 cache tree into the
     batched decode state (launch/specs.py helpers) and mirror it into the
-    physical paged pool.
+    physical paged pool (unfused path; fused rows are already resident).
   * ``dispatch_decode()`` / ``collect(step)`` — the two-phase decode
     surface: dispatch enqueues one jitted batched step over all live
     slots with the sampled next-token feed staying on device (so a
     second step can be dispatched behind it), collect is the host sync
     point that pulls tokens, folds stats, and applies the paged-mirror
-    delta. (The ``generate()`` synchronous shim served its deprecation
-    cycle and is gone.)
+    delta. ``dispatch_decode`` is deprecated (one cycle) in favor of a
+    task-less ``step_batch``; ``collect`` serves both step kinds. (The
+    ``generate()`` synchronous shim served its cycle and is gone.)
   * ``free_slot(slot)`` — release the slot and reclaim its pool pages.
 
 The legacy fixed-slot loop (``add_request``/``step``/``run``) is kept as a
@@ -51,11 +67,12 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
 from repro.core.dual_cache import DualCache
-from repro.launch.specs import alloc_batched_caches, build_decode_caches
+from repro.launch.specs import (alloc_batched_caches, build_decode_caches,
+                                extract_slot_caches)
 from repro.models import inference as I
 from repro.serving import paged
-from repro.serving.backend import (BackendCapabilities, InflightStep,  # noqa: F401,E501
-                                   Prefix, PrefillTask)
+from repro.serving.backend import (BackendCapabilities, FusedStep,  # noqa: F401,E501
+                                   InflightStep, Prefix, PrefillTask)
 from repro.serving.obs.trace import NULL_TRACER
 from repro.serving.sampling import sample
 from repro.serving.sharded import ShardedDecodeMixin
@@ -111,8 +128,13 @@ class Engine(ShardedDecodeMixin):
         self.params = self._sharding_setup(params, mesh)
         self._decode = self._make_decode()
         self._extend_batch = self._make_extend_batch()
+        self._fused = self._make_fused_step()
         self._sample = self._make_sampler()
         self._tok_dev = jnp.zeros((slots,), jnp.int32)
+        # fused path: which rows of the persistent batched tree hold a
+        # mid-prefill task's state (spliced empty at its first step_batch)
+        self._resident: List[bool] = [False] * slots
+        self._empty_tree = None
         self.stats = {"steps": 0, "evict_triggers": 0.0, "decode_adm_sum": 0.0,
                       # extend-phase advances only (the path batching
                       # coalesces; first-chunk opens excluded): wall time
@@ -123,7 +145,15 @@ class Engine(ShardedDecodeMixin):
                       # cache alloc) — the other prefill sub-phase, so the
                       # BENCH breakdown can split the prefill stage into
                       # open vs coalesced-extend time
-                      "open_time_s": 0.0, "open_tokens": 0.0}
+                      "open_time_s": 0.0, "open_tokens": 0.0,
+                      # fused megabatch ticks: dispatch->collect wall per
+                      # step, plus the prefill-stage share (steps carrying
+                      # at least one prompt chunk, and the chunk tokens
+                      # they advanced) so bench can report a compile-free
+                      # fused prefill-stage tokens/s
+                      "fused_steps": 0.0, "fused_time_s": 0.0,
+                      "fused_prefill_time_s": 0.0,
+                      "fused_prefill_tokens": 0.0}
         # observability handle; the Orchestrator overwrites this with its
         # own tracer so engine-side sub-phase spans share its timeline
         self.tracer = NULL_TRACER
@@ -135,7 +165,8 @@ class Engine(ShardedDecodeMixin):
         return BackendCapabilities(
             name="wgkv", gated=True, paged=self.mirror,
             description="write-gated dual cache (learned admission)",
-            sharded=self.mesh is not None, batched_prefill=True)
+            sharded=self.mesh is not None, batched_prefill=True,
+            fused_step=True)
 
     def memory_snapshot(self) -> Dict[str, float]:
         """Point-in-time memory telemetry: resident logical KV tokens/bytes
@@ -176,79 +207,50 @@ class Engine(ShardedDecodeMixin):
     def start_prefill(self, prompt: List[int]) -> PrefillTask:
         return PrefillTask(prompt=list(prompt))
 
-    def prefill_step(self, task: PrefillTask,
-                     max_tokens: Optional[int] = None) -> bool:
-        """DEPRECATED batch-of-one shim over :meth:`prefill_step_batch`
-        (one deprecation cycle, like ``generate()`` before it): single-
-        request callers advance through the same ragged batched path at
-        B = 1, so the shim and the batch are bit-identical by
-        construction."""
-        return self.prefill_step_batch([task], max_tokens)[0]
-
     def prefill_step_batch(self, tasks: List[PrefillTask],
                            max_tokens: Optional[int] = None) -> List[bool]:
-        """Advance EVERY task by at most ``max_tokens`` prompt tokens
-        (None = each task's whole remaining prompt). A task's first
-        chunk runs the budgeted vertical-slash prefill on a
-        window-aligned prefix (batch-1 — a different attention path than
-        the extend scan, so it cannot join the ragged batch without
-        changing bits); every other mid-prefill task advances through
-        ONE batched ragged jitted extend — tokens ``[B, S]`` plus
+        """DEPRECATED (one cycle) in favor of :meth:`step_batch` — kept
+        as the unfused parity baseline the fused tick is asserted
+        byte-identical against.
+
+        Advance EVERY task by at most ``max_tokens`` prompt tokens
+        (None = each task's whole remaining prompt). A fresh task opens
+        as the EMPTY batch-1 cache template (its per-row ``t`` starts
+        the scan at position 0) and joins the same call as everyone
+        else: ONE batched ragged jitted extend — tokens ``[B, S]`` plus
         per-row lengths, writes past a row's length masked so shorter
         rows are pure padding with cache state bit-identical to the
-        sequential batch-1 path. Returns each task's done flag."""
+        sequential batch-1 path. First chunks ride the identical
+        per-token computation the fused tick runs, which is what makes
+        the two drivers' streams byte-identical (the old batch-1
+        budgeted one-shot open was a different attention path — same
+        admitted set, different float bits — so greedy argmax could
+        flip on near-tie logits). Returns each task's done flag."""
         if max_tokens is not None and max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
-        consumed: set = set()
-        fresh = [t for t in tasks if t.caches is None]
-        if fresh:
-            # first-chunk opens run batch-1 on their own attention path —
-            # timed as the "open" sub-phase of the prefill stage (the
-            # ragged extend below is the other), so the BENCH breakdown
-            # can split prefill into open vs coalesced-extend time
-            t_open = time.perf_counter()
-            with self.tracer.span("prefill_open", n=len(fresh)):
-                for task in fresh:
-                    if self._prefill_open(task, max_tokens):
-                        consumed.add(id(task))
-            self.stats["open_time_s"] += time.perf_counter() - t_open
-            self.stats["open_tokens"] += float(sum(t.pos for t in fresh))
-        extend: List[PrefillTask] = []
         for task in tasks:
-            if id(task) in consumed:
-                continue        # aligned one-shot head consumed this tick
-            if task.pos < len(task.prompt):
-                extend.append(task)
+            if task.caches is None:
+                task.caches = self._fresh_task_caches()
+        extend = [t for t in tasks if t.pos < len(t.prompt)]
         if extend:
             self._extend_ragged(extend, max_tokens)
         return [t.done for t in tasks]
 
-    def _prefill_open(self, task: PrefillTask,
-                      max_tokens: Optional[int]) -> bool:
-        """Open a fresh task's caches. Runs the budgeted one-shot prefill
-        over the window-aligned prompt head when at least one full window
-        fits this chunk (returns True: the task consumed its tick), else
-        allocates empty decode caches so the task can join this tick's
-        ragged extend batch (returns False)."""
-        w = self._w_align
-        n = len(task.prompt)
-        cap = n if max_tokens is None else min(n, max_tokens)
-        n0 = (cap // w) * w
-        if n0 >= w:
-            budget = self.cfg.wgkv.global_budget(self.capacity)
-            toks = jnp.asarray(task.prompt[:n0], jnp.int32)[None]
-            po, task.caches = I.prefill(
-                self.params, self.cfg, toks, budget=budget,
-                max_len=self.capacity, opts=self.opts)
-            task.pos = n0
-            task.adm_weighted += float(po.mean_admission) * n0
-            task.last_logits = po.logits
-            return True
-        task.caches = build_decode_caches(
+    def _fresh_task_caches(self):
+        """Batch-1 EMPTY decode-cache tree: the state a prefill row starts
+        from before its first token. Cached — jax arrays are immutable, so
+        one template serves every unfused short-prompt open and every
+        fused row splice."""
+        if self._empty_tree is None:
+            self._empty_tree = self._build_empty_caches()
+        return self._empty_tree
+
+    def _build_empty_caches(self):
+        caches = build_decode_caches(
             self.cfg, 1, self.capacity, use_wgkv=True, prefilled=0)
         if self.opts.evict_hard_budget is not None:
-            task.caches["obs"] = I._init_obs_tree(self.cfg, 1, self.opts)
-        return False
+            caches["obs"] = I._init_obs_tree(self.cfg, 1, self.opts)
+        return caches
 
     def _extend_ragged(self, tasks: List[PrefillTask],
                        max_tokens: Optional[int]) -> None:
@@ -332,7 +334,7 @@ class Engine(ShardedDecodeMixin):
                 emit_first: bool = True) -> Prefix:
         """One-shot convenience wrapper around the chunked path."""
         task = self.start_prefill(prompt)
-        while not self.prefill_step(task, chunk_tokens):
+        while not self.prefill_step_batch([task], chunk_tokens)[0]:
             pass
         return self.finish_prefill(task, emit_first=emit_first)
 
@@ -354,6 +356,181 @@ class Engine(ShardedDecodeMixin):
         self._tok_dev = self._tok_dev.at[slot].set(tok)
         if self.mirror:
             self._mirror_prefill(slot, prefix.caches)
+
+    # ------------------------------------------------------------------
+    # fused megabatch tick: ONE jitted ragged call per dispatched step
+    # ------------------------------------------------------------------
+    def step_batch(self, tasks: List[PrefillTask],
+                   max_tokens: Optional[int] = None, *,
+                   decode: bool = True) -> Optional[FusedStep]:
+        """Dispatch ONE fused jitted ragged step advancing every live row
+        of the persistent batched cache tree — prefill chunks and decode
+        tokens together — without synchronizing.
+
+        Each ``task`` must carry its reserved ``slot``. A task seen for
+        the first time has an EMPTY batch-1 tree spliced into its row
+        (per-row ``t`` offsets mean the ragged scan simply starts it at
+        position 0 — there is no separately-compiled batch-1 open); a
+        mid-prefill row takes up to ``max_tokens`` of its remaining
+        prompt; with ``decode`` every live slot not taking a chunk joins
+        as a length-1 row fed from the ON-DEVICE sampled-token vector;
+        all other rows are length-0 padding kept bit-identical by the
+        scan's per-leaf masked writes. Sampling runs inside the same
+        jitted call, so a finishing row's first generated token and every
+        decode row's next token come back together from :meth:`collect`.
+
+        Host state advances at dispatch (teacher-forced positions; a
+        finishing row goes live immediately) so a second fused step can
+        be dispatched behind this one — the same dispatch-ahead contract
+        as :meth:`dispatch_decode`. Exactly two compiled shapes exist per
+        engine: ``[slots, chunk]`` and ``[slots, 1]``. Returns None when
+        nothing can advance."""
+        if max_tokens is not None and max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
+        tasks = [t for t in tasks if not t.done]
+        if not tasks and not (decode and any(self.live)):
+            return None
+        t0 = time.perf_counter()
+        if self.caches is None:
+            self.caches = self.place_caches(
+                alloc_batched_caches(self._fresh_task_caches(), self.slots))
+        for t in tasks:
+            assert t.slot is not None, "fused step_batch needs slot-bound tasks"
+            assert not self.live[t.slot], "prefill task in a live decode row"
+            if not self._resident[t.slot]:
+                # first-chunk open: splice the empty template into the row
+                # (a dynamic-update-slice, not a model call — the chunk
+                # itself runs through the same fused scan below)
+                with self.tracer.span("fused_open", slot=t.slot):
+                    self.caches = self.sharded_splice(
+                        self.caches, self._fresh_task_caches(), t.slot)
+                self._resident[t.slot] = True
+                self._slot_gen[t.slot] += 1
+        # ragged feed: prompt chunks left-aligned per row; S pinned to the
+        # chunk width (or w-aligned when unchunked) for compile stability
+        takes = [len(t.prompt) - t.pos if max_tokens is None
+                 else min(len(t.prompt) - t.pos, max_tokens) for t in tasks]
+        if not tasks:
+            s = 1
+        elif max_tokens is None:
+            q = self._w_align
+            s = -(-max(takes) // q) * q
+        else:
+            s = max_tokens
+        toks = np.zeros((self.slots, s), np.int32)
+        lengths = np.zeros((self.slots,), np.int32)
+        use_dev = np.zeros((self.slots,), bool)
+        for t, take in zip(tasks, takes):
+            toks[t.slot, :take] = t.prompt[t.pos:t.pos + take]
+            lengths[t.slot] = take
+        decode_rows = tuple(sl for sl in range(self.slots)
+                            if decode and self.live[sl] and lengths[sl] == 0)
+        for sl in decode_rows:
+            lengths[sl] = 1
+            use_dev[sl] = True
+        self._pre_fused_dispatch(
+            [(t.slot, take) for t, take in zip(tasks, takes)], decode_rows)
+        self.key, sk = jax.random.split(self.key)
+        before = self.caches
+        mirror = self.mirror
+        with self.tracer.device_scope("fused_step"):
+            _logits, self.caches, st = self._fused(
+                self.params,
+                (jnp.asarray(toks), jnp.asarray(lengths), self._tok_dev,
+                 jnp.asarray(use_dev), sk[None]), before)
+        sampled = st["sampled"]
+        # host bookkeeping at dispatch (teacher-forced, deterministic):
+        # advance positions; a finishing row goes live NOW so the next
+        # dispatched step can already decode it
+        finishing = []
+        for t, take in zip(tasks, takes):
+            t.pos += take
+            fin = t.pos >= len(t.prompt)
+            finishing.append(fin)
+            if fin:
+                self.live[t.slot] = True
+        # only rows that really sampled this step (decode rows + finishing
+        # prefill rows) update the device feed; a masked/mid-prefill row's
+        # sampled value is garbage and must not clobber its feed token
+        fed = np.zeros((self.slots,), bool)
+        for sl in decode_rows:
+            fed[sl] = True
+        for t, fin in zip(tasks, finishing):
+            fed[t.slot] = fin
+        self._tok_dev = jnp.where(jnp.asarray(fed), sampled, self._tok_dev)
+        fulls = [max_tokens is not None and take == max_tokens
+                 for take in takes]
+        return FusedStep(
+            tokens=sampled, stats=st,
+            before=before if mirror else None,
+            after=self.caches if mirror else None,
+            live=tuple(self.live), gen=tuple(self._slot_gen),
+            tasks=tuple(tasks), takes=tuple(takes), fulls=tuple(fulls),
+            finishing=tuple(finishing), decode_rows=decode_rows,
+            had_prefill=bool(tasks), t_dispatch=t0)
+
+    def _pre_fused_dispatch(self, prefill: List[Tuple[int, int]],
+                            decode_rows: Tuple[int, ...]) -> None:
+        """Hook before a fused dispatch: ``prefill`` is [(slot, take)].
+        DenseEngine uses it for host-side slot-length tracking and the
+        capacity overflow guard; the dual cache never overflows (ring
+        wraps, global is budget-bounded)."""
+
+    def _collect_fused(self, step: FusedStep) -> Dict[int, int]:
+        """Collect one fused step: ONE host sync pulls sampled tokens and
+        per-row stats; fold admission/eviction accounting, mirror
+        finishing rows' full prefixes and decode rows' deltas into the
+        paged pool, and return {slot: token} — decode tokens plus the
+        FIRST tokens of rows whose prompt completed in this step. The
+        per-slot generation guard drops rows freed (or freed and
+        re-opened) while the step was in flight."""
+        assert not step.collected, "in-flight step collected twice"
+        step.collected = True
+        nxt, trig, adm = jax.device_get(
+            (step.tokens, step.stats["evict_trigger_rows"],
+             step.stats["adm_sum_rows"]))
+        # the device_get blocked on the fused call, so this wall delta is
+        # a true device+host measure of the whole dispatched step
+        wall = time.perf_counter() - step.t_dispatch
+        self.stats["fused_steps"] += 1
+        self.stats["fused_time_s"] += wall
+        if step.had_prefill:
+            self.stats["fused_prefill_time_s"] += wall
+            self.stats["fused_prefill_tokens"] += float(sum(step.takes))
+        self.stats["evict_triggers"] += float(trig.sum())
+        # prefill-row admission: same float path as the unfused extend
+        for t, take, full in zip(step.tasks, step.takes, step.fulls):
+            t.adm_weighted += self._extend_admission(adm[t.slot], take,
+                                                     full=full)
+        if step.decode_rows:
+            self.stats["steps"] += 1
+            # a decode row has exactly one real position, so its ragged
+            # adm SUM is that step's per-row mean admission
+            self.stats["decode_adm_sum"] += self._decode_admission(
+                {"mean_admission": adm}, list(step.decode_rows))
+        rows = [s for s in step.decode_rows
+                if self.live[s] and self._slot_gen[s] == step.gen[s]]
+        if self.mirror and step.before is not None:
+            for t, fin in zip(step.tasks, step.finishing):
+                if fin and self._slot_gen[t.slot] == step.gen[t.slot]:
+                    # prompt complete: mirror the whole resident prefix
+                    # (the fused analogue of insert's mirror)
+                    self._mirror_prefill(
+                        t.slot, extract_slot_caches(step.after, t.slot))
+            if rows:
+                self._mirror_decode(step.before, step.after, rows=rows,
+                                    evicted_rows=trig > 0)
+        out: Dict[int, int] = {}
+        for t, fin in zip(step.tasks, step.finishing):
+            if fin and self._slot_gen[t.slot] == step.gen[t.slot]:
+                tok = int(nxt[t.slot])
+                self.last_token[t.slot] = tok
+                out[t.slot] = tok
+        for s in rows:
+            tok = int(nxt[s])
+            self.last_token[s] = tok
+            out[s] = tok
+        return out
 
     # ------------------------------------------------------------------
     # two-phase decode: dispatch (no sync) / collect (the sync point)
@@ -402,7 +579,11 @@ class Engine(ShardedDecodeMixin):
         owned by the request the step was dispatched for — a slot freed
         (or freed + re-inserted) while the step was in flight is skipped,
         so a cancelled request can never leak its token into a successor
-        and the mirror never resurrects freed pool streams."""
+        and the mirror never resurrects freed pool streams. Serves both
+        step kinds: a :class:`FusedStep` additionally carries first
+        tokens for rows whose prompt completed in that step."""
+        if isinstance(step, FusedStep):
+            return self._collect_fused(step)
         assert not step.collected, "in-flight step collected twice"
         step.collected = True
         # ONE host sync for everything the step owes the host: sampled
@@ -442,6 +623,7 @@ class Engine(ShardedDecodeMixin):
         :meth:`collect` discard the dead row's token and skip its mirror
         delta, so the pages freed here stay freed."""
         self.live[slot] = False
+        self._resident[slot] = False
         self._slot_gen[slot] += 1
         # a retired row keeps decoding (masked) in the batched step; zero
         # its token so the dead row never replays its final token

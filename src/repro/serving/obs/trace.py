@@ -10,10 +10,11 @@ spent*. The tracer answers both with two families of spans:
     -> insert -> decode -> finish/cancel/deadline`` — the lifecycle the
     orchestrator drives;
   * **engine lane** (one lane per tick loop): ``memory_sample``,
-    ``admit``, ``prefill_open`` / ``prefill_extend_ragged`` (engine-side
-    sub-phases), ``prefill_advance``, ``dispatch_decode``, ``collect``,
-    ``evict`` — the per-tick phase decomposition the ROADMAP's fused
-    megabatch / prefix-cache items need as evidence.
+    ``admit``, ``fused_step`` / ``fused_open`` (fused tick and its
+    splice sub-spans) — or, unfused, ``prefill_advance`` with
+    ``prefill_extend_ragged`` sub-spans plus ``dispatch_decode`` —
+    ``collect``, ``evict`` — the per-tick phase decomposition the
+    ROADMAP's fused megabatch / prefix-cache items need as evidence.
 
 Design constraints:
 

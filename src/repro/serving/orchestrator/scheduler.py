@@ -6,6 +6,19 @@ queue, streams, and telemetry serve the WG-KV dual cache, the dense
 full-KV baseline, and the static-admission baselines interchangeably
 (pick one with ``repro.serving.backend.make_backend``).
 
+With a fused-capable backend (``capabilities().fused_step``, the
+default), phases 2 and 3 below collapse into ONE ``step_batch`` call —
+a single jitted ragged device call advancing every live row of the
+engine's persistent batched cache tree, whatever its phase: first-chunk
+opens (spliced in empty, scanned from position 0), mid-prefill chunk
+extends, and piggybacked length-1 decode rows, with sampling inside the
+same call. A row whose prompt completes delivers its FIRST token at that
+step's collect (state prefill -> decode with no separate
+finish_prefill/insert — the row is already resident and live), and
+dispatch-ahead keeps fused steps in flight exactly like decode steps.
+``SchedulerConfig.fused_step=False`` (CLI ``--no-fused-step``) falls back
+to the unfused phases, which remain the parity baseline.
+
 Each tick interleaves four kinds of work:
 
   1. **admit** — pop arrival-ordered requests from the queue into free
@@ -27,7 +40,7 @@ Each tick interleaves four kinds of work:
      of this work overlaps the in-flight batched decode. Backends
      without ``capabilities().batched_prefill`` (and runs with
      ``SchedulerConfig.batched_prefill=False``, the parity baseline)
-     fall back to per-task ``prefill_step`` calls;
+     fall back to per-task ``prefill_step_batch([task])`` calls;
   4. **collect** — synchronize the OLDEST in-flight step (host
      mirroring, sampling pull, stats) and stream one token per live
      request; finished requests free their slot and paged-pool pages on
@@ -47,7 +60,8 @@ import dataclasses
 import time
 from typing import Callable, Deque, Dict, List, Optional
 
-from repro.serving.backend import EngineBackend, InflightStep, PrefillTask
+from repro.serving.backend import (EngineBackend, FusedStep, InflightStep,
+                                   PrefillTask)
 from repro.serving.obs.trace import (CAT_ENGINE, CAT_REQUEST, LANE_REQ,
                                      LANE_TICK, NULL_TRACER, Tracer)
 from repro.serving.orchestrator.queue import (InvalidRequest, QueueFull,
@@ -62,7 +76,13 @@ from repro.serving.orchestrator.telemetry import Telemetry
 # batched-prefill coalescing axis and the BENCH phase-breakdown columns)
 _ENGINE_STAT_KEYS = ("evict_triggers", "decode_adm_sum",
                      "extend_time_s", "extend_tokens",
-                     "open_time_s", "open_tokens")
+                     "open_time_s", "open_tokens",
+                     # fused megabatch ticks: dispatch->collect wall and
+                     # the prefill-stage share (the compile-free
+                     # prefill tokens/s numerator bench_serving reports
+                     # when the fused path ran)
+                     "fused_steps", "fused_time_s",
+                     "fused_prefill_time_s", "fused_prefill_tokens")
 
 
 class _Phase:
@@ -102,10 +122,16 @@ class SchedulerConfig:
     # separate batch-1 calls per tick" semantics the batched path made
     # vacuous.)
     max_prefill_batch: Optional[int] = None
-    # False = advance each task through a separate per-task prefill_step
-    # call even when the backend can batch (the parity/regression
-    # baseline bench_serving A/Bs against)
+    # False = advance each task through a separate per-task
+    # prefill_step_batch([task]) call even when the backend can batch
+    # (the parity/regression baseline bench_serving A/Bs against)
     batched_prefill: bool = True
+    # True (default) = with a fused-capable backend, each tick is ONE
+    # jitted ragged step_batch call advancing prefill opens/chunks and
+    # decode rows together over the persistent batched cache tree.
+    # False (CLI --no-fused-step) = the unfused phase-per-phase tick,
+    # kept one deprecation cycle as the parity/regression baseline.
+    fused_step: bool = True
     decode_while_prefill: bool = True  # decode between prefill chunks
     # decode steps kept in flight on the device (two-phase
     # dispatch/collect; backend.py). 0 = one synchronous dispatch+collect
@@ -173,7 +199,7 @@ class Orchestrator:
         self.clock = clock
         # observability: the tracer records request-lifecycle and
         # tick-phase spans (NULL_TRACER = disabled, branch-cheap); the
-        # engine gets the same handle so its prefill_open/extend_ragged
+        # engine gets the same handle so its fused_open/extend_ragged
         # sub-phases land on the same timeline
         self.tracer = tracer if tracer is not None else NULL_TRACER
         engine.tracer = self.tracer
@@ -194,10 +220,13 @@ class Orchestrator:
         # engines are reusable (e.g. benchmark warmup); report stat deltas
         # relative to this orchestrator's birth, not engine lifetime totals
         self._stats0 = dict(engine.stats)
-        # one capability probe at construction: whether prefill advances
-        # go through the batched ragged call or per-task shim calls
+        # one capability probe at construction: whether the tick runs the
+        # fused megabatch step, and (unfused) whether prefill advances go
+        # through the batched ragged call or per-task calls
+        caps = engine.capabilities()
+        self._fused = sched.fused_step and caps.fused_step
         self._batched_prefill = (sched.batched_prefill
-                                 and engine.capabilities().batched_prefill)
+                                 and caps.batched_prefill)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 32,
@@ -242,9 +271,17 @@ class Orchestrator:
         if req.state == "queued":
             self.queue.remove(rid)
         elif req.state == "prefill":
-            # reserved slot, nothing inserted into the engine yet: drop
-            # the batch-1 task and release the reservation
+            # drop the task and release the reservation; under the fused
+            # tick the task's state is RESIDENT in the engine's batched
+            # tree (and may already be live if its last chunk was
+            # dispatched), so the row must be freed too — the per-slot
+            # generation guard discards anything in-flight steps still
+            # produce for it
             self._prefills.pop(rid, None)
+            if self._fused:
+                with self._phase("evict", counter="evict_time_s",
+                                 slot=req.slot, rid=rid):
+                    self.engine.free_slot(req.slot)
             self.slot_req[req.slot] = None
         elif req.state == "decode":
             with self._phase("evict", counter="evict_time_s",
@@ -291,9 +328,21 @@ class Orchestrator:
         request earlier — that waste is bounded by the window depth and
         unknowable in advance.)"""
         ahead = len(self._inflight)
-        return any(req is not None and req.state == "decode"
-                   and req.max_new - len(req.out) > ahead
-                   for req in self.slot_req)
+
+        def wants_more(req) -> bool:
+            if req is None:
+                return False
+            if req.state == "decode":
+                return req.max_new - len(req.out) > ahead
+            # fused path: a request whose last chunk was dispatched is
+            # live and decoding, but stays state=="prefill" until its
+            # first token is collected
+            if req.state == "prefill" and req.rid in self._prefills:
+                task = self._prefills[req.rid][1]
+                return task.done and req.max_new - len(req.out) > ahead
+            return False
+
+        return any(wants_more(req) for req in self.slot_req)
 
     def _expire_deadlines(self) -> None:
         if not self._deadlined:
@@ -346,16 +395,70 @@ class Orchestrator:
                                     args={"rid": req.rid, "slot": slot,
                                           "prompt_len": len(req.prompt)})
                     self.slot_req[slot] = req
-                    self._prefills[req.rid] = (req,
-                                               self.engine.start_prefill(
-                                                   req.prompt))
+                    task = self.engine.start_prefill(req.prompt)
+                    # fused path: the task's row IS the reserved slot
+                    # (spliced in empty on its first step_batch)
+                    task.slot = slot
+                    self._prefills[req.rid] = (req, task)
                     worked = True
+
+        # 2+3 fused) ONE jitted ragged device call advances every live
+        # row — first-chunk opens, mid-prefill extends, and piggybacked
+        # decode rows together. The step is dispatched WITHOUT
+        # synchronizing and joins the in-flight window; extra decode-only
+        # fused steps top the window up to depth + 1 so dispatch-ahead
+        # semantics match the unfused path exactly.
+        if self._fused:
+            adv = list(self._prefills)[:plan.advance_prefills]
+            pairs = [self._prefills[rid] for rid in adv]
+            tasks = [task for _, task in pairs]
+            pos0 = [task.pos for task in tasks]
+            chunk = self.scheduler.cfg.chunk_tokens
+            with self._phase("fused_step", counter="dispatch_time_s",
+                             tick=tick_no, batch=len(tasks),
+                             width=sum(self.engine.live)) as ph:
+                step = self.engine.step_batch(tasks, chunk,
+                                              decode=plan.decode)
+                if step is not None:
+                    self._inflight.append(step)
+                    self.telemetry.bump("dispatched_steps")
+                    worked = True
+                while (depth > 0 and plan.decode
+                       and len(self._inflight) < depth + 1
+                       and self._dispatch_is_useful()):
+                    extra = self.engine.step_batch([], decode=True)
+                    if extra is None:
+                        break
+                    self._inflight.append(extra)
+                    self.telemetry.bump("dispatched_steps")
+                    worked = True
+            # per-task chunk accounting at dispatch (positions advance
+            # teacher-forced inside step_batch; first tokens arrive at
+            # collect via _route_tokens)
+            t_adv1 = self.clock()
+            advanced = 0
+            for rid, (req, task), p0 in zip(adv, pairs, pos0):
+                took = task.pos - p0
+                if took <= 0:
+                    continue
+                advanced += 1
+                self.telemetry.bump("prefill_chunks")
+                self.telemetry.bump("prefill_tokens", took)
+                req.prefill_chunks += 1
+                self.tracer.add(f"prefill[chunk {req.prefill_chunks - 1}]",
+                                ph.t0, t_adv1, cat=CAT_REQUEST,
+                                lane=(LANE_REQ, rid),
+                                args={"rid": rid, "tokens": took,
+                                      "pos": task.pos, "batch": len(tasks),
+                                      "fused": True})
+            if advanced:
+                self.telemetry.bump("prefill_batches")
 
         # 2) batched chunked prefill: advance the oldest in-flight tasks,
         # ALL through one batched ragged device call when the backend can
         # (runs while up to ``depth`` decode steps from earlier ticks are
         # still in flight — the overlap dispatch-ahead exists for)
-        adv = list(self._prefills)[:plan.advance_prefills]
+        adv = [] if self._fused else list(self._prefills)[:plan.advance_prefills]
         if adv:
             pairs = [self._prefills[rid] for rid in adv]
             tasks = [task for _, task in pairs]
@@ -365,15 +468,16 @@ class Orchestrator:
             # per task): the axes bench_serving's batched_prefill_speedup
             # rides on — total replay wall would drown the prefill stage
             # in decode time on decode-heavy traces. The phase span also
-            # brackets the engine-side prefill_open /
-            # prefill_extend_ragged sub-spans on the trace timeline.
+            # brackets the engine-side prefill_extend_ragged sub-spans
+            # on the trace timeline.
             with self._phase("prefill_advance", counter="prefill_time_s",
                              tick=tick_no, batch=len(tasks)) as ph:
                 if self._batched_prefill:
                     dones = self.engine.prefill_step_batch(tasks, chunk)
                 else:
-                    # per-task fallback: the deprecated batch-of-one shim
-                    dones = [self.engine.prefill_step(task, chunk)
+                    # per-task fallback: batch-of-one calls through the
+                    # same ragged path (the prefill_step shim is retired)
+                    dones = [self.engine.prefill_step_batch([task], chunk)[0]
                              for task in tasks]
             self.telemetry.bump("prefill_batches",
                                 1 if self._batched_prefill else len(tasks))
@@ -417,7 +521,7 @@ class Orchestrator:
         # dispatched while some live request's remaining max_new budget
         # exceeds the tokens already in flight — past that the step is
         # provably wasted (pipeline-flush work the sync path never does).
-        if depth > 0 and plan.decode:
+        if depth > 0 and plan.decode and not self._fused:
             with self._phase("dispatch_decode", counter="dispatch_time_s",
                              tick=tick_no,
                              width=sum(self.engine.live)):
@@ -432,16 +536,19 @@ class Orchestrator:
 
         # 4) decode result: collect the OLDEST in-flight step (the host
         # sync point), or run one synchronous dispatch+collect when async
-        # dispatch is off
+        # dispatch is off (fused steps at depth 0 already sit in the
+        # window, so the fused tick always takes the first branch)
         out: Dict[int, int] = {}
+        step = None
         if self._inflight:
             step = self._inflight.popleft()
             with self._phase("collect", tick=tick_no,
                              width=sum(step.live)):
                 out = self.engine.collect(step)
-            self.telemetry.bump("decode_steps")
+            if self._is_decode_step(step):
+                self.telemetry.bump("decode_steps")
             worked = True
-        elif depth == 0 and plan.decode:
+        elif depth == 0 and plan.decode and not self._fused:
             with self._phase("dispatch_decode", counter="dispatch_time_s",
                              tick=tick_no,
                              width=sum(self.engine.live)):
@@ -452,10 +559,7 @@ class Orchestrator:
                     out = self.engine.collect(step)
                 self.telemetry.bump("decode_steps")
                 worked = True
-        for slot, tok in out.items():
-            req = self.slot_req[slot]
-            if req is not None and req.state == "decode":
-                self._deliver(req, tok)
+        self._route_tokens(step, out)
 
         self.telemetry.counters["rejected"] = float(self.queue.rejected)
         for k in _ENGINE_STAT_KEYS:
@@ -467,6 +571,44 @@ class Orchestrator:
             if line:
                 self._on_metrics(line)
         return worked
+
+    @staticmethod
+    def _is_decode_step(step) -> bool:
+        """Did this collected step advance any decode row? A fused step
+        can be pure prefill; counting it as a decode step would skew the
+        per-step decode-admission mean."""
+        if isinstance(step, FusedStep):
+            return bool(step.decode_rows)
+        return True
+
+    def _route_tokens(self, step, out: Dict[int, int]) -> None:
+        """Deliver one collected step's tokens. For a fused step, a row
+        whose prompt completed in that step delivers its FIRST token here
+        — the prefill -> decode transition with no separate
+        finish_prefill/insert, since the row is already resident and
+        live; everything else is an ordinary decode token."""
+        if isinstance(step, FusedStep):
+            for task, fin in zip(step.tasks, step.finishing):
+                if not fin or task.slot is None:
+                    continue
+                tok = out.pop(task.slot, None)
+                req = self.slot_req[task.slot]
+                if (tok is None or req is None or req.state != "prefill"
+                        or self._prefills.get(req.rid,
+                                              (None, None))[1] is not task):
+                    continue  # cancelled / slot re-owned while in flight
+                req.state = "decode"
+                req.insert_t = self.clock()
+                self.tracer.instant("insert", cat=CAT_REQUEST,
+                                    lane=(LANE_REQ, req.rid), rid=req.rid,
+                                    slot=task.slot, fused=True)
+                req.mean_admission = task.adm_weighted / max(task.pos, 1)
+                del self._prefills[req.rid]
+                self._deliver(req, tok)
+        for slot, tok in out.items():
+            req = self.slot_req[slot]
+            if req is not None and req.state == "decode":
+                self._deliver(req, tok)
 
     def _deliver(self, req: ServeRequest, token: int) -> None:
         """Stream one token to a request; retire it when finished."""
@@ -509,11 +651,9 @@ class Orchestrator:
             step = self._inflight.popleft()
             with self._phase("collect", drain=True, width=sum(step.live)):
                 out = self.engine.collect(step)
-            self.telemetry.bump("decode_steps")
-            for slot, tok in out.items():
-                req = self.slot_req[slot]
-                if req is not None and req.state == "decode":
-                    self._deliver(req, tok)
+            if self._is_decode_step(step):
+                self.telemetry.bump("decode_steps")
+            self._route_tokens(step, out)
             # collect folded this step's eviction/admission stats into
             # engine.stats after the last tick's counter sync ran
             for k in _ENGINE_STAT_KEYS:

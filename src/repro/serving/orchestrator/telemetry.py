@@ -96,7 +96,12 @@ class Telemetry:
                 # tick-phase wall-time breakdown (orchestrator phase spans)
                 ("tick_time_s", 0.0), ("dispatch_time_s", 0.0),
                 ("collect_time_s", 0.0), ("evict_time_s", 0.0),
-                ("memory_sample_time_s", 0.0), ("admit_time_s", 0.0)):
+                ("memory_sample_time_s", 0.0), ("admit_time_s", 0.0),
+                # fused megabatch tick (engine stats, synced per tick):
+                # fused_prefill_time_s/_tokens apportion the fused call's
+                # wall time to its prefill rows for the prompt-ingest rate
+                ("fused_steps", 0), ("fused_time_s", 0.0),
+                ("fused_prefill_time_s", 0.0), ("fused_prefill_tokens", 0)):
             self.counters[name] = v
         self.records: List[RequestRecord] = []
         self.pool_util_samples: List[float] = []
@@ -215,13 +220,21 @@ class Telemetry:
 
     def phase_times(self) -> Dict[str, float]:
         """Per-phase tick wall-time decomposition (seconds): the disjoint
-        orchestrator phases plus the engine-side prefill sub-phases
-        (``open_time_s``/``extend_time_s``, contained in
-        ``prefill_time_s``) and the measured total ``tick_time_s``."""
+        orchestrator phases plus the engine-side prefill sub-phase
+        (``extend_time_s``, contained in ``prefill_time_s``; the
+        ``open_time_s`` counter is retained one cycle but is always 0 —
+        the batch-1 open path is gone, first chunks ride the scan) and
+        the measured total ``tick_time_s``."""
         c = self.counters
         out = {k: float(c.get(k, 0.0)) for k in PHASE_TIME_KEYS}
         out["open_time_s"] = float(c.get("open_time_s", 0.0))
         out["extend_time_s"] = float(c.get("extend_time_s", 0.0))
+        # fused megabatch: one device call per tick covering prefill rows
+        # and decode rows together — its wall time lands in
+        # dispatch_time_s (already a PHASE_TIME_KEYS member), surfaced
+        # here as its own lens plus the prefill-row apportionment
+        out["fused_time_s"] = float(c.get("fused_time_s", 0.0))
+        out["fused_prefill_time_s"] = float(c.get("fused_prefill_time_s", 0.0))
         out["tick_time_s"] = float(c.get("tick_time_s", 0.0))
         out["phase_sum_s"] = sum(float(c.get(k, 0.0))
                                  for k in PHASE_TIME_KEYS)
@@ -258,9 +271,11 @@ class Telemetry:
             f"p90={f(s['tpot_p90_s'], 'ms', 1e3)} "
             f"p99={f(s['tpot_p99_s'], 'ms', 1e3)}",
             f"tick phases: prefill={f(ph['prefill_time_s'], 's')} "
-            f"(open={f(ph['open_time_s'], 's')} "
-            f"extend={f(ph['extend_time_s'], 's')}) "
+            f"(extend={f(ph['extend_time_s'], 's')}) "
             f"dispatch={f(ph['dispatch_time_s'], 's')} "
+            f"(fused={f(ph['fused_time_s'], 's')} "
+            f"of which prefill={f(ph['fused_prefill_time_s'], 's')} "
+            f"over {c['fused_steps']:.0f} fused steps) "
             f"collect={f(ph['collect_time_s'], 's')} "
             f"evict={f(ph['evict_time_s'], 's')} "
             f"mem={f(ph['memory_sample_time_s'], 's')} "

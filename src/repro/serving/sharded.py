@@ -171,6 +171,38 @@ class ShardedDecodeMixin:
         return jax.jit(fn) if self.mesh is None \
             else self._mesh_jit(fn, kind="extend_batch")
 
+    def _make_fused_step(self) -> Callable:
+        """(params, feed, caches) -> (last_logits, caches, stats): the
+        fused megabatch tick over the PERSISTENT batched cache tree.
+
+        ``feed`` is ``(tokens [B, S], lengths [B], tok_dev [B],
+        use_dev [B] bool, key [1, 2])``: prompt chunks arrive from the
+        host left-aligned in ``tokens``; decode rows are length-1 ragged
+        rows whose position-0 token is substituted from the ON-DEVICE
+        sampled vector ``tok_dev`` (``use_dev`` marks them), so the
+        decode feed never round-trips through the host between steps —
+        the two-phase dispatch-ahead contract of ``dispatch_decode``
+        carries over unchanged. Sampling happens INSIDE the same jitted
+        call (``stats["sampled"]``), making a whole tick exactly one
+        device dispatch: a decode row's next token and a finishing
+        prefill row's first token come out together. Length-0 rows stay
+        bit-identical via the ragged scan's per-leaf masked writes.
+        Under a mesh, rows shard over "data" exactly like the unfused
+        extend (the [1, 2] key replicates)."""
+        temperature = self.temperature
+
+        def fn(params, feed, caches):
+            tokens, lengths, tok_dev, use_dev, key = feed
+            tokens = tokens.at[:, 0].set(
+                jnp.where(use_dev, tok_dev, tokens[:, 0]))
+            last_logits, caches, st = I.prefill_extend_ragged(
+                params, self.cfg, tokens, lengths, caches, opts=self.opts)
+            sampled = sample(key[0], last_logits, temperature=temperature)
+            return last_logits, caches, {**st, "sampled": sampled}
+
+        return jax.jit(fn) if self.mesh is None \
+            else self._mesh_jit(fn, kind="fused_step")
+
     def _make_sampler(self) -> Callable:
         """(key, logits [B, V]) -> tokens [B] int32, sampled ON DEVICE.
 
@@ -212,12 +244,14 @@ class ShardedDecodeMixin:
     def _build_mesh_jit(self, fn, tokens, caches):
         mesh, cfg = self.mesh, self.cfg
         csh = self.cache_shardings_for(caches)
-        # every leaf of the feed tree (a bare token array, or the ragged
-        # extend's (tokens, lengths) pair) is batch-leading: rows over
-        # "data" when the batch divides
+        # feed leaves with a batch-leading axis (tokens/lengths/device
+        # feed) shard rows over "data"; anything else (the fused step's
+        # [1, 2] PRNG key) replicates
         b = int(np.shape(jax.tree_util.tree_leaves(tokens)[0])[0])
         tok_sh = jax.tree.map(
-            lambda x: self._row_sharding(b, np.ndim(x)), tokens)
+            lambda x: (self._row_sharding(b, np.ndim(x))
+                       if np.ndim(x) >= 1 and np.shape(x)[0] == b
+                       else self._replicated()), tokens)
         out_struct = jax.eval_shape(fn, self.params, tokens, caches)
         logits_s, caches_s, stats_s = out_struct
 

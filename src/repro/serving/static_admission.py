@@ -71,4 +71,5 @@ class StaticAdmissionEngine(Engine):
             name=self.policy, gated=True, paged=self.mirror,
             description="static admission baseline "
                         "(position/head-only write gate)",
-            sharded=self.mesh is not None, batched_prefill=True)
+            sharded=self.mesh is not None, batched_prefill=True,
+            fused_step=True)

@@ -91,7 +91,7 @@ def _make_task(eng, prompt, *, advance_chunks: int):
     task = eng.start_prefill(prompt)
     for _ in range(advance_chunks):
         if not task.done:
-            eng.prefill_step(task, CHUNK)
+            eng.prefill_step_batch([task], CHUNK)
     return task
 
 
@@ -145,7 +145,7 @@ def check_batch_matches_sequential(eng, prompts):
                 eng.prefill_step_batch(live, CHUNK)
             else:
                 for t in live:
-                    eng.prefill_step(t, CHUNK)
+                    eng.prefill_step_batch([t], CHUNK)
             ticks += 1
             assert ticks < 100
         return tasks
@@ -203,8 +203,11 @@ def test_stream_parity_batched_vs_per_request(served, engines, name):
                list(range(20, 30)), list(range(7, 52))]
 
     def serve(batched):
+        # fused off: this A/B compares the two UNFUSED prefill drivers
+        # (the fused-vs-unfused A/B lives in test_fused_tick.py)
         orch = Orchestrator(engines(name), sched=SchedulerConfig(
-            chunk_tokens=CHUNK, batched_prefill=batched))
+            chunk_tokens=CHUNK, batched_prefill=batched,
+            fused_step=False))
         for p in prompts:
             orch.submit(p, max_new=5)
         orch.run()
