@@ -12,31 +12,32 @@ policy behind the ``EngineBackend`` protocol changes.
         --backends wgkv,dense [--smoke] [--arrival poisson:0.5] \
         [--mesh 2x4] [--slo-tolerance 0.25] [--trace-out trace.json]
 
-Four drivers replay every trace:
+Drivers replaying every trace (the scheduler tick is always the fused
+megabatch call — ONE jitted ragged device call per tick advancing every
+live request: first chunks, mid-prefill extends, and decode rows
+together, with in-jit sampling):
 
-  * the **async fused** driver (``ServeSession``, ``dispatch_ahead=1``
-    with the fused megabatch tick — ONE jitted ragged device call per
-    tick advancing every live request: first chunks, mid-prefill
-    extends, and decode rows together, with in-jit sampling) — the
+  * the **async** driver (``ServeSession``, ``dispatch_ahead=1``) — the
     production path and the source of each backend's headline metrics;
-  * the **synchronous fused** baseline (``dispatch_ahead=0``) —
-    recorded as ``sync_tokens_per_s`` with the ratio
-    ``async_speedup_vs_sync``, so the overlap the two-phase surface
-    buys is regression-tracked;
-  * the **unfused** baseline (``SchedulerConfig(fused_step=False)``:
-    the split extend/dispatch-decode paths of PR 5, first chunks
-    riding the same scan-from-empty the fused splice uses) — recorded
-    as ``unfused_prefill_tokens_per_s`` with the ratio
-    ``fused_step_speedup``, so the win of folding the per-tick
-    dispatches into the one fused call is regression-tracked;
-  * the **per-request prefill** baseline (fused off AND
-    ``batched_prefill=False``: one batch-1 call per task per tick) —
-    recorded as ``unbatched_prefill_tokens_per_s`` with the ratio
-    ``batched_prefill_speedup``, the coalescing win of
-    ``prefill_step_batch`` alone.
+  * the **synchronous** baseline (``dispatch_ahead=0``) — recorded as
+    ``sync_tokens_per_s`` with the ratio ``async_speedup_vs_sync``, so
+    the overlap the two-phase surface buys is regression-tracked;
+  * the **selection A/B** (paged backends): per-K engines built with
+    ``selection="quest:K"`` replay the same trace, so decode-only ticks
+    score global pages against the live query (incremental per-page key
+    min/max metadata) and attend over only the gathered top-K pages.
+    ``quest:<all pages>`` is first asserted byte-identical to the
+    selection-off async streams (ascending top-K at K = P is the
+    identity permutation), then K in {2, 4, 8} are timed — recorded
+    under ``selection`` with ``selection_speedup`` = best timed K vs
+    the selection-off async driver. Each K also decodes a
+    needle-retrieval batch through the serving path
+    (``needle_accuracy``): payload recall with the needles far outside
+    the local window, the accuracy axis that catches a selection policy
+    gathering the wrong pages.
 
 Greedy token streams from all drivers are asserted byte-identical
-before any timing is trusted. Warmup replays run first per backend and
+before any timing is trusted. Warmup replays run first per engine and
 their wall time is recorded as ``compile_time_s``, so the steady-state
 numbers above never pay jit compilation.
 
@@ -61,11 +62,13 @@ Emits CSV rows for benchmarks.run and writes ``BENCH_serving.json``
 (``{"trace": ..., "backends": {name: metrics}, "ab": ratios-vs-dense}``)
 so the serving trajectory is tracked across PRs. Each backend record
 carries a ``phases`` tick-phase wall-time breakdown (prefill with its
-extend sub-phase, dispatch, collect, evict, memory_sample, admit,
-vs the measured tick total) from the orchestrator's always-on phase
-counters. ``--trace-out`` additionally runs one dedicated traced replay
-per backend (after the timed A/B, so timing stays tracing-free) and
-writes validated Chrome-trace JSONs (repro.serving.obs).
+extend sub-phase, dispatch with its fused/selection sub-phases, collect,
+evict, memory_sample, admit, vs the measured tick total) plus
+``fused_padding_frac`` — the fraction of fused slot-rows that were
+padding, the fixed-shape overhead axis behind the CPU-XLA stage ratios.
+``--trace-out`` additionally runs one dedicated traced replay per
+backend (after the timed A/B, so timing stays tracing-free) and writes
+validated Chrome-trace JSONs (repro.serving.obs).
 """
 from __future__ import annotations
 
@@ -78,8 +81,11 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
-from benchmarks.common import trained_model
+from benchmarks.common import SEQ, trained_model
+from repro.core.selection import PAGE_SIZE
+from repro.data.synthetic import needle_task
 from repro.serving.backend import BACKEND_NAMES, make_backend
 from repro.serving.obs import (Tracer, validate_chrome_trace,
                                write_chrome_trace)
@@ -96,13 +102,23 @@ CAPACITY = 192
 DISPATCH_AHEAD = 1
 SMOKE = dict(n_requests=4, prompt_len=48, max_new=4)
 
+# decode-time page-selection A/B: timed K sweep (smoke trims the sweep;
+# the K = all-pages parity replay always runs on paged backends)
+SELECTION_KS = (2, 4, 8)
+SMOKE_SELECTION_KS = (4,)
+NEEDLE_N = 16
+SMOKE_NEEDLE_N = 8
+
 JSON_PATH = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
 
 # BENCH_serving.json artifact schema; v2 added the per-backend tick-phase
 # wall-time breakdown ("phases") and top-level self-description; v3 made
-# the fused megabatch tick the headline driver and added compile_time_s,
-# fused_step_speedup, and the fused phase counters
-BENCH_SCHEMA_VERSION = 3
+# the fused megabatch tick the headline driver and added compile_time_s
+# and the fused phase counters; v4 retired the unfused/unbatched drivers
+# (the split prefill/decode paths are gone from the scheduler) and added
+# the decode-time page-selection A/B ("selection", selection_speedup,
+# needle_accuracy) and fused_padding_frac
+BENCH_SCHEMA_VERSION = 4
 
 # trace fields that must match before an SLO comparison against history
 # is meaningful (different traffic -> different tails, not a regression)
@@ -159,7 +175,6 @@ def record_trace(n: int, vocab: int, *, prompt_len: int, max_new: int,
 
 def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
            dispatch_ahead: int = DISPATCH_AHEAD,
-           batched_prefill: bool = True, fused_step: bool = True,
            tracer: Optional[Tracer] = None
            ) -> Tuple[ServeSession, List[List[int]]]:
     """Replay a recorded trace through a ServeSession: submit each
@@ -168,8 +183,7 @@ def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
     ``tracer`` the replay records lifecycle/phase spans (the timed A/B
     replays run without one, so the timed numbers stay tracing-free)."""
     sess = ServeSession(eng, sched=SchedulerConfig(
-        chunk_tokens=chunk, dispatch_ahead=dispatch_ahead,
-        batched_prefill=batched_prefill, fused_step=fused_step),
+        chunk_tokens=chunk, dispatch_ahead=dispatch_ahead),
         tracer=tracer)
     handles = []
     pending = list(trace)
@@ -186,47 +200,56 @@ def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
     return sess, [h.tokens() for h in handles]
 
 
+def needle_serving_accuracy(eng, vocab: int, *, n: int = NEEDLE_N,
+                            seed: int = 777) -> float:
+    """Needle payload recall THROUGH the serving decode path: prefill
+    each needle prompt up to its final query marker, greedy-decode the
+    payload span, and score it against the planted answer. The needles
+    live in the first 55% of the sequence — always in global pages, far
+    outside the local window — so under ``selection="quest:K"`` this
+    measures whether query-aware top-K page selection gathers the pages
+    the retrieval actually needs (an accuracy axis ``tokens_per_s``
+    cannot see)."""
+    b = needle_task(jax.random.PRNGKey(seed), n, SEQ, vocab, payload=2)
+    qpos = int(b["query_pos"])
+    toks = np.asarray(b["tokens"])
+    sess = ServeSession(eng, sched=SchedulerConfig(
+        chunk_tokens=CHUNK, dispatch_ahead=DISPATCH_AHEAD))
+    hs = [sess.submit(toks[i, :qpos + 1].tolist(), max_new=2)
+          for i in range(n)]
+    sess.run()
+    sess.close()
+    pred = np.array([h.tokens() for h in hs])
+    return float((pred == np.asarray(b["answer"])).mean())
+
+
 def _prefill_tok_rate(s: Dict) -> Optional[float]:
     """Prompt-ingest throughput of one replay: prefill tokens over the
     wall time spent advancing them (not the whole replay —
-    decode-heavy traces would drown the prefill signal). Fused replays
-    have no separate prefill stage; their prefill share of the fused
+    decode-heavy traces would drown the prefill signal). The fused tick
+    has no separate prefill stage; its prefill share of the fused
     call's wall is apportioned by the engine
     (``fused_prefill_time_s``/``fused_prefill_tokens``)."""
     c = s["counters"]
-    if c.get("fused_steps", 0):
-        t = c.get("fused_prefill_time_s")
-        return c.get("fused_prefill_tokens", 0.0) / t if t else None
-    t = c.get("prefill_time_s")
-    return c["prefill_tokens"] / t if t else None
-
-
-def _extend_tok_rate(s: Dict) -> Optional[float]:
-    """Throughput of the extend-phase advances alone (engine counters:
-    extend_tokens / extend_time_s, the device-synced wall of each
-    coalesced call). With the batch-1 open path gone this covers every
-    prefill token in both the batched and per-request drivers, so this
-    is the clean axis ``batched_prefill_speedup`` compares."""
-    t = s["counters"].get("extend_time_s")
-    return s["counters"].get("extend_tokens", 0.0) / t if t else None
+    t = c.get("fused_prefill_time_s")
+    return c.get("fused_prefill_tokens", 0.0) / t if t else None
 
 
 def _phase_breakdown(s: Dict) -> Dict:
     """Tick-phase wall-time decomposition of one replay (seconds), from
     the orchestrator's always-on phase counters: the disjoint per-tick
     stages (``phase_sum_s`` = their sum, <= the measured ``tick_time_s``
-    total — the rest is scheduler/stream/telemetry glue) plus the
-    engine-side prefill sub-phase (``extend``, contained in
-    ``prefill_time_s``; ``open_time_s`` is retained one cycle, always
-    0 — the batch-1 open path is gone)."""
+    total — the rest is scheduler/stream/telemetry glue) plus the fused
+    megabatch call's wall (inside ``dispatch_time_s``), its prefill-row
+    apportionment, and the wall of the decode-only dispatches that ran
+    the top-K selection variant (``selection_time_s``, a subset of
+    ``fused_time_s``)."""
     c = s["counters"]
     out = {k: float(c.get(k, 0.0)) for k in PHASE_TIME_KEYS}
-    out["open_time_s"] = float(c.get("open_time_s", 0.0))
     out["extend_time_s"] = float(c.get("extend_time_s", 0.0))
-    # fused replays: the megabatch call's wall (inside dispatch_time_s)
-    # and its prefill-row apportionment
     out["fused_time_s"] = float(c.get("fused_time_s", 0.0))
     out["fused_prefill_time_s"] = float(c.get("fused_prefill_time_s", 0.0))
+    out["selection_time_s"] = float(c.get("selection_time_s", 0.0))
     out["tick_time_s"] = float(c.get("tick_time_s", 0.0))
     out["phase_sum_s"] = sum(float(c.get(k, 0.0)) for k in PHASE_TIME_KEYS)
     return out
@@ -247,6 +270,7 @@ def _backend_record(s: Dict) -> Dict:
         "tpot_p99_s": s["tpot_p99_s"],
         "mean_admission": s["mean_admission"],
         "mean_admission_decode": s["mean_admission_decode"],
+        "fused_padding_frac": s["fused_padding_frac"],
         "pool_utilization": s["pool_util_mean"],
         "pool_pages_peak": s["pool_pages_peak"],
         "kv_tokens_peak": s["kv_tokens_peak"],
@@ -301,6 +325,63 @@ def _trace_path(base: str, name: str) -> str:
     return f"{stem}.{name}{ext or '.json'}"
 
 
+def _selection_ab(name: str, params, cfg, dev_mesh, trace, warmup,
+                  async_toks, base_tok_rate, *, ks: Sequence[int],
+                  needle_n: int) -> Dict:
+    """Decode-time page-selection A/B on one paged backend: a fresh
+    engine per ``quest:K`` spec (selection is a jit-time option — each
+    engine compiles its own decode-only variant), the K = all-pages
+    engine asserted byte-identical to the selection-off streams first,
+    then the timed K sweep with serving-path needle accuracy."""
+    k_all = CAPACITY // PAGE_SIZE
+    sel_eng = make_backend(name, params, cfg, slots=SLOTS,
+                           capacity=CAPACITY, mesh=dev_mesh,
+                           selection=f"quest:{k_all}")
+    sel_eng.mirror = False
+    replay(sel_eng, warmup)
+    _, all_toks = replay(sel_eng, trace)
+    # selection must change WHICH pages are attended, never the result
+    # when it selects all of them: ascending top-K at K = P is the
+    # identity permutation, so the streams are byte-identical
+    if all_toks != async_toks:
+        raise AssertionError(
+            f"{name}: quest:{k_all} (= all pages) diverged from the "
+            f"selection-off async driver on the same trace")
+    out: Dict = {"parity_k": k_all, "per_k": {}}
+    for k in ks:
+        eng = make_backend(name, params, cfg, slots=SLOTS,
+                           capacity=CAPACITY, mesh=dev_mesh,
+                           selection=f"quest:{k}")
+        eng.mirror = False
+        t0 = time.perf_counter()
+        replay(eng, warmup)
+        compile_time_s = time.perf_counter() - t0
+        best = None
+        for _ in range(2):
+            summ = replay(eng, trace)[0].telemetry.summary()
+            if best is None or ((summ["tokens_per_s"] or 0.0)
+                                > (best["tokens_per_s"] or 0.0)):
+                best = summ
+        c = best["counters"]
+        out["per_k"][f"quest:{k}"] = {
+            "tokens_per_s": best["tokens_per_s"],
+            "tpot_p50_s": best["tpot_p50_s"],
+            "selected_pages": float(c.get("selected_pages", 0.0)),
+            "selection_time_s": float(c.get("selection_time_s", 0.0)),
+            "fused_padding_frac": best["fused_padding_frac"],
+            "compile_time_s": compile_time_s,
+            "needle_accuracy": needle_serving_accuracy(
+                eng, cfg.vocab_size, n=needle_n),
+        }
+    rates = {k: v["tokens_per_s"] for k, v in out["per_k"].items()
+             if v["tokens_per_s"]}
+    if rates and base_tok_rate:
+        kbest = max(rates, key=rates.get)
+        out["best_k"] = kbest
+        out["selection_speedup"] = rates[kbest] / base_tok_rate
+    return out
+
+
 def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
         arrival: str = "burst", mesh: Optional[str] = None,
         trace_out: Optional[str] = None):
@@ -313,6 +394,8 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
     n_req, plen, mnew = ((SMOKE["n_requests"], SMOKE["prompt_len"],
                           SMOKE["max_new"]) if smoke
                          else (N_REQUESTS, PROMPT_LEN, MAX_NEW))
+    sel_ks = SMOKE_SELECTION_KS if smoke else SELECTION_KS
+    needle_n = SMOKE_NEEDLE_N if smoke else NEEDLE_N
     # the distilled bench substrate (pretrained teacher + trained write
     # gates): with random-init gates every token passes tau and the memory
     # A/B axis degenerates to 1.0
@@ -341,31 +424,24 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
         # is measured separately below
         if paged:
             eng.mirror = False
-        # warmup: compile every driver's shapes on the same engine (the
-        # jit caches live on the engine's partials) — fused (slots,chunk)
-        # + (slots,1), split extend/decode, and the batch-of-one
-        # shim — then replay the measured trace fresh per driver. The
-        # warmup wall is recorded as compile_time_s so steady-state
-        # numbers never pay jit compilation. Timed replays are
-        # INTERLEAVED (sync, async, unfused, unbatched, sync, ...) and
-        # each driver keeps its best, so a shared-box noise burst lands
-        # on every driver instead of silently skewing a ratio.
+        # warmup: compile the fused tick's shapes on the same engine (the
+        # jit caches live on the engine's partials) — (slots, chunk) for
+        # mixed dispatches and (slots, 1) for decode-only top-ups — then
+        # replay the measured trace fresh per driver. The warmup wall is
+        # recorded as compile_time_s so steady-state numbers never pay
+        # jit compilation. Timed replays are INTERLEAVED (sync, async,
+        # sync, ...) and each driver keeps its best, so a shared-box
+        # noise burst lands on every driver instead of silently skewing
+        # a ratio.
         t0 = time.perf_counter()
         replay(eng, warmup)
-        replay(eng, warmup, fused_step=False)
-        replay(eng, warmup, fused_step=False, batched_prefill=False)
         compile_time_s = time.perf_counter() - t0
         drivers = {
             "sync": dict(dispatch_ahead=0),
             "async": dict(dispatch_ahead=DISPATCH_AHEAD),
-            "unfused": dict(dispatch_ahead=DISPATCH_AHEAD,
-                            fused_step=False),
-            "unbatched": dict(dispatch_ahead=DISPATCH_AHEAD,
-                              fused_step=False, batched_prefill=False),
         }
         best: Dict[str, Tuple] = {}
         best_prefill: Dict[str, float] = {}
-        best_extend: Dict[str, float] = {}
         for _ in range(3):
             for dname, kw in drivers.items():
                 sess, toks = replay(eng, trace, **kw)
@@ -376,12 +452,8 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
                     best[dname] = (summ, toks)
                 best_prefill[dname] = max(best_prefill.get(dname, 0.0),
                                           _prefill_tok_rate(summ) or 0.0)
-                best_extend[dname] = max(best_extend.get(dname, 0.0),
-                                         _extend_tok_rate(summ) or 0.0)
         s_sync, sync_toks = best["sync"]
         s, async_toks = best["async"]
-        unf_toks = best["unfused"][1]
-        unb_toks = best["unbatched"][1]
         # no driver may change WHAT is served, only how the work is
         # scheduled on the device: greedy streams are byte-identical by
         # construction, checked before any timing is trusted
@@ -389,14 +461,6 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
             raise AssertionError(
                 f"{name}: async dispatch/collect driver diverged from the "
                 f"synchronous baseline on the same trace")
-        if unf_toks != async_toks:
-            raise AssertionError(
-                f"{name}: fused megabatch tick diverged from the split "
-                f"extend/decode driver on the same trace")
-        if unb_toks != async_toks:
-            raise AssertionError(
-                f"{name}: batched ragged prefill diverged from the "
-                f"per-request prefill driver on the same trace")
         rec = _backend_record(s)
         rec["compile_time_s"] = compile_time_s
         rec["sync_tokens_per_s"] = s_sync["tokens_per_s"]
@@ -404,31 +468,23 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
         if s["tokens_per_s"] and s_sync["tokens_per_s"]:
             rec["async_speedup_vs_sync"] = (
                 s["tokens_per_s"] / s_sync["tokens_per_s"])
-        # each driver's BEST rate across the interleaved replays: the
-        # ratios compare the drivers' achievable rates instead of
-        # whichever replay won on total tokens_per_s.
-        # prefill_tokens_per_s is the whole prefill stage (fused driver:
-        # the fused call's prefill-row apportionment; unfused: the
-        # ragged extends, which now carry every prefill token).
-        # fused_step_speedup is that stage ratio — the win of folding
-        # the per-tick dispatches into the one megabatch call. The
-        # batched_prefill_speedup axis stays the extend-phase ratio of
-        # the two UNFUSED drivers, so the coalescing signal stays
-        # undiluted.
+        # the async driver's BEST prefill-stage rate across the
+        # interleaved replays (the fused call's prefill-row
+        # apportionment), so the stage rate is the driver's achievable
+        # rate instead of whichever replay won on total tokens_per_s
         rec["prefill_tokens_per_s"] = best_prefill["async"] or None
-        rec["unfused_prefill_tokens_per_s"] = (best_prefill["unfused"]
-                                               or None)
-        rec["unbatched_prefill_tokens_per_s"] = (best_prefill["unbatched"]
-                                                 or None)
-        if best_prefill["async"] and best_prefill["unfused"]:
-            rec["fused_step_speedup"] = (
-                best_prefill["async"] / best_prefill["unfused"])
-        rec["prefill_extend_tokens_per_s"] = best_extend["unfused"] or None
-        rec["unbatched_prefill_extend_tokens_per_s"] = (
-            best_extend["unbatched"] or None)
-        if best_extend["unfused"] and best_extend["unbatched"]:
-            rec["batched_prefill_speedup"] = (
-                best_extend["unfused"] / best_extend["unbatched"])
+        if paged:
+            # decode-time page selection A/B: parity at K = all pages,
+            # timed K sweep, serving-path needle accuracy (the engines
+            # are per-K — the selection spec is a jit-time option)
+            sel = _selection_ab(name, params, cfg, dev_mesh, trace,
+                                warmup, async_toks, s["tokens_per_s"],
+                                ks=sel_ks, needle_n=needle_n)
+            sel["needle_accuracy_off"] = needle_serving_accuracy(
+                eng, cfg.vocab_size, n=needle_n)
+            rec["selection"] = sel
+            if "selection_speedup" in sel:
+                rec["selection_speedup"] = sel["selection_speedup"]
         if trace_out:
             # dedicated traced replay on the warm engine, AFTER the timed
             # A/B (spans cover the production async driver; the timed
@@ -467,19 +523,28 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
              f"tok_per_s={s['tokens_per_s']:.1f}"),
             (f"serving/{name}/async_vs_sync", 0.0,
              f"speedup={rec.get('async_speedup_vs_sync', 0.0):.3f}"),
-            (f"serving/{name}/fused_step", compile_time_s * 1e6,
-             f"speedup={rec.get('fused_step_speedup', 0.0):.3f} "
-             f"prefill_tok_per_s={rec.get('prefill_tokens_per_s') or 0.0:.1f} "
-             f"compile={compile_time_s:.2f}s"),
             (f"serving/{name}/memory", 0.0,
              f"kv_tokens_peak={rec['kv_tokens_peak']} "
              f"pool_pages_peak={rec['pool_pages_peak']}"),
             (f"serving/{name}/phases",
              rec["phases"]["tick_time_s"] * 1e6,
              "phase_sum={phase_sum_s:.3f}s prefill={prefill_time_s:.3f}s "
-             "dispatch={dispatch_time_s:.3f}s collect={collect_time_s:.3f}s"
-             .format(**rec["phases"])),
+             "dispatch={dispatch_time_s:.3f}s collect={collect_time_s:.3f}s "
+             "padding_frac={pad:.3f}"
+             .format(pad=rec["fused_padding_frac"] or 0.0,
+                     **rec["phases"])),
         ]
+        if paged and "selection" in rec:
+            sel = rec["selection"]
+            per_k = " ".join(
+                f"{k}={v['tokens_per_s'] or 0.0:.1f}tok/s"
+                f"(needle={v['needle_accuracy']:.2f})"
+                for k, v in sel["per_k"].items())
+            rows.append((
+                f"serving/{name}/selection", 0.0,
+                f"speedup={sel.get('selection_speedup', 0.0):.3f} "
+                f"parity_k={sel['parity_k']} {per_k} "
+                f"needle_off={sel['needle_accuracy_off']:.2f}"))
     # comparative ratios vs the dense full-KV baseline: the paper's
     # speedup and memory-reduction claims as serving-level numbers
     dense = record["backends"].get("dense")

@@ -8,6 +8,7 @@ in the paper's Appendix E.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -64,6 +65,36 @@ def select_global(
     valid = jnp.take_along_axis(valid, order, axis=-1)
     top_idx = jnp.where(valid, top_idx, 0)
     return GlobalSelection(top_idx.astype(jnp.int32), valid, count)
+
+
+def tau_margin(g: jax.Array, tau: float) -> float:
+    """Distance from tau to the nearest gate score: min |g - tau|.
+
+    A margin near zero means the threshold sits inside the gate-score
+    cluster, where two attention paths that differ only in float rounding
+    (one-shot vs chunked prefill, fused vs unfused tick) can admit
+    different token sets — the knife-edge class behind past parity flips.
+    """
+    return float(jnp.abs(g - tau).min())
+
+
+def check_tau_margin(g: jax.Array, tau: float, *, eps: float = 1e-3) -> float:
+    """Warn when tau is knife-edge relative to the observed gate scores.
+
+    Returns the margin so parity tests can assert on it explicitly rather
+    than relying on a silently-safe tau convention.
+    """
+    m = tau_margin(g, tau)
+    if m < eps:
+        warnings.warn(
+            f"knife-edge admission threshold: min |g - tau| = {m:.2e} < "
+            f"eps={eps:.0e} (tau={tau}); admission decisions may flip "
+            "between numerically-equivalent attention paths. Move tau away "
+            "from the gate-score cluster for parity-sensitive runs.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+    return m
 
 
 def admission_rate(g: jax.Array, tau: float) -> jax.Array:

@@ -21,6 +21,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.admission import select_global
+from repro.core.selection import (
+    META_BIG, PAGE_SIZE, build_page_meta, init_page_meta,
+    update_page_meta_on_write,
+)
 
 
 class DualCache(NamedTuple):
@@ -35,6 +39,11 @@ class DualCache(NamedTuple):
     t: jax.Array       # [B] int32 next absolute position
     ptr: jax.Array     # [B] int32 ring pointer (next victim slot)
     overflow: jax.Array  # [B, H] int32 promotions dropped for lack of budget
+    # Quest page metadata over the global cache (ceil(C/PAGE_SIZE) pages),
+    # maintained incrementally: delta-folded on promote, recomputed only at
+    # the (rare) eviction compaction. Empty lanes hold ±META_BIG sentinels.
+    pkmin: jax.Array   # [B, H, P, hd]
+    pkmax: jax.Array   # [B, H, P, hd]
 
     @property
     def w_local(self) -> int:
@@ -60,7 +69,10 @@ def init_dual_cache(
     dtype=jnp.float32,
 ) -> DualCache:
     b, h, w, c, d = batch, n_kv_heads, w_local, budget, head_dim
+    pkmin, pkmax = init_page_meta(b, h, c, d, dtype=dtype)
     return DualCache(
+        pkmin=pkmin,
+        pkmax=pkmax,
         lk=jnp.zeros((b, h, w, d), dtype),
         lv=jnp.zeros((b, h, w, d), dtype),
         lg=jnp.zeros((b, h, w), jnp.float32),
@@ -112,9 +124,15 @@ def prefill_populate(
         gk = jnp.pad(gk, ((0, 0), (0, 0), (0, pad), (0, 0)))
         gv = jnp.pad(gv, ((0, 0), (0, 0), (0, pad), (0, 0)))
         gpos = jnp.pad(gpos, ((0, 0), (0, 0), (0, pad)))
+    # page metadata: one O(C) rebuild at population time (the per-step
+    # decode path only ever delta-updates it — see lazy_promote_and_write)
+    gvalid = jnp.arange(cache.budget)[None, None] < sel.count[..., None]
+    meta = build_page_meta(gk, gvalid)
     return cache._replace(
         lk=lk, lv=lv, lg=lg, lpos=lpos,
         gk=gk, gv=gv, gpos=gpos, gcnt=sel.count,
+        pkmin=meta.kmin.astype(cache.pkmin.dtype),
+        pkmax=meta.kmax.astype(cache.pkmax.dtype),
         t=jnp.full_like(cache.t, s),
         ptr=jnp.full_like(cache.ptr, s % w),
     )
@@ -163,6 +181,10 @@ def lazy_promote_and_write(
     gpos = cache.gpos.at[bi, hi, dest].set(up_p)
     gcnt = cache.gcnt + can_write.astype(jnp.int32)
     overflow = cache.overflow + (promote & ~can_write).astype(jnp.int32)
+    # incremental Quest metadata: fold the promoted key into the one page
+    # its append lands in (same touched-slot discipline as the gk scatter)
+    pkmin, pkmax = update_page_meta_on_write(
+        cache.pkmin, cache.pkmax, dest, vk, can_write)
     # ---- write the new token into the ring (scatter at ptr) --------------
     lk = cache.lk.at[barange, :, cache.ptr].set(k_new.astype(cache.lk.dtype))
     lv = cache.lv.at[barange, :, cache.ptr].set(v_new.astype(cache.lv.dtype))
@@ -171,6 +193,7 @@ def lazy_promote_and_write(
     return cache._replace(
         lk=lk, lv=lv, lg=lg, lpos=lpos,
         gk=gk, gv=gv, gpos=gpos, gcnt=gcnt, overflow=overflow,
+        pkmin=pkmin, pkmax=pkmax,
         t=cache.t + 1, ptr=(cache.ptr + 1) % w,
     )
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dual_cache import DualCache
+from repro.core.selection import build_page_meta
 
 
 class ObsWindow(NamedTuple):
@@ -90,11 +91,18 @@ def evict_global(cache: DualCache, scores: jax.Array, *,
     take = lambda x: jnp.take_along_axis(x, perm[..., None], axis=2)
     newcnt = keep.sum(-1).astype(jnp.int32)
     valid = jnp.arange(c)[None, None] < newcnt[..., None]
+    newgk = jnp.where(valid[..., None], take(cache.gk), 0)
+    # compaction permutes every slot, so the Quest page metadata is rebuilt
+    # here from scratch — eviction is the rare O(C log C) event already; the
+    # per-step decode path stays delta-only (see lazy_promote_and_write)
+    meta = build_page_meta(newgk, valid)
     return cache._replace(
-        gk=jnp.where(valid[..., None], take(cache.gk), 0),
+        gk=newgk,
         gv=jnp.where(valid[..., None], take(cache.gv), 0),
         gpos=jnp.where(valid, jnp.take_along_axis(cache.gpos, perm, axis=2), 0),
         gcnt=newcnt,
+        pkmin=meta.kmin.astype(cache.pkmin.dtype),
+        pkmax=meta.kmax.astype(cache.pkmax.dtype),
     )
 
 
@@ -114,5 +122,7 @@ def maybe_evict(cache: DualCache, obs: ObsWindow, *, hard_budget: int,
         gv=pick(evicted.gv, cache.gv),
         gpos=pick(evicted.gpos, cache.gpos),
         gcnt=jnp.where(trig, evicted.gcnt, cache.gcnt),
+        pkmin=pick(evicted.pkmin, cache.pkmin),
+        pkmax=pick(evicted.pkmax, cache.pkmax),
     )
     return merged, trig

@@ -7,15 +7,36 @@ page's attention score:  ub(page) = sum_d max(q_d * kmin_d, q_d * kmax_d).
 Here selection operates either on a dense full cache ("Quest only") or on
 the WG-KV global cache ("WG-KV + Quest") — admission shrinks the candidate
 pool, selection then focuses the read.
+
+Two consumption modes:
+
+  * **mask** (``select_pages`` + ``token_mask_from_pages``): the original
+    offline-composability surface — the full attention runs and losing
+    pages are masked out. Zero FLOPs saved; useful for accuracy studies.
+  * **gather** (``topk_page_ids`` + ``gather_pages``): the serving decode
+    path — only the top-K pages' K/V rows are materialized into the
+    attention einsum, so decode cost scales with the selection budget.
+    Page metadata for this path lives as ``pkmin``/``pkmax`` leaves on
+    the DualCache and is maintained *incrementally*
+    (``update_page_meta_on_write``: a touched-page delta per promotion,
+    not an O(C) rebuild per step).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 PAGE_SIZE = 16
+
+# Sentinel filling empty page-metadata lanes: pkmin=+META_BIG,
+# pkmax=-META_BIG. Any real key strictly shrinks the interval, so the
+# incremental update needs no separate "page initialized" flag — and a
+# from-scratch ``build_page_meta`` rebuild (which masks invalid lanes with
+# the same sentinel) lands on identical values, which is what the
+# incremental-vs-rebuild parity tests pin. Fits bfloat16 (max ~3.39e38).
+META_BIG = 3e38
 
 
 class PageMeta(NamedTuple):
@@ -24,18 +45,75 @@ class PageMeta(NamedTuple):
     valid: jax.Array  # [B, H, P] page has >= 1 valid token
 
 
+def n_pages(n_tokens: int, page_size: int = PAGE_SIZE) -> int:
+    """Number of metadata pages covering ``n_tokens`` slots (ceil)."""
+    return -(-n_tokens // page_size)
+
+
+def init_page_meta(batch: int, n_kv_heads: int, n_tokens: int, head_dim: int,
+                   *, page_size: int = PAGE_SIZE,
+                   dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Empty (pkmin, pkmax) leaves for a cache of ``n_tokens`` slots."""
+    p = n_pages(n_tokens, page_size)
+    big = jnp.asarray(META_BIG, dtype)
+    return (jnp.full((batch, n_kv_heads, p, head_dim), big, dtype),
+            jnp.full((batch, n_kv_heads, p, head_dim), -big, dtype))
+
+
 def build_page_meta(k: jax.Array, valid: jax.Array,
                     page_size: int = PAGE_SIZE) -> PageMeta:
-    """k: [B, H, S, hd]; valid: [B, H, S] -> page metadata (S % page == 0
-    required; pad upstream)."""
+    """k: [B, H, S, hd]; valid: [B, H, S] -> page metadata. A ragged tail
+    (S % page != 0) is padded internally with invalid lanes."""
     b, h, s, d = k.shape
-    p = s // page_size
+    pad = (-s) % page_size
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, 0), (0, pad)))
+    p = (s + pad) // page_size
     kp = k.reshape(b, h, p, page_size, d)
     vp = valid.reshape(b, h, p, page_size)
-    big = jnp.asarray(3e38, k.dtype)
+    big = jnp.asarray(META_BIG, k.dtype)
     kmin = jnp.where(vp[..., None], kp, big).min(axis=3)
     kmax = jnp.where(vp[..., None], kp, -big).max(axis=3)
     return PageMeta(kmin, kmax, vp.any(axis=3))
+
+
+def page_valid_from_count(count: jax.Array, p: int,
+                          page_size: int = PAGE_SIZE) -> jax.Array:
+    """Contiguous-cache page validity: page i holds >= 1 valid token iff
+    its first slot index is < count. count: [B, H] -> [B, H, P] bool."""
+    first = jnp.arange(p, dtype=count.dtype) * page_size
+    return first[None, None] < count[..., None]
+
+
+def update_page_meta_on_write(
+    pkmin: jax.Array,   # [B, H, P, hd]
+    pkmax: jax.Array,
+    dest: jax.Array,    # [B, H] slot the appended entry lands in
+    k_new: jax.Array,   # [B, H, hd] the appended key
+    can_write: jax.Array,  # [B, H] bool: append actually happens
+    *,
+    page_size: int = PAGE_SIZE,
+) -> Tuple[jax.Array, jax.Array]:
+    """Incremental metadata maintenance for an append-only cache: fold one
+    new key into the single page it touches (true scatter — O(hd) state
+    touched per head, never an O(C) rebuild). A write at a page boundary
+    starts the page fresh from the sentinel, so stale metadata from
+    pre-eviction occupants can never widen the bound."""
+    b, h = dest.shape
+    pg = dest // page_size
+    fresh = (dest % page_size) == 0
+    bi = jnp.arange(b)[:, None].repeat(h, 1)
+    hi = jnp.arange(h)[None, :].repeat(b, 0)
+    old_lo = pkmin[bi, hi, pg]
+    old_hi = pkmax[bi, hi, pg]
+    big = jnp.asarray(META_BIG, pkmin.dtype)
+    base_lo = jnp.where(fresh[..., None], big, old_lo)
+    base_hi = jnp.where(fresh[..., None], -big, old_hi)
+    kn = k_new.astype(pkmin.dtype)
+    lo = jnp.where(can_write[..., None], jnp.minimum(base_lo, kn), old_lo)
+    hi_ = jnp.where(can_write[..., None], jnp.maximum(base_hi, kn), old_hi)
+    return pkmin.at[bi, hi, pg].set(lo), pkmax.at[bi, hi, pg].set(hi_)
 
 
 def page_upper_bound(q: jax.Array, meta: PageMeta) -> jax.Array:
@@ -64,3 +142,39 @@ def token_mask_from_pages(page_mask: jax.Array,
                           page_size: int = PAGE_SIZE) -> jax.Array:
     """[B, H, P] -> [B, H, P*page_size]."""
     return jnp.repeat(page_mask, page_size, axis=-1)
+
+
+def topk_page_ids(q: jax.Array, meta: PageMeta,
+                  budget_pages: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-``budget_pages`` page IDs per kv head, sorted ascending:
+    (ids [B, Hkv, K] int32, n_selected [B, Hkv] int32 — selected pages
+    with a finite ub, i.e. actually-valid pages in the gather).
+
+    Ascending order matters: when K covers every page the ID list is the
+    identity permutation, so the gathered attention reduces over the same
+    lanes in the same order as the full path — greedy streams stay
+    byte-identical to selection-off (the parity acceptance axis)."""
+    ub = page_upper_bound(q, meta)
+    k = min(budget_pages, ub.shape[-1])
+    scores, idx = jax.lax.top_k(ub, k)
+    n_sel = jnp.isfinite(scores).sum(axis=-1).astype(jnp.int32)
+    return jnp.sort(idx, axis=-1).astype(jnp.int32), n_sel
+
+
+def gather_pages(gk: jax.Array, gv: jax.Array, gcnt: jax.Array,
+                 page_ids: jax.Array, *, page_size: int = PAGE_SIZE
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Materialize only the selected pages' K/V rows for attention.
+
+    gk/gv: [B, H, C, hd] contiguous cache; gcnt: [B, H] valid counts;
+    page_ids: [B, H, K] (sorted). Returns (k [B, H, K*page, hd], v,
+    valid [B, H, K*page]) — attention cost now scales with K, not C."""
+    b, h, c, _ = gk.shape
+    tok = (page_ids[..., None] * page_size
+           + jnp.arange(page_size, dtype=page_ids.dtype)[None, None, None])
+    tok = tok.reshape(b, h, -1)                       # [B, H, K*page]
+    valid = tok < gcnt[..., None]
+    tokc = jnp.minimum(tok, c - 1)                    # clamp ragged tail
+    k = jnp.take_along_axis(gk, tokc[..., None], axis=2)
+    v = jnp.take_along_axis(gv, tokc[..., None], axis=2)
+    return k, v, valid

@@ -78,6 +78,29 @@ def paged_decode_ref(q, k_pool, v_pool, page_table, lengths):
     return jnp.einsum("nk,nkd->nd", w.astype(v.dtype), v)
 
 
+def paged_decode_selected_ref(q, k_pool, v_pool, page_table, lengths,
+                              sel_ids, n_sel):
+    """Quest-selected paged decode oracle: like :func:`paged_decode_ref`
+    but only pages listed in ``sel_ids`` [N, K] (logical indices, first
+    ``n_sel[stream]`` valid) contribute."""
+    n, hd = q.shape
+    p, page, _ = k_pool.shape
+    kp = sel_ids.shape[1]
+    phys = jnp.take_along_axis(page_table, sel_ids, axis=1)  # [N, K]
+    k = k_pool[phys].reshape(n, kp * page, hd)
+    v = v_pool[phys].reshape(n, kp * page, hd)
+    pos = sel_ids[:, :, None] * page + jnp.arange(page)[None, None]
+    pos = pos.reshape(n, kp * page)
+    page_ok = (jnp.arange(kp)[None] < n_sel[:, None])[:, :, None]
+    valid = (pos < lengths[:, None]) & jnp.broadcast_to(
+        page_ok, (n, kp, page)).reshape(n, kp * page)
+    logits = jnp.einsum("nd,nkd->nk", q, k).astype(jnp.float32) * (hd ** -0.5)
+    logits = jnp.where(valid, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(valid, w, 0.0)
+    return jnp.einsum("nk,nkd->nd", w.astype(v.dtype), v)
+
+
 def rglru_scan_ref(a, b, h0=None):
     """Linear recurrence h_t = a_t * h_{t-1} + b_t. a, b: [B, S, D]."""
     if h0 is None:

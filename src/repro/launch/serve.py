@@ -12,7 +12,7 @@ Quest / SnapKV composition).
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-0.6b --reduced --dispatch-ahead 0     # sync baseline
     PYTHONPATH=src python -m repro.launch.serve \
-        --arch qwen3-0.6b --reduced --no-fused-step  # split-path baseline
+        --arch qwen3-0.6b --reduced --selection quest:4  # top-K decode
     PYTHONPATH=src python -m repro.launch.serve \
         --arch qwen3-0.6b --reduced --trace-out trace.json \
         --metrics-interval 5                               # observability
@@ -52,14 +52,12 @@ def main() -> None:
                     help="cap on prefill tasks advanced per tick in the one "
                          "batched ragged device call (default: all in-flight "
                          "prefills, bounded by --slots)")
-    ap.add_argument("--no-batched-prefill", action="store_true",
-                    help="advance prefills one batch-1 call per task per "
-                         "tick (the per-request parity baseline)")
-    ap.add_argument("--no-fused-step", action="store_true",
-                    help="disable the fused megabatch tick (one jitted "
-                         "ragged call advancing every live request) and use "
-                         "the split prefill/decode dispatch paths instead "
-                         "(the fused-parity baseline)")
+    ap.add_argument("--selection", default=None, metavar="quest:K",
+                    help="decode-time page selection: on decode-only fused "
+                         "ticks, attend over only the top-K global pages "
+                         "per (row, kv head), scored query-aware from "
+                         "incremental per-page key min/max metadata "
+                         "(dual-cache backends only)")
     ap.add_argument("--dispatch-ahead", type=int, default=1,
                     help="decode steps kept in flight on the device "
                          "(0 = synchronous one-step-per-tick baseline)")
@@ -123,7 +121,7 @@ def main() -> None:
     eng = make_backend(args.backend, params, cfg, slots=args.slots,
                        capacity=args.capacity, opts=opts,
                        temperature=args.temperature, seed=args.seed,
-                       mesh=mesh)
+                       selection=args.selection, mesh=mesh)
     print(f"backend: {eng.capabilities()}")
     tracer = None
     if args.trace_out or args.device_annotations:
@@ -133,9 +131,7 @@ def main() -> None:
         eng,
         sched=SchedulerConfig(chunk_tokens=args.chunk_tokens,
                               dispatch_ahead=args.dispatch_ahead,
-                              max_prefill_batch=args.max_prefill_batch,
-                              batched_prefill=not args.no_batched_prefill,
-                              fused_step=not args.no_fused_step),
+                              max_prefill_batch=args.max_prefill_batch),
         max_pending=args.max_pending,
         tracer=tracer,
         metrics_interval_s=args.metrics_interval)

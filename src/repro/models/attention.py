@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import masks as M
+from repro.core import selection as SEL
 from repro.core.admission import GlobalSelection, select_global
 from repro.core.dual_cache import (
     DualCache,
@@ -347,8 +348,10 @@ def _rope_single(cfg: ModelConfig, x: jax.Array, t: jax.Array) -> jax.Array:
 def attn_decode_wgkv(p: Params, cfg: ModelConfig, x_t: jax.Array,
                      cache: DualCache, *,
                      gate_override: Optional[jax.Array] = None,
-                     token_select_fn: Optional[Callable] = None
-                     ) -> Tuple[jax.Array, DualCache, jax.Array]:
+                     token_select_fn: Optional[Callable] = None,
+                     select_pages_k: Optional[int] = None
+                     ) -> Tuple[jax.Array, DualCache, jax.Array,
+                                Optional[jax.Array]]:
     """One decode step against the dual cache. x_t: [B, D].
 
     Order matters for exact equivalence with the dense vertical-slash mask:
@@ -360,8 +363,21 @@ def attn_decode_wgkv(p: Params, cfg: ModelConfig, x_t: jax.Array,
 
     ``token_select_fn(cache, q) -> [B, Hkv, C+W]``: optional read-time
     Selection mask (Quest composition) computed on the updated cache,
-    further restricting visible entries.
-    Returns (out [B, D], new cache, g_new [B, Hkv])."""
+    further restricting visible entries — full-width einsum, no FLOPs
+    saved.
+
+    ``select_pages_k``: GATHERED read-time Selection — score the cache's
+    incremental page metadata (pkmin/pkmax) against the live query, take
+    the top-K pages, and run attention over only the gathered
+    ``K*PAGE_SIZE + W`` entries, so decode cost scales with the selection
+    budget instead of the admission budget. When K covers every page the
+    sorted page-ID gather is the identity permutation and the output is
+    bit-identical to the full path. Mutually exclusive with
+    ``token_select_fn``.
+
+    Returns (out [B, D], new cache, g_new [B, Hkv], sel_pages) where
+    sel_pages is [B, Hkv] valid selected-page counts (None when the
+    gathered path is off)."""
     b, d_model = x_t.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     x = x_t[:, None, :]  # [B,1,D]
@@ -379,9 +395,28 @@ def attn_decode_wgkv(p: Params, cfg: ModelConfig, x_t: jax.Array,
 
     # update first (promote victim, write self), then attend — see docstring
     new_cache = lazy_promote_and_write(cache, k_new, v_new, g_new, tau=cfg.wgkv.tau)
-    k_all, v_all, valid = cache_kv_for_attention(new_cache)          # [B,H,C+W,*]
-    if token_select_fn is not None:
-        valid = valid & token_select_fn(new_cache, q)
+    sel_pages = None
+    if select_pages_k is not None:
+        assert token_select_fn is None, "mask and gather selection are exclusive"
+        c = new_cache.budget
+        assert c % SEL.PAGE_SIZE == 0, \
+            "global budget must be page-aligned for gathered Quest selection"
+        p_pages = c // SEL.PAGE_SIZE
+        meta = SEL.PageMeta(
+            new_cache.pkmin, new_cache.pkmax,
+            SEL.page_valid_from_count(new_cache.gcnt, p_pages))
+        ids, sel_pages = SEL.topk_page_ids(q, meta, select_pages_k)
+        gk_s, gv_s, gvalid = SEL.gather_pages(
+            new_cache.gk, new_cache.gv, new_cache.gcnt, ids)
+        k_all = jnp.concatenate([gk_s, new_cache.lk], axis=2)
+        v_all = jnp.concatenate([gv_s, new_cache.lv], axis=2)
+        lvalid = jnp.broadcast_to((new_cache.lpos >= 0)[:, None, :],
+                                  new_cache.lg.shape)
+        valid = jnp.concatenate([gvalid, lvalid], axis=2)
+    else:
+        k_all, v_all, valid = cache_kv_for_attention(new_cache)      # [B,H,C+W,*]
+        if token_select_fn is not None:
+            valid = valid & token_select_fn(new_cache, q)
     grp = hq // hkv
     qg = q.reshape(b, hkv, grp, hd)
     logits = jnp.einsum("bhgd,bhkd->bhgk", qg, k_all).astype(jnp.float32)
@@ -390,7 +425,7 @@ def attn_decode_wgkv(p: Params, cfg: ModelConfig, x_t: jax.Array,
     wts = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bhgk,bhkd->bhgd", wts.astype(v_all.dtype), v_all)
     y = o.reshape(b, hq * hd) @ p["w_o"].astype(x_t.dtype)
-    return y, new_cache, g_new
+    return y, new_cache, g_new, sel_pages
 
 
 def attn_decode_dense(p: Params, cfg: ModelConfig, x_t: jax.Array,

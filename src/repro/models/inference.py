@@ -10,8 +10,11 @@ Per-block caches:
   rglru                       — RGLRUState;  mlstm/slstm — their states
 
 Composability (paper §5.4): ``DecodeOptions.quest_pages`` applies Quest
-read-time selection over the (global) cache; ``evict_hard_budget`` applies
-SnapKV-style eviction when a head's global count hits the bound.
+read-time selection over the (global) cache as a MASK (full-width einsum,
+accuracy studies); ``DecodeOptions.selection_policy = "quest:K"`` applies
+it as a GATHER (top-K pages materialized, decode FLOPs scale with K — the
+serving path); ``evict_hard_budget`` applies SnapKV-style eviction when a
+head's global count hits the bound.
 """
 from __future__ import annotations
 
@@ -41,7 +44,10 @@ CacheTree = Dict[str, Any]
 
 @dataclasses.dataclass(frozen=True)
 class DecodeOptions:
-    quest_pages: Optional[int] = None      # read-time Selection budget (pages)
+    quest_pages: Optional[int] = None      # read-time Selection budget (pages, MASK mode)
+    # gathered read-time Selection: None | "quest:K" (top-K pages GATHERED
+    # into the decode einsum — cost scales with K; parse_selection_policy)
+    selection_policy: Optional[str] = None
     evict_hard_budget: Optional[int] = None  # post-write Eviction bound (tokens/head)
     evict_frac: float = 0.10
     w_obs: int = 256
@@ -52,6 +58,17 @@ class DecodeOptions:
     admission_policy: Optional[str] = None
     admission_sink: int = 16
     duo_retrieval_heads: Tuple[int, ...] = ()
+
+
+def parse_selection_policy(policy: Optional[str]) -> Optional[int]:
+    """"quest:K" -> K (page budget); None -> None."""
+    if policy is None:
+        return None
+    kind, _, arg = policy.partition(":")
+    if kind != "quest" or not arg.isdigit() or int(arg) < 1:
+        raise ValueError(
+            f"unknown selection policy {policy!r} (expected 'quest:K')")
+    return int(arg)
 
 
 def _static_gates(cfg: ModelConfig, opts: DecodeOptions,
@@ -219,11 +236,14 @@ def _init_obs_tree(cfg: ModelConfig, b: int, opts: DecodeOptions):
 def _quest_mask(cfg: ModelConfig, cache: DualCache, q: jax.Array,
                 pages: int) -> jax.Array:
     """Read-time Selection over the *global* cache (local + self always
-    visible). Returns [B, Hkv, C + W + 1] bool."""
+    visible). Returns [B, Hkv, C + W + 1] bool. Scores the cache's
+    incrementally-maintained page metadata (no O(C) rebuild per step)."""
     c = cache.budget
     assert c % SEL.PAGE_SIZE == 0, "global budget must be page-aligned for Quest"
     gvalid = jnp.arange(c)[None, None] < cache.gcnt[..., None]
-    meta = SEL.build_page_meta(cache.gk, gvalid)
+    p_pages = c // SEL.PAGE_SIZE
+    meta = SEL.PageMeta(cache.pkmin, cache.pkmax,
+                        SEL.page_valid_from_count(cache.gcnt, p_pages))
     pmask = SEL.select_pages(q, meta, pages)
     gmask = SEL.token_mask_from_pages(pmask) & gvalid
     b, h = gvalid.shape[:2]
@@ -238,14 +258,18 @@ def _attn_block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *,
     window = cfg.sliding_window if bt == "local_attn" else None
     trig = jnp.zeros((), jnp.float32)
     adm = None
+    selp = None
     if isinstance(self_cache, DualCache):
         sel_fn = None
         if opts.quest_pages is not None:
             sel_fn = lambda cache, q: _quest_mask(cfg, cache, q, opts.quest_pages)
-        h, new_cache, g_new = A.attn_decode_wgkv(
+        h, new_cache, g_new, sel_pages = A.attn_decode_wgkv(
             p["attn"], cfg, xin, self_cache, token_select_fn=sel_fn,
+            select_pages_k=parse_selection_policy(opts.selection_policy),
             gate_override=_static_gates(cfg, opts, self_cache.t))
         adm = (g_new >= cfg.wgkv.tau).mean(axis=-1)  # per-row [B]
+        if sel_pages is not None:
+            selp = sel_pages.astype(jnp.float32).mean(axis=-1)  # per-row [B]
         if opts.evict_hard_budget is not None and obs is not None:
             q_obs = A._heads((xin[:, None] @ p["attn"]["w_q"].astype(xin.dtype)),
                              cfg.n_heads, cfg.head_dim)[:, :, 0]
@@ -271,7 +295,7 @@ def _attn_block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *,
         x_t = x_t + L.gelu_mlp(p["mlp"], _norm(cfg, p["ln2"], x_t[:, None]))[:, 0]
     else:
         x_t = x_t + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x_t[:, None]))[:, 0]
-    return x_t, new_cache, obs, trig, adm
+    return x_t, new_cache, obs, trig, adm, selp
 
 
 def _block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *, opts, obs,
@@ -285,13 +309,13 @@ def _block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *, opts, obs,
                                  _norm(cfg, p["ln1"], x_t[:, None])[:, 0], cache)
         x_t = x_t + y
         x_t = x_t + L.swiglu(p["mlp"], _norm(cfg, p["ln2"], x_t[:, None]))[:, 0]
-        return x_t, state, obs, zero, None
+        return x_t, state, obs, zero, None, None
     if bt == "mlstm":
         x_t, state = XL.mlstm_step(p["cell"], cfg, x_t, cache)
-        return x_t, state, obs, zero, None
+        return x_t, state, obs, zero, None, None
     if bt == "slstm":
         x_t, state = XL.slstm_step(p["cell"], cfg, x_t, cache)
-        return x_t, state, obs, zero, None
+        return x_t, state, obs, zero, None, None
     raise ValueError(bt)
 
 
@@ -316,16 +340,19 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
     trig_sum = jnp.zeros((b,), jnp.float32)  # per-row eviction triggers
     adm_sum = jnp.zeros((b,), jnp.float32)  # per-row: batch rows may be dead
     adm_n = jnp.zeros((), jnp.float32)
+    sel_sum = jnp.zeros((b,), jnp.float32)  # per-row selected pages (layer sum)
     bd = functools.partial(_block_decode, cfg=cfg, opts=opts,
                            moe_groups=moe_groups)
     stem_new = []
     for i, bt in enumerate(cfg.stem_pattern):
-        x, c, _, trg, adm = bd(params["stem"][i], bt=bt, x_t=x,
-                               cache=caches["stem"][i], obs=None)
+        x, c, _, trg, adm, selp = bd(params["stem"][i], bt=bt, x_t=x,
+                                     cache=caches["stem"][i], obs=None)
         stem_new.append(c)
         trig_sum = trig_sum + trg
         if adm is not None:
             adm_sum, adm_n = adm_sum + adm, adm_n + 1.0
+        if selp is not None:
+            sel_sum = sel_sum + selp
     if stem_new:
         new_caches["stem"] = tuple(stem_new)
 
@@ -334,7 +361,7 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
     x = constrain_tokens(x)
 
     def body(carry, xs):
-        xc, trig, asum, an = carry
+        xc, trig, asum, an, ssum = carry
         xc = constrain_tokens(xc)
         if has_obs:
             bp, bc, obs_b = xs
@@ -348,8 +375,8 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
             obs_i = None
             if obs_b is not None and bt in ("attn", "attn_moe", "local_attn", "attn_cross"):
                 obs_i = jax.tree.map(lambda v: v[ai], obs_b)
-            xc, c, obs_o, trg, adm = bd(bp[f"b{i}"], bt=bt, x_t=xc,
-                                        cache=bc[f"b{i}"], obs=obs_i)
+            xc, c, obs_o, trg, adm, selp = bd(bp[f"b{i}"], bt=bt, x_t=xc,
+                                              cache=bc[f"b{i}"], obs=obs_i)
             new_bc[f"b{i}"] = c
             if obs_i is not None:
                 new_obs.append(obs_o)
@@ -357,14 +384,16 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
             trig = trig + trg
             if adm is not None:
                 asum, an = asum + adm, an + 1.0
+            if selp is not None:
+                ssum = ssum + selp
         ys = (new_bc, jax.tree.map(lambda *v: jnp.stack(v), *new_obs)) if new_obs \
             else (new_bc,)
-        return (xc, trig, asum, an), ys
+        return (xc, trig, asum, an, ssum), ys
 
     xs = (params["blocks"], caches["blocks"], caches["obs"]) if has_obs \
         else (params["blocks"], caches["blocks"])
-    (x, trig_sum, adm_sum, adm_n), ys = jax.lax.scan(
-        body, (x, trig_sum, adm_sum, adm_n), xs, unroll=scan_unroll)
+    (x, trig_sum, adm_sum, adm_n, sel_sum), ys = jax.lax.scan(
+        body, (x, trig_sum, adm_sum, adm_n, sel_sum), xs, unroll=scan_unroll)
     new_caches["blocks"] = ys[0]
     if has_obs:
         new_caches["obs"] = ys[1]
@@ -375,7 +404,10 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
         # per-row [B] so serving backends can re-sync the paged mirror for
         # (and average admission over) live slots only
         "evict_trigger_rows": trig_sum,
-        "mean_admission": adm_sum / jnp.maximum(adm_n, 1.0)}
+        "mean_admission": adm_sum / jnp.maximum(adm_n, 1.0),
+        # per-row pages gathered this step under selection_policy (mean
+        # over kv heads, summed over attention layers; zeros when off)
+        "selected_pages_rows": sel_sum}
 
 
 def prefill_extend(params: Params, cfg: ModelConfig, tokens: jax.Array,
@@ -467,10 +499,12 @@ def prefill_extend_ragged(params: Params, cfg: ModelConfig,
         last_logits = jnp.where(active[:, None], logits, last_logits)
         trig = jnp.where(active, st["evict_trigger_rows"], 0.0)
         adm = jnp.where(active, st["mean_admission"], 0.0)
-        return (merged, last_logits), (trig, adm)
+        selp = jnp.where(active, st["selected_pages_rows"], 0.0)
+        return (merged, last_logits), (trig, adm, selp)
 
     init = (caches, jnp.zeros(logits_s.shape, logits_s.dtype))
-    (caches, last_logits), (trig, adm) = jax.lax.scan(
+    (caches, last_logits), (trig, adm, selp) = jax.lax.scan(
         body, init, (tokens.T, active_mat))
     return last_logits, caches, {"evict_trigger_rows": trig.sum(axis=0),
-                                 "adm_sum_rows": adm.sum(axis=0)}
+                                 "adm_sum_rows": adm.sum(axis=0),
+                                 "selected_pages_rows": selp.sum(axis=0)}

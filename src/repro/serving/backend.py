@@ -22,15 +22,16 @@ Protocol surface (one request = one chunked prefill + one decode slot):
     fed from the on-device sampled-token vector, and a dead row is
     length-0 padding whose state is kept bit-identical by per-leaf
     masked writes. Sampling runs inside the same jitted call; the
-    result is an uncollected :class:`FusedStep` (dispatch-ahead works
-    exactly as with ``dispatch_decode``). Gated by
-    ``BackendCapabilities.fused_step``.
-  * ``prefill_step_batch(tasks, max_tokens) -> [bool]`` — DEPRECATED
-    (one cycle): advance EVERY task by at most one chunk as ONE batched
-    ragged jitted call over per-task batch-1 trees (tokens ``[B, S]`` +
-    per-row lengths). Still the unfused parity baseline; gated by
-    ``BackendCapabilities.batched_prefill``. (The older batch-of-one
-    ``prefill_step`` shim served its cycle and is gone.)
+    result is an uncollected :class:`FusedStep`. A task-less
+    ``step_batch([])`` is the decode-only dispatch — and, when the
+    backend was built with a ``selection`` policy (``"quest:K"``), the
+    tick where gathered top-K page selection applies: decode rows
+    attend over only the K highest-scoring global pages for the live
+    query, scored from incremental per-page key min/max metadata
+    (core/selection.py). Mixed ticks always run the full path.
+    (The unfused ``prefill_step_batch`` / ``dispatch_decode`` split
+    drivers served their deprecation cycle and are gone — every backend
+    runs the fused tick.)
   * ``finish_prefill(task, emit_first=True) -> Prefix`` — seal the task;
     with ``emit_first`` the first generated token is sampled from the
     prefill's own last-position logits (no extra decode step, no
@@ -48,12 +49,12 @@ Protocol surface (one request = one chunked prefill + one decode slot):
 
 Decode is a TWO-PHASE surface so host work never blocks the device:
 
-  * ``step_batch(...) -> FusedStep | None`` / ``dispatch_decode() ->
-    InflightStep | None`` — enqueue one jitted batched step WITHOUT
-    synchronizing. The sampled next-token vector stays on device and
-    becomes the feed of the next dispatch, so the driver may dispatch
-    step t+1 before step t's result has ever touched the host
-    (dispatch-ahead depth >= 1). Returns None when nothing can advance.
+  * ``step_batch(...) -> FusedStep | None`` — enqueue one jitted
+    batched step WITHOUT synchronizing. The sampled next-token vector
+    stays on device and becomes the feed of the next dispatch, so the
+    driver may dispatch step t+1 before step t's result has ever
+    touched the host (dispatch-ahead depth >= 1). Returns None when
+    nothing can advance.
   * ``collect(step) -> {slot: token}`` — the sync point: pull the
     sampled tokens to host, fold eviction/admission stats into
     ``stats``, and apply the step's cache delta to the paged mirror.
@@ -84,23 +85,11 @@ Fused lifecycle (default; slots are rows of ONE persistent batched tree)::
               v
         free_slot(slot)          (finished / cancelled)
 
-Unfused lifecycle (deprecated, kept one cycle as the parity baseline)::
-
-    submit ──> start_prefill ──> prefill_step_batch* ──> finish_prefill
-                                                        │ first token
-                                                        v
-                                       insert(prefix, slot)
-                                                        │
-              ┌─────────────────────────────────────────┘
-              v
-        dispatch_decode ──> [device: step t]──────────┐
-              │  (no sync; feed stays on device)      │
-              ├──> dispatch_decode [device: step t+1] │
-              v                                       │
-        collect(step t) <─────────────────────────────┘
-              │  {slot: token} ──> streams / telemetry
-              v
-        free_slot(slot)          (finished / cancelled)
+(The unfused lifecycle — ``prefill_step_batch`` chunk loops feeding
+``finish_prefill``/``insert``, plus ``dispatch_decode`` — served its
+deprecation cycle and is gone. ``prefill``/``finish_prefill``/``insert``
+remain as the offline prefix surface: build a batch-1 prefix eagerly and
+splice it into a decode row.)
 
 Concrete implementations:
   serving/engine.py           Engine                (wgkv — paper system)
@@ -190,6 +179,9 @@ class FusedStep(InflightStep):
     decode_rows: Tuple[int, ...] = ()     # rows that decoded (length-1)
     had_prefill: bool = False
     t_dispatch: float = 0.0               # host wall clock at dispatch
+    # this step ran the gathered top-K page-selection variant (decode-only
+    # dispatch on a selection-configured backend)
+    selection: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,14 +194,9 @@ class BackendCapabilities:
     # decode/extend run SPMD over a data x model device mesh (slots batch
     # over "data", KV heads over "model"; serving/sharded.py)
     sharded: bool = False
-    # prefill_step_batch advances every mid-prefill task in one batched
-    # ragged jitted call (the scheduler falls back to per-task
-    # prefill_step_batch([task]) calls when False)
-    batched_prefill: bool = False
-    # step_batch fuses prefill opens/extends and decode rows into ONE
-    # jitted ragged call per tick over a persistent batched cache tree
-    # (the scheduler falls back to the unfused phases when False)
-    fused_step: bool = False
+    # active decode-time page-selection policy ("quest:K"), None = full
+    # attention on every decode row
+    selection: Optional[str] = None
 
 
 @runtime_checkable
@@ -231,27 +218,20 @@ class EngineBackend(Protocol):
 
     def start_prefill(self, prompt: List[int]) -> PrefillTask: ...
 
-    # fused megabatch tick (gated by capabilities().fused_step): one
-    # jitted ragged call advancing prefill chunks + piggybacked decode
-    # rows; collect() accepts the returned FusedStep
+    # fused megabatch tick: one jitted ragged call advancing prefill
+    # chunks + piggybacked decode rows; collect() accepts the returned
+    # FusedStep. step_batch([]) is the decode-only dispatch (and where
+    # gathered top-K page selection applies when configured).
     def step_batch(self, tasks: List[PrefillTask],
                    max_tokens: Optional[int] = None, *,
                    decode: bool = True) -> Optional[FusedStep]: ...
-
-    # deprecated (one cycle): unfused batched ragged prefill over
-    # per-task batch-1 trees — the fused path's parity baseline
-    def prefill_step_batch(self, tasks: List[PrefillTask],
-                           max_tokens: Optional[int] = None) -> List[bool]: ...
 
     def finish_prefill(self, task: PrefillTask, *,
                        emit_first: bool = True) -> Prefix: ...
 
     def insert(self, prefix: Prefix, slot: int) -> None: ...
 
-    # deprecated (one cycle): unfused decode-only dispatch
-    def dispatch_decode(self) -> Optional[InflightStep]: ...
-
-    def collect(self, step: InflightStep) -> Dict[int, int]: ...
+    def collect(self, step: FusedStep) -> Dict[int, int]: ...
 
     def free_slot(self, slot: int) -> None: ...
 
@@ -269,13 +249,21 @@ def make_backend(name: str, params, cfg, **kw) -> EngineBackend:
     """Construct a registered backend by name.
 
     Common keyword args (all backends): ``slots``, ``capacity``, ``opts``,
-    ``eos``, ``temperature``, ``seed``, and ``mesh`` (a
-    ``jax.sharding.Mesh`` with ("data", "model") axes — decode/extend run
-    SPMD over it; see serving/sharded.py and
+    ``eos``, ``temperature``, ``seed``, ``selection`` (a decode-time
+    page-selection policy, ``"quest:K"`` — folded into
+    ``opts.selection_policy``; dual-cache backends only), and ``mesh``
+    (a ``jax.sharding.Mesh`` with ("data", "model") axes — decode/extend
+    run SPMD over it; see serving/sharded.py and
     ``repro.serving.sharded.build_mesh``). WG-KV family: ``pool_pages``,
     ``mirror_paged``. Static admission: ``sink``, ``retrieval_heads`` /
     ``retrieval_ratio`` (duo).
     """
+    selection = kw.pop("selection", None)
+    if selection is not None:
+        from repro.models import inference as I
+        I.parse_selection_policy(selection)  # fail fast on a bad spec
+        kw["opts"] = dataclasses.replace(kw.get("opts") or I.DecodeOptions(),
+                                         selection_policy=selection)
     if name == "wgkv":
         from repro.serving.engine import Engine
         return Engine(params, cfg, **kw)

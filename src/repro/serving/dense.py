@@ -47,6 +47,10 @@ class DenseEngine(Engine):
                  seed: int = 0, mesh=None, **_paged_kw):
         # dense caches are contiguous [B, H, capacity, hd] buffers; the
         # paged mirror (and pool_pages/mirror_paged kwargs) do not apply
+        if opts is not None and opts.selection_policy is not None:
+            raise ValueError(
+                "selection_policy requires the paged dual cache; the dense "
+                "full-KV baseline has no page metadata to select against")
         super().__init__(params, cfg, slots=slots, capacity=capacity,
                          opts=opts, eos=eos, temperature=temperature,
                          seed=seed, mirror_paged=False, mesh=mesh)
@@ -60,8 +64,7 @@ class DenseEngine(Engine):
         return BackendCapabilities(
             name="dense", gated=False, paged=False,
             description="uncompressed full-KV cache (no admission)",
-            sharded=self.mesh is not None, batched_prefill=True,
-            fused_step=True)
+            sharded=self.mesh is not None)
 
     def memory_snapshot(self) -> Dict[str, float]:
         toks = 0
@@ -122,24 +125,6 @@ class DenseEngine(Engine):
     def insert(self, prefix, slot: int) -> None:
         super().insert(prefix, slot)
         self._slot_len[slot] = int(np.asarray(prefix.caches["t"])[0])
-
-    def dispatch_decode(self):
-        # guard at DISPATCH, not collect: the KV append happens inside the
-        # dispatched step, and past ``capacity`` dense_cache_append would
-        # silently drop the write (JAX OOB scatter) — so refuse to enqueue
-        # a step that would overflow, even with earlier steps in flight
-        for s in range(self.slots):
-            if self.live[s] and self._slot_len[s] >= self.capacity:
-                raise RuntimeError(
-                    f"dense cache overflow: slot {s} at t={self._slot_len[s]} "
-                    f"== capacity {self.capacity}; raise capacity or lower "
-                    "max_new")
-        step = super().dispatch_decode()
-        if step is not None:
-            for s in range(self.slots):
-                if step.live[s]:
-                    self._slot_len[s] += 1
-        return step
 
     def _pre_fused_dispatch(self, prefill, decode_rows) -> None:
         # same dispatch-time overflow guard for the fused step: a prefill

@@ -21,30 +21,31 @@ serving/dense.py and serving/static_admission.py):
     on-device sampled vector, dead rows are length-0 bit-identical
     padding. Sampling runs inside the same call; ``collect`` returns
     decode tokens AND the first tokens of rows whose prompt finished.
-  * ``start_prefill`` / ``prefill_step_batch`` / ``finish_prefill`` —
-    the DEPRECATED unfused chunked prefill (one cycle; it is the fused
-    path's parity baseline): a fresh task opens as the same EMPTY
-    batch-1 template the fused splice uses, and EVERY task — first
-    chunk included — advances through one batched ragged
-    ``prefill_extend_ragged`` scan per call — tokens ``[B, S]`` with
-    per-row lengths, masked so each row's cache state is bit-identical
-    to the sequential batch-1 path. The batch-1 budgeted one-shot open
-    is gone from serving entirely (both drivers share one per-token
-    computation path, which is what makes fused-vs-unfused streams
-    byte-identical); ``I.prefill`` remains the offline/eval surface.
-    (The batch-of-one ``prefill_step`` shim served its deprecation
-    cycle and is gone.)
-  * ``insert(prefix, slot)`` — splice the batch-1 cache tree into the
-    batched decode state (launch/specs.py helpers) and mirror it into the
-    physical paged pool (unfused path; fused rows are already resident).
-  * ``dispatch_decode()`` / ``collect(step)`` — the two-phase decode
-    surface: dispatch enqueues one jitted batched step over all live
-    slots with the sampled next-token feed staying on device (so a
-    second step can be dispatched behind it), collect is the host sync
-    point that pulls tokens, folds stats, and applies the paged-mirror
-    delta. ``dispatch_decode`` is deprecated (one cycle) in favor of a
-    task-less ``step_batch``; ``collect`` serves both step kinds. (The
-    ``generate()`` synchronous shim served its cycle and is gone.)
+    On a DECODE-ONLY tick (no prefill tasks in the dispatch) an engine
+    configured with ``DecodeOptions.selection_policy = "quest:K"``
+    dispatches a second compiled variant of the same fused step whose
+    attention GATHERS only the top-K global pages per (row, kv head) —
+    scored query-aware from the incremental per-page key min/max
+    metadata the dual cache maintains in-jit (core/selection.py) — so
+    decode attention reads K*16 + W entries instead of the full global
+    budget. Mixed ticks (any prompt chunk aboard) always run the full
+    path; with K >= resident pages the gather is the identity
+    permutation and the token stream is byte-identical to selection
+    off.
+  * ``start_prefill`` / ``finish_prefill`` / ``prefill`` — task
+    construction plus the one-shot convenience wrapper over the same
+    batched ragged ``prefill_extend_ragged`` scan the fused tick runs
+    (offline/eval callers; serving traffic rides ``step_batch``). The
+    unfused per-cycle driver (``prefill_step_batch``) served its
+    deprecation cycle and is gone.
+  * ``insert(prefix, slot)`` — splice a batch-1 cache tree into the
+    batched decode state (launch/specs.py helpers) and mirror it into
+    the physical paged pool (offline prefix path; fused rows are
+    already resident).
+  * ``collect(step)`` — the host sync point: pull sampled tokens, fold
+    stats, apply the paged-mirror delta. (``dispatch_decode`` served
+    its deprecation cycle and is gone — ``step_batch([])`` is the
+    decode-only dispatch.)
   * ``free_slot(slot)`` — release the slot and reclaim its pool pages.
 
 The legacy fixed-slot loop (``add_request``/``step``/``run``) is kept as a
@@ -125,11 +126,22 @@ class Engine(ShardedDecodeMixin):
         self.mirror = mirror_paged
         if mirror_paged:
             self.pool = paged.PagedKVPool(pool_pages, cfg.head_dim)
+        # decode-time page selection: the engine's base opts run the full
+        # path (prefill chunks and mixed ticks must see every admitted
+        # token); the policy compiles into a SECOND fused-step variant
+        # dispatched only on decode-only ticks
+        self.selection = self.opts.selection_policy
+        self._sel_k = I.parse_selection_policy(self.selection)  # validates
+        if self.selection is not None:
+            self.opts = dataclasses.replace(self.opts, selection_policy=None)
         self.params = self._sharding_setup(params, mesh)
-        self._decode = self._make_decode()
         self._extend_batch = self._make_extend_batch()
         self._fused = self._make_fused_step()
-        self._sample = self._make_sampler()
+        self._fused_sel = None if self.selection is None \
+            else self._make_fused_step(
+                dataclasses.replace(self.opts,
+                                    selection_policy=self.selection),
+                kind="fused_step_sel")
         self._tok_dev = jnp.zeros((slots,), jnp.int32)
         # fused path: which rows of the persistent batched tree hold a
         # mid-prefill task's state (spliced empty at its first step_batch)
@@ -137,15 +149,10 @@ class Engine(ShardedDecodeMixin):
         self._empty_tree = None
         self.stats = {"steps": 0, "evict_triggers": 0.0, "decode_adm_sum": 0.0,
                       # extend-phase advances only (the path batching
-                      # coalesces; first-chunk opens excluded): wall time
-                      # is a true device measure because _extend_ragged
-                      # syncs on the step's stats before returning
+                      # coalesces): wall time is a true device measure
+                      # because _extend_ragged syncs on the step's stats
+                      # before returning
                       "extend_time_s": 0.0, "extend_tokens": 0.0,
-                      # first-chunk opens (batch-1 budgeted prefill / empty
-                      # cache alloc) — the other prefill sub-phase, so the
-                      # BENCH breakdown can split the prefill stage into
-                      # open vs coalesced-extend time
-                      "open_time_s": 0.0, "open_tokens": 0.0,
                       # fused megabatch ticks: dispatch->collect wall per
                       # step, plus the prefill-stage share (steps carrying
                       # at least one prompt chunk, and the chunk tokens
@@ -153,7 +160,18 @@ class Engine(ShardedDecodeMixin):
                       # fused prefill-stage tokens/s
                       "fused_steps": 0.0, "fused_time_s": 0.0,
                       "fused_prefill_time_s": 0.0,
-                      "fused_prefill_tokens": 0.0}
+                      "fused_prefill_tokens": 0.0,
+                      # fixed-shape padding accounting: every fused
+                      # dispatch pays for ``slots`` rows whatever their
+                      # length; 1 - active/slot rows is the padding
+                      # fraction bench reports so the CPU-XLA stage
+                      # ratios are interpretable
+                      "fused_slot_rows": 0.0, "fused_active_rows": 0.0,
+                      # decode-time page selection: pages gathered (mean
+                      # over kv heads, summed over attention layers and
+                      # decode row-steps) and the wall time of
+                      # selection-enabled fused steps
+                      "selected_pages": 0.0, "selection_time_s": 0.0}
         # observability handle; the Orchestrator overwrites this with its
         # own tracer so engine-side sub-phase spans share its timeline
         self.tracer = NULL_TRACER
@@ -165,8 +183,7 @@ class Engine(ShardedDecodeMixin):
         return BackendCapabilities(
             name="wgkv", gated=True, paged=self.mirror,
             description="write-gated dual cache (learned admission)",
-            sharded=self.mesh is not None, batched_prefill=True,
-            fused_step=True)
+            sharded=self.mesh is not None, selection=self.selection)
 
     def memory_snapshot(self) -> Dict[str, float]:
         """Point-in-time memory telemetry: resident logical KV tokens/bytes
@@ -206,35 +223,6 @@ class Engine(ShardedDecodeMixin):
 
     def start_prefill(self, prompt: List[int]) -> PrefillTask:
         return PrefillTask(prompt=list(prompt))
-
-    def prefill_step_batch(self, tasks: List[PrefillTask],
-                           max_tokens: Optional[int] = None) -> List[bool]:
-        """DEPRECATED (one cycle) in favor of :meth:`step_batch` — kept
-        as the unfused parity baseline the fused tick is asserted
-        byte-identical against.
-
-        Advance EVERY task by at most ``max_tokens`` prompt tokens
-        (None = each task's whole remaining prompt). A fresh task opens
-        as the EMPTY batch-1 cache template (its per-row ``t`` starts
-        the scan at position 0) and joins the same call as everyone
-        else: ONE batched ragged jitted extend — tokens ``[B, S]`` plus
-        per-row lengths, writes past a row's length masked so shorter
-        rows are pure padding with cache state bit-identical to the
-        sequential batch-1 path. First chunks ride the identical
-        per-token computation the fused tick runs, which is what makes
-        the two drivers' streams byte-identical (the old batch-1
-        budgeted one-shot open was a different attention path — same
-        admitted set, different float bits — so greedy argmax could
-        flip on near-tie logits). Returns each task's done flag."""
-        if max_tokens is not None and max_tokens < 1:
-            raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
-        for task in tasks:
-            if task.caches is None:
-                task.caches = self._fresh_task_caches()
-        extend = [t for t in tasks if t.pos < len(t.prompt)]
-        if extend:
-            self._extend_ragged(extend, max_tokens)
-        return [t.done for t in tasks]
 
     def _fresh_task_caches(self):
         """Batch-1 EMPTY decode-cache tree: the state a prefill row starts
@@ -332,10 +320,17 @@ class Engine(ShardedDecodeMixin):
     def prefill(self, prompt: List[int], *,
                 chunk_tokens: Optional[int] = None,
                 emit_first: bool = True) -> Prefix:
-        """One-shot convenience wrapper around the chunked path."""
+        """One-shot convenience wrapper: drive one task's whole prompt
+        through the batched ragged extend (``chunk_tokens`` sets the
+        chunk width; None ingests the remaining prompt in one aligned
+        call). Offline/eval surface — serving traffic rides the fused
+        :meth:`step_batch`, which shares the identical per-token scan."""
+        if chunk_tokens is not None and chunk_tokens < 1:
+            raise ValueError(f"chunk_tokens must be >= 1, got {chunk_tokens}")
         task = self.start_prefill(prompt)
-        while not self.prefill_step_batch([task], chunk_tokens)[0]:
-            pass
+        task.caches = self._fresh_task_caches()
+        while task.pos < len(task.prompt):
+            self._extend_ragged([task], chunk_tokens)
         return self.finish_prefill(task, emit_first=emit_first)
 
     # ------------------------------------------------------------------
@@ -381,10 +376,13 @@ class Engine(ShardedDecodeMixin):
 
         Host state advances at dispatch (teacher-forced positions; a
         finishing row goes live immediately) so a second fused step can
-        be dispatched behind this one — the same dispatch-ahead contract
-        as :meth:`dispatch_decode`. Exactly two compiled shapes exist per
-        engine: ``[slots, chunk]`` and ``[slots, 1]``. Returns None when
-        nothing can advance."""
+        be dispatched behind this one (dispatch-ahead depth >= 1). With
+        ``DecodeOptions.selection_policy`` set, a task-less dispatch
+        runs the gathered top-K page-selection variant of the same
+        compiled step (full-path parity at K >= resident pages). At most
+        three compiled shapes exist per engine: ``[slots, chunk]``,
+        ``[slots, 1]``, and the selection ``[slots, 1]``. Returns None
+        when nothing can advance."""
         if max_tokens is not None and max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
         tasks = [t for t in tasks if not t.done]
@@ -428,16 +426,36 @@ class Engine(ShardedDecodeMixin):
         for sl in decode_rows:
             lengths[sl] = 1
             use_dev[sl] = True
+        # a dead row decodes masked but still feeds its last_token; a
+        # nonzero token there is a missed free_slot reset (a stale replay
+        # of the retired request's final token)
+        assert all(self.last_token[sl] == 0 for sl in range(self.slots)
+                   if not self.live[sl] and lengths[sl] == 0), \
+            "stale last_token on a dead row"
         self._pre_fused_dispatch(
             [(t.slot, take) for t, take in zip(tasks, takes)], decode_rows)
+        # fixed-shape padding accounting: the compiled step always spans
+        # ``slots`` rows; only length>0 rows do real work
+        self.stats["fused_slot_rows"] += float(self.slots)
+        self.stats["fused_active_rows"] += float(int((lengths > 0).sum()))
+        # decode-only ticks run the gathered top-K selection variant when
+        # configured; any prompt chunk aboard forces the full path (its
+        # decode rows ride that mixed call with full attention)
+        use_sel = self._fused_sel is not None and not tasks
         self.key, sk = jax.random.split(self.key)
         before = self.caches
         mirror = self.mirror
+        feed = (jnp.asarray(toks), jnp.asarray(lengths), self._tok_dev,
+                jnp.asarray(use_dev), sk[None])
         with self.tracer.device_scope("fused_step"):
-            _logits, self.caches, st = self._fused(
-                self.params,
-                (jnp.asarray(toks), jnp.asarray(lengths), self._tok_dev,
-                 jnp.asarray(use_dev), sk[None]), before)
+            if use_sel:
+                with self.tracer.span("selection", k=self._sel_k,
+                                      rows=len(decode_rows)):
+                    _logits, self.caches, st = self._fused_sel(
+                        self.params, feed, before)
+            else:
+                _logits, self.caches, st = self._fused(
+                    self.params, feed, before)
         sampled = st["sampled"]
         # host bookkeeping at dispatch (teacher-forced, deterministic):
         # advance positions; a finishing row goes live NOW so the next
@@ -467,7 +485,7 @@ class Engine(ShardedDecodeMixin):
             live=tuple(self.live), gen=tuple(self._slot_gen),
             tasks=tuple(tasks), takes=tuple(takes), fulls=tuple(fulls),
             finishing=tuple(finishing), decode_rows=decode_rows,
-            had_prefill=bool(tasks), t_dispatch=t0)
+            had_prefill=bool(tasks), t_dispatch=t0, selection=use_sel)
 
     def _pre_fused_dispatch(self, prefill: List[Tuple[int, int]],
                             decode_rows: Tuple[int, ...]) -> None:
@@ -486,9 +504,10 @@ class Engine(ShardedDecodeMixin):
         re-opened) while the step was in flight."""
         assert not step.collected, "in-flight step collected twice"
         step.collected = True
-        nxt, trig, adm = jax.device_get(
+        nxt, trig, adm, selp = jax.device_get(
             (step.tokens, step.stats["evict_trigger_rows"],
-             step.stats["adm_sum_rows"]))
+             step.stats["adm_sum_rows"],
+             step.stats["selected_pages_rows"]))
         # the device_get blocked on the fused call, so this wall delta is
         # a true device+host measure of the whole dispatched step
         wall = time.perf_counter() - step.t_dispatch
@@ -497,6 +516,11 @@ class Engine(ShardedDecodeMixin):
         if step.had_prefill:
             self.stats["fused_prefill_time_s"] += wall
             self.stats["fused_prefill_tokens"] += float(sum(step.takes))
+        if step.selection:
+            self.stats["selection_time_s"] += wall
+            if step.decode_rows:
+                self.stats["selected_pages"] += float(
+                    selp[list(step.decode_rows)].sum())
         self.stats["evict_triggers"] += float(trig.sum())
         # prefill-row admission: same float path as the unfused extend
         for t, take, full in zip(step.tasks, step.takes, step.fulls):
@@ -533,84 +557,20 @@ class Engine(ShardedDecodeMixin):
         return out
 
     # ------------------------------------------------------------------
-    # two-phase decode: dispatch (no sync) / collect (the sync point)
+    # collect: the host sync point of the two-phase dispatch contract
     # ------------------------------------------------------------------
-    def dispatch_decode(self) -> Optional[InflightStep]:
-        """Enqueue one jitted batched decode step over all live slots and
-        return it WITHOUT synchronizing. The sampled next-token vector
-        stays on device and immediately becomes the feed of the next
-        dispatch, so a driver may run at dispatch-ahead depth >= 1 —
-        host-side mirroring/sampling for step t (in :meth:`collect`)
-        overlaps device compute for step t+1. Returns None when no slot
-        is live."""
-        if not any(self.live) or self.caches is None:
-            return None
-        # free_slot zeroes a retired row's feed token, so a dead row must
-        # never feed its stale final token back into the batched decode
-        assert all(self.last_token[s] == 0 for s in range(self.slots)
-                   if not self.live[s]), \
-            f"dead rows carry stale last tokens: {self.last_token}"
-        before = self.caches
-        # device bridge: with annotate_device the jitted step + sampler
-        # dispatches carry the serving phase name into device profiles
-        with self.tracer.device_scope("decode_step"):
-            logits, self.caches, st = self._decode(
-                self.params, self._tok_dev, before)
-            self.key, sk = jax.random.split(self.key)
-            nxt = self._sample(sk, logits)
-        # dead rows keep feeding token 0 (free_slot's invariant) even
-        # though the batched step sampled garbage for them
-        live_vec = jnp.asarray(self.live)
-        self._tok_dev = jnp.where(live_vec, nxt, jnp.zeros_like(nxt))
-        # the cache snapshots exist solely for collect's paged-mirror
-        # delta; pinning them with the mirror off would hold a whole
-        # extra batched KV tree alive per in-flight step
-        mirror = self.mirror
-        return InflightStep(tokens=nxt, stats=st,
-                            before=before if mirror else None,
-                            after=self.caches if mirror else None,
-                            live=tuple(self.live),
-                            gen=tuple(self._slot_gen))
-
-    def collect(self, step: InflightStep) -> Dict[int, int]:
-        """Synchronize one in-flight step: pull its sampled tokens to
-        host, fold eviction/admission stats, and apply the cache delta to
-        the paged mirror. Returns {slot: token} for every slot still
-        owned by the request the step was dispatched for — a slot freed
-        (or freed + re-inserted) while the step was in flight is skipped,
-        so a cancelled request can never leak its token into a successor
-        and the mirror never resurrects freed pool streams. Serves both
-        step kinds: a :class:`FusedStep` additionally carries first
-        tokens for rows whose prompt completed in that step."""
-        if isinstance(step, FusedStep):
-            return self._collect_fused(step)
-        assert not step.collected, "in-flight step collected twice"
-        step.collected = True
-        # ONE host sync for everything the step owes the host: sampled
-        # tokens + the stats tree (separate pulls would each block on the
-        # same in-flight computation)
-        nxt, st = jax.device_get((step.tokens, step.stats))
-        self.stats["steps"] += 1
-        self.stats["evict_triggers"] += float(st["evict_triggers"])
-        # admission over rows live at dispatch: dead slots decode token 0
-        # against stale caches and would pollute the serving metric
-        live_rows = [s for s in range(self.slots) if step.live[s]]
-        self.stats["decode_adm_sum"] += self._decode_admission(st, live_rows)
-        rows = [s for s in live_rows
-                if self.live[s] and self._slot_gen[s] == step.gen[s]]
-        # step.before is None when the step was dispatched with the
-        # mirror off (no snapshots pinned) — e.g. mirror toggled back on
-        # between dispatch and collect; the next insert re-syncs anyway
-        if self.mirror and rows and step.before is not None:
-            self._mirror_decode(
-                step.before, step.after, rows=rows,
-                evicted_rows=np.asarray(st["evict_trigger_rows"]) > 0)
-        out: Dict[int, int] = {}
-        for s in rows:
-            tok = int(nxt[s])
-            self.last_token[s] = tok
-            out[s] = tok
-        return out
+    def collect(self, step: FusedStep) -> Dict[int, int]:
+        """Synchronize one in-flight fused step: pull its sampled tokens
+        to host, fold eviction/admission/selection stats, and apply the
+        cache delta to the paged mirror. Returns {slot: token} for every
+        slot still owned by the request the step was dispatched for — a
+        slot freed (or freed + re-inserted) while the step was in flight
+        is skipped, so a cancelled request can never leak its token into
+        a successor and the mirror never resurrects freed pool streams.
+        (The unfused ``dispatch_decode`` step kind served its
+        deprecation cycle and is gone; every step is a
+        :class:`FusedStep` now.)"""
+        return self._collect_fused(step)
 
     def _decode_admission(self, st, live_rows: List[int]) -> float:
         """Mean write-gate admission over live rows for one decode step."""
@@ -800,7 +760,7 @@ class Engine(ShardedDecodeMixin):
             req.out.append(prefix.first_token)
             emitted[req.rid] = prefix.first_token
             self._retire_if_done(req, slot, prefix.first_token)
-        inflight = self.dispatch_decode()
+        inflight = self.step_batch([])
         emitted_slots = self.collect(inflight) if inflight is not None else {}
         for slot, tok in emitted_slots.items():
             rid = self.slot_rid[slot]

@@ -5,9 +5,8 @@ Trace Event Format (the ``{"traceEvents": [...]}`` object form), viewable
 in ``chrome://tracing``, https://ui.perfetto.dev, or Speedscope:
 
   * the engine tick loop is one process ("engine") with one lane of
-    nested per-tick phase spans (``memory_sample`` / ``fused_step`` /
-    ``fused_open`` — or, unfused, ``prefill_extend_ragged`` /
-    ``dispatch_decode`` — ``collect`` / ``evict`` ...);
+    nested per-tick phase spans (``memory_sample`` / ``fused_step``
+    with its ``selection`` sub-span / ``collect`` / ``evict`` ...);
   * requests are a second process ("requests") with one lane (tid) per
     rid showing the lifecycle ``queued -> prefill[chunk i] -> insert ->
     decode`` plus finish/cancel/deadline instants.

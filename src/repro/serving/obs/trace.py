@@ -10,9 +10,8 @@ spent*. The tracer answers both with two families of spans:
     -> insert -> decode -> finish/cancel/deadline`` — the lifecycle the
     orchestrator drives;
   * **engine lane** (one lane per tick loop): ``memory_sample``,
-    ``admit``, ``fused_step`` / ``fused_open`` (fused tick and its
-    splice sub-spans) — or, unfused, ``prefill_advance`` with
-    ``prefill_extend_ragged`` sub-spans plus ``dispatch_decode`` —
+    ``admit``, ``fused_step`` (the one jitted megabatch dispatch, with
+    a ``selection`` sub-span when top-K page selection is active),
     ``collect``, ``evict`` — the per-tick phase decomposition the
     ROADMAP's fused megabatch / prefix-cache items need as evidence.
 

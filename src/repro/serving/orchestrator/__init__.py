@@ -25,7 +25,7 @@ per-tick phase spans into a ring buffer, exportable as Chrome-trace JSON
 
 The Orchestrator drives any backend implementing the
 :class:`repro.serving.backend.EngineBackend` protocol through its
-prefill / insert / dispatch_decode / collect API — the concrete WG-KV
+prefill / insert / step_batch / collect API — the concrete WG-KV
 Engine, the dense full-KV baseline, or a static-admission baseline
 (``repro.serving.backend.make_backend``). No concrete engine is imported
 here: orchestrator code is protocol-only by construction.

@@ -6,9 +6,8 @@ queue, streams, and telemetry serve the WG-KV dual cache, the dense
 full-KV baseline, and the static-admission baselines interchangeably
 (pick one with ``repro.serving.backend.make_backend``).
 
-With a fused-capable backend (``capabilities().fused_step``, the
-default), phases 2 and 3 below collapse into ONE ``step_batch`` call —
-a single jitted ragged device call advancing every live row of the
+Every tick runs the FUSED megabatch step: ONE ``step_batch`` call — a
+single jitted ragged device call advancing every live row of the
 engine's persistent batched cache tree, whatever its phase: first-chunk
 opens (spliced in empty, scanned from position 0), mid-prefill chunk
 extends, and piggybacked length-1 decode rows, with sampling inside the
@@ -16,37 +15,31 @@ same call. A row whose prompt completes delivers its FIRST token at that
 step's collect (state prefill -> decode with no separate
 finish_prefill/insert — the row is already resident and live), and
 dispatch-ahead keeps fused steps in flight exactly like decode steps.
-``SchedulerConfig.fused_step=False`` (CLI ``--no-fused-step``) falls back
-to the unfused phases, which remain the parity baseline.
+(The unfused phase-per-phase tick and its ``fused_step`` /
+``batched_prefill`` toggles served their deprecation cycle and are
+gone.) On a selection-configured backend (``make_backend(...,
+selection="quest:K")``) the decode-only top-up dispatches run gathered
+top-K page selection; ticks carrying prompt chunks stay on the full
+path.
 
-Each tick interleaves four kinds of work:
+Each tick interleaves three kinds of work:
 
   1. **admit** — pop arrival-ordered requests from the queue into free
      slots (a slot is reserved while its prefill is in flight), after
      cancelling any request whose deadline has passed;
-  2. **dispatch** (``dispatch_ahead >= 1``) — enqueue the next batched
-     decode step(s) on the device WITHOUT synchronizing, keeping up to
-     ``dispatch_ahead`` steps in flight (the on-device sampled-token
-     feed lets step t+1 queue behind step t — JetStream's driver-thread
-     overlap without threads);
-  3. **batched chunked prefill** — advance up to ``max_prefill_batch``
-     in-flight prefill tasks by one ``chunk_tokens`` chunk in ONE
-     batched ragged jitted call (``prefill_step_batch``: tokens
-     ``[B, S]`` + per-row lengths, Sarathi-style piggybacked chunking),
-     so a long prompt never blocks the batched decode for more than a
-     chunk and concurrent prefills no longer serialize into B batch-1
-     dispatches; when a task completes it is inserted and its first
-     token streams immediately (TTFT ends here, JetStream-style). All
-     of this work overlaps the in-flight batched decode. Backends
-     without ``capabilities().batched_prefill`` (and runs with
-     ``SchedulerConfig.batched_prefill=False``, the parity baseline)
-     fall back to per-task ``prefill_step_batch([task])`` calls;
-  4. **collect** — synchronize the OLDEST in-flight step (host
+  2. **fused dispatch** — ONE ``step_batch`` call advances every live
+     row (chunks capped at ``chunk_tokens`` per task, Sarathi-style
+     piggybacked chunking, so a long prompt never blocks decode for
+     more than a chunk); with ``dispatch_ahead >= 1``, extra
+     decode-only steps top the in-flight window up WITHOUT
+     synchronizing (the on-device sampled-token feed lets step t+1
+     queue behind step t — JetStream's driver-thread overlap without
+     threads);
+  3. **collect** — synchronize the OLDEST in-flight step (host
      mirroring, sampling pull, stats) and stream one token per live
      request; finished requests free their slot and paged-pool pages on
      the spot so the next arrival can join. With ``dispatch_ahead=0``
-     this degrades to one synchronous dispatch+collect per tick (the
-     PR-3 behavior, kept as the parity baseline).
+     the step dispatched this tick is collected this tick.
 
 The Scheduler is the pure policy (how many to admit, how many prefill
 tasks to advance, whether to decode); the Orchestrator executes the plan
@@ -60,8 +53,7 @@ import dataclasses
 import time
 from typing import Callable, Deque, Dict, List, Optional
 
-from repro.serving.backend import (EngineBackend, FusedStep, InflightStep,
-                                   PrefillTask)
+from repro.serving.backend import EngineBackend, FusedStep, PrefillTask
 from repro.serving.obs.trace import (CAT_ENGINE, CAT_REQUEST, LANE_REQ,
                                      LANE_TICK, NULL_TRACER, Tracer)
 from repro.serving.orchestrator.queue import (InvalidRequest, QueueFull,
@@ -71,18 +63,20 @@ from repro.serving.orchestrator.telemetry import Telemetry
 
 # engine-side stat counters mirrored into telemetry as deltas relative to
 # the orchestrator's birth (engines are reusable across replays):
-# eviction/admission plus the prefill sub-phase counters (open_* for the
-# batch-1 first chunks, extend_* for the coalesced ragged advances — the
-# batched-prefill coalescing axis and the BENCH phase-breakdown columns)
+# eviction/admission plus the prefill sub-phase counters (extend_* for
+# the coalesced ragged advances of the offline prefill wrapper)
 _ENGINE_STAT_KEYS = ("evict_triggers", "decode_adm_sum",
                      "extend_time_s", "extend_tokens",
-                     "open_time_s", "open_tokens",
                      # fused megabatch ticks: dispatch->collect wall and
                      # the prefill-stage share (the compile-free
-                     # prefill tokens/s numerator bench_serving reports
-                     # when the fused path ran)
+                     # prefill tokens/s numerator bench_serving reports)
                      "fused_steps", "fused_time_s",
-                     "fused_prefill_time_s", "fused_prefill_tokens")
+                     "fused_prefill_time_s", "fused_prefill_tokens",
+                     # fixed-shape padding accounting (active vs padded
+                     # rows per fused dispatch -> fused_padding_frac)
+                     "fused_slot_rows", "fused_active_rows",
+                     # decode-time page selection (gathered top-K ticks)
+                     "selected_pages", "selection_time_s")
 
 
 class _Phase:
@@ -120,18 +114,10 @@ class SchedulerConfig:
     # slot); set a cap to bound the batched call's latency on deep models.
     # (Replaces the retired ``prefill_concurrency`` knob, whose "how many
     # separate batch-1 calls per tick" semantics the batched path made
-    # vacuous.)
+    # vacuous. The ``batched_prefill`` / ``fused_step`` fallback toggles
+    # served their deprecation cycle and are gone — every tick is ONE
+    # fused jitted ragged step_batch call.)
     max_prefill_batch: Optional[int] = None
-    # False = advance each task through a separate per-task
-    # prefill_step_batch([task]) call even when the backend can batch
-    # (the parity/regression baseline bench_serving A/Bs against)
-    batched_prefill: bool = True
-    # True (default) = with a fused-capable backend, each tick is ONE
-    # jitted ragged step_batch call advancing prefill opens/chunks and
-    # decode rows together over the persistent batched cache tree.
-    # False (CLI --no-fused-step) = the unfused phase-per-phase tick,
-    # kept one deprecation cycle as the parity/regression baseline.
-    fused_step: bool = True
     decode_while_prefill: bool = True  # decode between prefill chunks
     # decode steps kept in flight on the device (two-phase
     # dispatch/collect; backend.py). 0 = one synchronous dispatch+collect
@@ -211,8 +197,8 @@ class Orchestrator:
         self.slot_req: List[Optional[ServeRequest]] = [None] * engine.slots
         # rid -> (request, prefill task), in admission order
         self._prefills: Dict[int, "tuple[ServeRequest, PrefillTask]"] = {}
-        # dispatched-but-uncollected decode steps, oldest first
-        self._inflight: Deque[InflightStep] = collections.deque()
+        # dispatched-but-uncollected fused steps, oldest first
+        self._inflight: Deque[FusedStep] = collections.deque()
         # requests with a live deadline (rid -> request): the per-tick
         # expiry check stays O(active deadlines), not O(every request
         # ever submitted to this long-lived session)
@@ -220,13 +206,6 @@ class Orchestrator:
         # engines are reusable (e.g. benchmark warmup); report stat deltas
         # relative to this orchestrator's birth, not engine lifetime totals
         self._stats0 = dict(engine.stats)
-        # one capability probe at construction: whether the tick runs the
-        # fused megabatch step, and (unfused) whether prefill advances go
-        # through the batched ragged call or per-task calls
-        caps = engine.capabilities()
-        self._fused = sched.fused_step and caps.fused_step
-        self._batched_prefill = (sched.batched_prefill
-                                 and caps.batched_prefill)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 32,
@@ -278,10 +257,9 @@ class Orchestrator:
             # generation guard discards anything in-flight steps still
             # produce for it
             self._prefills.pop(rid, None)
-            if self._fused:
-                with self._phase("evict", counter="evict_time_s",
-                                 slot=req.slot, rid=rid):
-                    self.engine.free_slot(req.slot)
+            with self._phase("evict", counter="evict_time_s",
+                             slot=req.slot, rid=rid):
+                self.engine.free_slot(req.slot)
             self.slot_req[req.slot] = None
         elif req.state == "decode":
             with self._phase("evict", counter="evict_time_s",
@@ -402,142 +380,62 @@ class Orchestrator:
                     self._prefills[req.rid] = (req, task)
                     worked = True
 
-        # 2+3 fused) ONE jitted ragged device call advances every live
-        # row — first-chunk opens, mid-prefill extends, and piggybacked
-        # decode rows together. The step is dispatched WITHOUT
-        # synchronizing and joins the in-flight window; extra decode-only
-        # fused steps top the window up to depth + 1 so dispatch-ahead
-        # semantics match the unfused path exactly.
-        if self._fused:
-            adv = list(self._prefills)[:plan.advance_prefills]
-            pairs = [self._prefills[rid] for rid in adv]
-            tasks = [task for _, task in pairs]
-            pos0 = [task.pos for task in tasks]
-            chunk = self.scheduler.cfg.chunk_tokens
-            with self._phase("fused_step", counter="dispatch_time_s",
-                             tick=tick_no, batch=len(tasks),
-                             width=sum(self.engine.live)) as ph:
-                step = self.engine.step_batch(tasks, chunk,
-                                              decode=plan.decode)
-                if step is not None:
-                    self._inflight.append(step)
-                    self.telemetry.bump("dispatched_steps")
-                    worked = True
-                while (depth > 0 and plan.decode
-                       and len(self._inflight) < depth + 1
-                       and self._dispatch_is_useful()):
-                    extra = self.engine.step_batch([], decode=True)
-                    if extra is None:
-                        break
-                    self._inflight.append(extra)
-                    self.telemetry.bump("dispatched_steps")
-                    worked = True
-            # per-task chunk accounting at dispatch (positions advance
-            # teacher-forced inside step_batch; first tokens arrive at
-            # collect via _route_tokens)
-            t_adv1 = self.clock()
-            advanced = 0
-            for rid, (req, task), p0 in zip(adv, pairs, pos0):
-                took = task.pos - p0
-                if took <= 0:
-                    continue
-                advanced += 1
-                self.telemetry.bump("prefill_chunks")
-                self.telemetry.bump("prefill_tokens", took)
-                req.prefill_chunks += 1
-                self.tracer.add(f"prefill[chunk {req.prefill_chunks - 1}]",
-                                ph.t0, t_adv1, cat=CAT_REQUEST,
-                                lane=(LANE_REQ, rid),
-                                args={"rid": rid, "tokens": took,
-                                      "pos": task.pos, "batch": len(tasks),
-                                      "fused": True})
-            if advanced:
-                self.telemetry.bump("prefill_batches")
+        # 2) fused dispatch: ONE jitted ragged device call advances every
+        # live row — first-chunk opens, mid-prefill extends, and
+        # piggybacked decode rows together. The step is dispatched
+        # WITHOUT synchronizing and joins the in-flight window; extra
+        # decode-only fused steps (where gathered top-K page selection
+        # applies, when configured) top the window up to depth + 1. A
+        # step is only dispatched while some live request's remaining
+        # max_new budget exceeds the tokens already in flight — past
+        # that the step is provably wasted.
+        adv = list(self._prefills)[:plan.advance_prefills]
+        pairs = [self._prefills[rid] for rid in adv]
+        tasks = [task for _, task in pairs]
+        pos0 = [task.pos for task in tasks]
+        chunk = self.scheduler.cfg.chunk_tokens
+        with self._phase("fused_step", counter="dispatch_time_s",
+                         tick=tick_no, batch=len(tasks),
+                         width=sum(self.engine.live)) as ph:
+            step = self.engine.step_batch(tasks, chunk,
+                                          decode=plan.decode)
+            if step is not None:
+                self._inflight.append(step)
+                self.telemetry.bump("dispatched_steps")
+                worked = True
+            while (depth > 0 and plan.decode
+                   and len(self._inflight) < depth + 1
+                   and self._dispatch_is_useful()):
+                extra = self.engine.step_batch([], decode=True)
+                if extra is None:
+                    break
+                self._inflight.append(extra)
+                self.telemetry.bump("dispatched_steps")
+                worked = True
+        # per-task chunk accounting at dispatch (positions advance
+        # teacher-forced inside step_batch; first tokens arrive at
+        # collect via _route_tokens)
+        t_adv1 = self.clock()
+        advanced = 0
+        for rid, (req, task), p0 in zip(adv, pairs, pos0):
+            took = task.pos - p0
+            if took <= 0:
+                continue
+            advanced += 1
+            self.telemetry.bump("prefill_chunks")
+            self.telemetry.bump("prefill_tokens", took)
+            req.prefill_chunks += 1
+            self.tracer.add(f"prefill[chunk {req.prefill_chunks - 1}]",
+                            ph.t0, t_adv1, cat=CAT_REQUEST,
+                            lane=(LANE_REQ, rid),
+                            args={"rid": rid, "tokens": took,
+                                  "pos": task.pos, "batch": len(tasks),
+                                  "fused": True})
+        if advanced:
+            self.telemetry.bump("prefill_batches")
 
-        # 2) batched chunked prefill: advance the oldest in-flight tasks,
-        # ALL through one batched ragged device call when the backend can
-        # (runs while up to ``depth`` decode steps from earlier ticks are
-        # still in flight — the overlap dispatch-ahead exists for)
-        adv = [] if self._fused else list(self._prefills)[:plan.advance_prefills]
-        if adv:
-            pairs = [self._prefills[rid] for rid in adv]
-            tasks = [task for _, task in pairs]
-            pos0 = [task.pos for task in tasks]
-            chunk = self.scheduler.cfg.chunk_tokens
-            # stage wall time + advance calls (one batched call vs one
-            # per task): the axes bench_serving's batched_prefill_speedup
-            # rides on — total replay wall would drown the prefill stage
-            # in decode time on decode-heavy traces. The phase span also
-            # brackets the engine-side prefill_extend_ragged sub-spans
-            # on the trace timeline.
-            with self._phase("prefill_advance", counter="prefill_time_s",
-                             tick=tick_no, batch=len(tasks)) as ph:
-                if self._batched_prefill:
-                    dones = self.engine.prefill_step_batch(tasks, chunk)
-                else:
-                    # per-task fallback: batch-of-one calls through the
-                    # same ragged path (the prefill_step shim is retired)
-                    dones = [self.engine.prefill_step_batch([task], chunk)[0]
-                             for task in tasks]
-            self.telemetry.bump("prefill_batches",
-                                1 if self._batched_prefill else len(tasks))
-            worked = True
-            t_adv1 = self.clock()
-            for rid, (req, task), p0, done in zip(adv, pairs, pos0, dones):
-                # per-task accounting is unchanged by batching: one chunk
-                # per task per tick, tokens from the task's own cursor
-                self.telemetry.bump("prefill_chunks")
-                self.telemetry.bump("prefill_tokens", task.pos - p0)
-                req.prefill_chunks += 1
-                # request-lane chunk span: every advanced task shares the
-                # batched call's wall window (batch attr says how many)
-                self.tracer.add(f"prefill[chunk {req.prefill_chunks - 1}]",
-                                ph.t0, t_adv1, cat=CAT_REQUEST,
-                                lane=(LANE_REQ, rid),
-                                args={"rid": rid, "tokens": task.pos - p0,
-                                      "pos": task.pos,
-                                      "batch": len(tasks)})
-                if done:
-                    t_ins0 = self.clock()
-                    prefix = self.engine.finish_prefill(task, emit_first=True)
-                    self.engine.insert(prefix, req.slot)
-                    req.state = "decode"
-                    req.insert_t = self.clock()
-                    self.tracer.add("insert", t_ins0, req.insert_t,
-                                    cat=CAT_REQUEST, lane=(LANE_REQ, rid),
-                                    args={"rid": rid, "slot": req.slot})
-                    req.mean_admission = prefix.mean_admission
-                    del self._prefills[rid]
-                    self._deliver(req, prefix.first_token)
-
-        # 3) dispatch-ahead: top up the in-flight window AFTER inserts
-        # (a freshly inserted row joins the very next step, exactly like
-        # the synchronous path) but BEFORE collecting, so the step
-        # collected below is one dispatched on an EARLIER tick — a full
-        # tick of host work (prefill, token delivery, telemetry)
-        # overlapped its device compute. The window is filled to
-        # depth + 1 because step 4 collects one step this same tick:
-        # what SURVIVES the tick is ``depth`` steps. A step is only
-        # dispatched while some live request's remaining max_new budget
-        # exceeds the tokens already in flight — past that the step is
-        # provably wasted (pipeline-flush work the sync path never does).
-        if depth > 0 and plan.decode and not self._fused:
-            with self._phase("dispatch_decode", counter="dispatch_time_s",
-                             tick=tick_no,
-                             width=sum(self.engine.live)):
-                while (len(self._inflight) < depth + 1
-                       and self._dispatch_is_useful()):
-                    step = self.engine.dispatch_decode()
-                    if step is None:
-                        break
-                    self._inflight.append(step)
-                    self.telemetry.bump("dispatched_steps")
-                    worked = True
-
-        # 4) decode result: collect the OLDEST in-flight step (the host
-        # sync point), or run one synchronous dispatch+collect when async
-        # dispatch is off (fused steps at depth 0 already sit in the
-        # window, so the fused tick always takes the first branch)
+        # 3) collect the OLDEST in-flight step (the host sync point); at
+        # depth 0 that is the step dispatched just above
         out: Dict[int, int] = {}
         step = None
         if self._inflight:
@@ -548,17 +446,6 @@ class Orchestrator:
             if self._is_decode_step(step):
                 self.telemetry.bump("decode_steps")
             worked = True
-        elif depth == 0 and plan.decode and not self._fused:
-            with self._phase("dispatch_decode", counter="dispatch_time_s",
-                             tick=tick_no,
-                             width=sum(self.engine.live)):
-                step = self.engine.dispatch_decode()
-            if step is not None:
-                with self._phase("collect", tick=tick_no,
-                                 width=sum(step.live)):
-                    out = self.engine.collect(step)
-                self.telemetry.bump("decode_steps")
-                worked = True
         self._route_tokens(step, out)
 
         self.telemetry.counters["rejected"] = float(self.queue.rejected)

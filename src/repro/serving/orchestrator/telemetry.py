@@ -29,12 +29,12 @@ from repro.serving.obs.metrics import CounterView, MetricsRegistry
 
 # summary()/to_json() artifact schema: bump on shape changes so BENCH /
 # trace consumers across PRs can tell what they are reading
-TELEMETRY_SCHEMA_VERSION = 2
+TELEMETRY_SCHEMA_VERSION = 3
 
 # tick-phase wall-time counters (seconds), accumulated by the
-# orchestrator's phase spans: where each tick's time goes. ``open`` and
-# ``extend`` are engine-side sub-phases of the ``prefill`` stage (synced
-# from engine stats), so the disjoint per-tick decomposition is
+# orchestrator's phase spans: where each tick's time goes. ``extend``
+# is an engine-side sub-phase of the ``prefill`` stage (synced from
+# engine stats), so the disjoint per-tick decomposition is
 # prefill + dispatch + collect + evict + memory_sample + admit <= tick.
 PHASE_TIME_KEYS = ("prefill_time_s", "dispatch_time_s", "collect_time_s",
                    "evict_time_s", "memory_sample_time_s", "admit_time_s")
@@ -101,7 +101,12 @@ class Telemetry:
                 # fused_prefill_time_s/_tokens apportion the fused call's
                 # wall time to its prefill rows for the prompt-ingest rate
                 ("fused_steps", 0), ("fused_time_s", 0.0),
-                ("fused_prefill_time_s", 0.0), ("fused_prefill_tokens", 0)):
+                ("fused_prefill_time_s", 0.0), ("fused_prefill_tokens", 0),
+                # fixed-shape padding accounting of fused dispatches
+                # (fused_padding_frac = 1 - active/slot rows)
+                ("fused_slot_rows", 0), ("fused_active_rows", 0),
+                # decode-time page selection (gathered top-K fused ticks)
+                ("selected_pages", 0.0), ("selection_time_s", 0.0)):
             self.counters[name] = v
         self.records: List[RequestRecord] = []
         self.pool_util_samples: List[float] = []
@@ -179,6 +184,12 @@ class Telemetry:
         steps = self.counters["decode_steps"]
         decode_adm = (self.counters.get("decode_adm_sum", 0.0) / steps
                       if steps else None)
+        # fixed-shape padding of the fused dispatches: every compiled
+        # step spans all slot rows, so on CPU-XLA the padded rows cost
+        # real compute — this fraction makes stage-time ratios legible
+        slot_rows = self.counters.get("fused_slot_rows", 0.0)
+        pad_frac = (1.0 - self.counters.get("fused_active_rows", 0.0)
+                    / slot_rows) if slot_rows else None
         return {
             # self-description: artifacts (BENCH json, committed
             # summaries) say what schema they carry and when they were cut
@@ -186,6 +197,7 @@ class Telemetry:
             "generated_at": datetime.datetime.now(
                 datetime.timezone.utc).isoformat(),
             "mean_admission_decode": decode_adm,
+            "fused_padding_frac": pad_frac,
             "requests": n,
             "wall_s": wall,
             "requests_per_s": (n / wall if wall else None),
@@ -221,20 +233,19 @@ class Telemetry:
     def phase_times(self) -> Dict[str, float]:
         """Per-phase tick wall-time decomposition (seconds): the disjoint
         orchestrator phases plus the engine-side prefill sub-phase
-        (``extend_time_s``, contained in ``prefill_time_s``; the
-        ``open_time_s`` counter is retained one cycle but is always 0 —
-        the batch-1 open path is gone, first chunks ride the scan) and
-        the measured total ``tick_time_s``."""
+        (``extend_time_s``, contained in ``prefill_time_s``) and the
+        measured total ``tick_time_s``."""
         c = self.counters
         out = {k: float(c.get(k, 0.0)) for k in PHASE_TIME_KEYS}
-        out["open_time_s"] = float(c.get("open_time_s", 0.0))
         out["extend_time_s"] = float(c.get("extend_time_s", 0.0))
         # fused megabatch: one device call per tick covering prefill rows
         # and decode rows together — its wall time lands in
         # dispatch_time_s (already a PHASE_TIME_KEYS member), surfaced
-        # here as its own lens plus the prefill-row apportionment
+        # here as its own lens plus the prefill-row apportionment and
+        # the selection-enabled (gathered top-K) share
         out["fused_time_s"] = float(c.get("fused_time_s", 0.0))
         out["fused_prefill_time_s"] = float(c.get("fused_prefill_time_s", 0.0))
+        out["selection_time_s"] = float(c.get("selection_time_s", 0.0))
         out["tick_time_s"] = float(c.get("tick_time_s", 0.0))
         out["phase_sum_s"] = sum(float(c.get(k, 0.0))
                                  for k in PHASE_TIME_KEYS)
@@ -283,6 +294,9 @@ class Telemetry:
             f"admission: prefill_mean={f(s['mean_admission'], nd=3)} "
             f"decode_mean={f(s['mean_admission_decode'], nd=3)} "
             f"(evict_triggers={c['evict_triggers']:.0f})",
+            f"fused padding_frac={f(s['fused_padding_frac'], nd=3)}  "
+            f"selection: pages={c.get('selected_pages', 0.0):.0f} "
+            f"time={f(ph['selection_time_s'], 's')}",
             f"paged pool: util_mean={f(s['pool_util_mean'], nd=3)} "
             f"util_last={f(s['pool_util_last'], nd=3)} "
             f"pages_peak={s['pool_pages_peak']}",

@@ -1,10 +1,10 @@
 """Mesh-sharded serving execution: one SPMD decode step over all slots.
 
-The serving backends (engine.py / dense.py / static_admission.py) jit the
-same two model entry points — ``decode_step`` over the batched slot
-state and the ragged ``prefill_extend_ragged`` over every mid-prefill
-task at once (rows over "data"; a batch-of-one call serves the
-single-task shim). This module is the single place where a
+The serving backends (engine.py / dense.py / static_admission.py) jit
+one model entry point — the ragged ``prefill_extend_ragged`` scan — in
+two dressings: the fused megabatch tick over the persistent batched
+tree (with on-device sampling folded in) and the batched prefill
+extend over per-task batch-1 trees. This module is the single place where a
 ``jax.sharding.Mesh`` enters that path, so every backend
 (and therefore the whole A/B harness) scales across a data x model device
 mesh without the orchestrator or scheduler changing at all:
@@ -145,16 +145,6 @@ class ShardedDecodeMixin:
     # ------------------------------------------------------------------
     # jitted model steps
     # ------------------------------------------------------------------
-    def _make_decode(self) -> Callable:
-        """(params, token [B], caches) -> (logits, caches, stats)."""
-
-        def fn(params, token, caches):
-            return I.decode_step(params, self.cfg, token, caches,
-                                 opts=self.opts)
-
-        return jax.jit(fn) if self.mesh is None \
-            else self._mesh_jit(fn, kind="decode")
-
     def _make_extend_batch(self) -> Callable:
         """(params, (tokens [B, S], lengths [B]), caches) ->
         (last_logits [B, V], caches, per-row stats): the batched ragged
@@ -171,54 +161,44 @@ class ShardedDecodeMixin:
         return jax.jit(fn) if self.mesh is None \
             else self._mesh_jit(fn, kind="extend_batch")
 
-    def _make_fused_step(self) -> Callable:
+    def _make_fused_step(self, opts=None, *,
+                         kind: str = "fused_step") -> Callable:
         """(params, feed, caches) -> (last_logits, caches, stats): the
         fused megabatch tick over the PERSISTENT batched cache tree.
+        ``opts`` overrides ``self.opts`` for this build — the engine uses
+        it to compile a second, selection-enabled variant of the same
+        step (``DecodeOptions.selection_policy``) dispatched on
+        decode-only ticks; ``kind`` keys the mesh-jit memo so the two
+        variants never share a compiled entry.
 
         ``feed`` is ``(tokens [B, S], lengths [B], tok_dev [B],
         use_dev [B] bool, key [1, 2])``: prompt chunks arrive from the
         host left-aligned in ``tokens``; decode rows are length-1 ragged
         rows whose position-0 token is substituted from the ON-DEVICE
         sampled vector ``tok_dev`` (``use_dev`` marks them), so the
-        decode feed never round-trips through the host between steps —
-        the two-phase dispatch-ahead contract of ``dispatch_decode``
-        carries over unchanged. Sampling happens INSIDE the same jitted
+        decode feed never round-trips through the host between steps
+        under the two-phase dispatch-ahead contract. Sampling happens
+        INSIDE the same jitted
         call (``stats["sampled"]``), making a whole tick exactly one
         device dispatch: a decode row's next token and a finishing
         prefill row's first token come out together. Length-0 rows stay
         bit-identical via the ragged scan's per-leaf masked writes.
-        Under a mesh, rows shard over "data" exactly like the unfused
+        Under a mesh, rows shard over "data" exactly like the batched
         extend (the [1, 2] key replicates)."""
         temperature = self.temperature
+        opts = self.opts if opts is None else opts
 
         def fn(params, feed, caches):
             tokens, lengths, tok_dev, use_dev, key = feed
             tokens = tokens.at[:, 0].set(
                 jnp.where(use_dev, tok_dev, tokens[:, 0]))
             last_logits, caches, st = I.prefill_extend_ragged(
-                params, self.cfg, tokens, lengths, caches, opts=self.opts)
+                params, self.cfg, tokens, lengths, caches, opts=opts)
             sampled = sample(key[0], last_logits, temperature=temperature)
             return last_logits, caches, {**st, "sampled": sampled}
 
         return jax.jit(fn) if self.mesh is None \
-            else self._mesh_jit(fn, kind="fused_step")
-
-    def _make_sampler(self) -> Callable:
-        """(key, logits [B, V]) -> tokens [B] int32, sampled ON DEVICE.
-
-        The sampled vector is the feed of the next dispatched decode step
-        (two-phase dispatch/collect: backend.py), so it must never round-
-        trip through the host between steps. Under a mesh the logits
-        arrive row-sharded from the jitted decode step and GSPMD carries
-        that placement through the (tiny) argmax/categorical; the [B]
-        token vector lands row-sharded, exactly what the next decode's
-        pinned input sharding expects."""
-        temperature = self.temperature
-
-        def fn(key, logits):
-            return sample(key, logits, temperature=temperature)
-
-        return jax.jit(fn)
+            else self._mesh_jit(fn, kind=kind)
 
     def _mesh_jit(self, fn: Callable, *, kind: str) -> Callable:
         """Wrap ``fn(params, tokens, caches)`` with explicit in/out

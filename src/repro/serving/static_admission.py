@@ -6,7 +6,7 @@ re-expressed in the write-gate interface (core/baselines.py): g depends
 only on a token's absolute position (and, for DuoAttention, its head).
 Plugging those gates into the identical dual-cache machinery — same ring,
 same lazy promotion, same paged mirror, same two-phase
-``dispatch_decode``/``collect`` surface (the gate is a jit-time option,
+``step_batch``/``collect`` surface (the gate is a jit-time option,
 so the dispatched step and on-device token feed are inherited from
 :class:`Engine` unchanged) — turns each baseline into a full serving
 backend behind the :class:`EngineBackend` protocol, so the A/B harness
@@ -71,5 +71,4 @@ class StaticAdmissionEngine(Engine):
             name=self.policy, gated=True, paged=self.mirror,
             description="static admission baseline "
                         "(position/head-only write gate)",
-            sharded=self.mesh is not None, batched_prefill=True,
-            fused_step=True)
+            sharded=self.mesh is not None, selection=self.selection)

@@ -286,6 +286,12 @@ def _cache_leaf_spec(path: Tuple[str, ...], shape, mesh: Mesh,
         if b_ax is None and seq_shard:
             return spec(None, pick(h, mesh, "model"), pick(s, mesh, "data"), None)
         return spec(b_ax, pick(h, mesh, "model"), None, None)
+    if name in ("pkmin", "pkmax") and len(core) == 4:
+        # Quest page metadata [B, H, P, hd]: follows gk's batch/head layout;
+        # the page axis stays unsharded even under seq_shard (P = C/16 pages
+        # are consumed whole by the selection top-k)
+        _, h, p_pages, hd = core
+        return spec(b_ax, pick(h, mesh, "model"), None, None)
     if name in ("gpos",) and len(core) == 3:
         _, h, s = core
         if b_ax is None and seq_shard:

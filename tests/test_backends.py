@@ -23,8 +23,9 @@ pytestmark = pytest.mark.backends
 
 def _generate(eng):
     """One synchronous batched decode step through the two-phase surface
-    (the retired ``generate()`` shim, inlined at its call sites)."""
-    step = eng.dispatch_decode()
+    (a task-less fused dispatch — the decode-only top-up the scheduler
+    issues — collected immediately)."""
+    step = eng.step_batch([])
     return eng.collect(step) if step is not None else {}
 
 
@@ -170,7 +171,8 @@ def test_ab_admission_gated_only(served):
 def test_free_slot_resets_last_token(served):
     """A retired slot keeps decoding (masked) in the batched step; its
     ``last_token`` must be zeroed on free so the dead row feeds token 0,
-    not a replay of its final token — and dispatch_decode enforces it."""
+    not a replay of its final token — and the fused dispatch enforces
+    it."""
     cfg, params = served
     eng = make_backend("wgkv", params, cfg, slots=2, capacity=128,
                        mirror_paged=False)
@@ -205,9 +207,9 @@ def test_dispatch_ahead_matches_synchronous(served):
             eng.insert(eng.prefill(p), s)
         out = [[], []]
         if two_phase:
-            inflight = [eng.dispatch_decode()]  # depth 2: t+1 behind t
+            inflight = [eng.step_batch([])]     # depth 2: t+1 behind t
             for _ in range(4):
-                inflight.append(eng.dispatch_decode())
+                inflight.append(eng.step_batch([]))
                 got = eng.collect(inflight.pop(0))
                 for s, t in got.items():
                     out[s].append(t)
@@ -232,7 +234,7 @@ def test_collect_discards_freed_slot(served):
                        mirror_paged=False)
     eng.insert(eng.prefill(list(range(10, 58))), 0)
     eng.insert(eng.prefill(list(range(30, 78))), 1)
-    step = eng.dispatch_decode()
+    step = eng.step_batch([])
     eng.free_slot(0)                     # cancel slot 0 mid-flight
     out = eng.collect(step)
     assert set(out) == {1}               # slot 0's token discarded

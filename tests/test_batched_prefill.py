@@ -1,6 +1,6 @@
-"""Batched ragged prefill (prefill_step_batch / prefill_extend_ragged):
-every mid-prefill task advances in ONE jitted device call, with writes
-masked past each row's length.
+"""Batched ragged prefill (Engine._extend_ragged /
+prefill_extend_ragged): every mid-prefill task advances in ONE jitted
+device call, with writes masked past each row's length.
 
 Parity standard (the repo's cross-batch-size standard, as in
 test_backends dense-vs-legacy): integer cache state (t, ring ptr, global
@@ -87,11 +87,20 @@ def assert_tree_parity(a, b, *, exact: bool, atol: float = 1e-5):
             np.testing.assert_allclose(x, y, atol=atol, rtol=0, err_msg=path)
 
 
+def _extend(eng, tasks, chunk=CHUNK):
+    """One coalesced ragged advance of task-local batch trees (the drive
+    the offline ``prefill`` wrapper and these parity checks share)."""
+    for t in tasks:
+        if t.caches is None:
+            t.caches = eng._fresh_task_caches()
+    eng._extend_ragged(tasks, chunk)
+
+
 def _make_task(eng, prompt, *, advance_chunks: int):
     task = eng.start_prefill(prompt)
     for _ in range(advance_chunks):
         if not task.done:
-            eng.prefill_step_batch([task], CHUNK)
+            _extend(eng, [task])
     return task
 
 
@@ -132,8 +141,9 @@ def test_ragged_kernel_zero_and_short_rows(engines):
 
 
 # ==========================================================================
-# backend level: prefill_step_batch == sequential prefill_step, mixed
-# lengths (ragged tails, short prompts, rows finishing mid-batch)
+# backend level: one coalesced ragged extend == sequential batch-of-one
+# extends, mixed lengths (ragged tails, short prompts, rows finishing
+# mid-batch)
 # ==========================================================================
 def check_batch_matches_sequential(eng, prompts):
     def drive(batched):
@@ -142,10 +152,10 @@ def check_batch_matches_sequential(eng, prompts):
         while not all(t.done for t in tasks):
             live = [t for t in tasks if not t.done]
             if batched:
-                eng.prefill_step_batch(live, CHUNK)
+                _extend(eng, live)
             else:
                 for t in live:
-                    eng.prefill_step_batch([t], CHUNK)
+                    _extend(eng, [t])
             ticks += 1
             assert ticks < 100
         return tasks
@@ -194,40 +204,34 @@ if HAS_HYPOTHESIS:
 
 
 # ==========================================================================
-# all three backend families: orchestrator streams byte-identical with
-# the batched and the per-request prefill drivers
+# all three backend families: the fused serving stream matches the
+# offline ``prefill`` wrapper's admission view of the same prompts
+# (the orchestrator-level batched-vs-per-request A/B retired with the
+# per-request driver; cross-driver stream parity lives in
+# test_fused_tick.py)
 # ==========================================================================
 @pytest.mark.parametrize("name", BACKEND_NAMES)
-def test_stream_parity_batched_vs_per_request(served, engines, name):
+def test_serving_stream_admission_matches_offline(served, engines, name):
     prompts = [list(range(10, 58)), list(range(5, 60)),
                list(range(20, 30)), list(range(7, 52))]
-
-    def serve(batched):
-        # fused off: this A/B compares the two UNFUSED prefill drivers
-        # (the fused-vs-unfused A/B lives in test_fused_tick.py)
-        orch = Orchestrator(engines(name), sched=SchedulerConfig(
-            chunk_tokens=CHUNK, batched_prefill=batched,
-            fused_step=False))
-        for p in prompts:
-            orch.submit(p, max_new=5)
-        orch.run()
-        return ([orch.tokens(r) for r in range(len(prompts))],
-                orch.telemetry.summary())
-
-    toks_b, s_b = serve(True)
-    toks_u, s_u = serve(False)
-    assert toks_b == toks_u
-    assert all(len(t) == 5 for t in toks_b)
-    # chunk accounting keeps its per-task meaning under batching; the
-    # batched driver coalesces them into fewer device dispatches
-    assert s_b["counters"]["prefill_chunks"] == \
-        s_u["counters"]["prefill_chunks"]
-    assert s_b["counters"]["prefill_tokens"] == \
-        s_u["counters"]["prefill_tokens"]
-    assert s_b["counters"]["prefill_batches"] < \
-        s_u["counters"]["prefill_batches"]
-    assert s_b["mean_admission"] == pytest.approx(s_u["mean_admission"],
-                                                  rel=1e-5)
+    eng = engines(name)
+    orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=CHUNK))
+    for p in prompts:
+        orch.submit(p, max_new=5)
+    orch.run()
+    toks = [orch.tokens(r) for r in range(len(prompts))]
+    assert all(len(t) == 5 for t in toks)
+    s = orch.telemetry.summary()
+    assert s["counters"]["prefill_tokens"] == sum(map(len, prompts))
+    # the offline wrapper (same chunk width) sees the same admission
+    # mass and the same first byte each stream opened with
+    for p, t in zip(prompts, toks):
+        pre = eng.prefill(p, chunk_tokens=CHUNK)
+        assert pre.first_token == t[0]
+    offline = [eng.prefill(p, chunk_tokens=CHUNK).mean_admission
+               for p in prompts]
+    assert s["mean_admission"] == pytest.approx(
+        sum(offline) / len(offline), rel=1e-5)
 
 
 # ==========================================================================

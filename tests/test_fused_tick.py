@@ -6,10 +6,12 @@ length-1 decode rows with in-jit sampling — while dead rows stay
 bit-identical padding.
 
 Parity standard (the repo's cross-driver standard, as in
-test_batched_prefill): greedy token streams byte-identical to the
-unfused split open/extend/dispatch-decode driver of PR 5, admission
-accounting approx-equal, padding rows BITWISE untouched. tau=0.1 per
-the knife-edge note (random-init gate scores cluster at 0.5)."""
+test_batched_prefill): greedy token streams byte-identical to a
+sequential engine-level reference drive (task-local ``_extend_ragged``
+chunks + decode-only ``step_batch([])`` dispatches) and across
+dispatch depths, admission accounting approx-equal, padding rows
+BITWISE untouched. tau=0.1 per the knife-edge note (random-init gate
+scores cluster at 0.5)."""
 import jax
 import numpy as np
 import pytest
@@ -57,8 +59,9 @@ def test_fused_mixed_roles_single_call(served):
     """A single ``step_batch`` call carrying a FIRST-CHUNK row (opened as
     an empty-template splice, scanned from position 0), a MID-EXTEND row,
     a length-0 dead padding row, and decode rows — every emitted token
-    identical to the unfused prefill_step_batch / finish_prefill /
-    insert / dispatch_decode drive of the same prompts."""
+    identical to a sequential reference drive of the same prompts
+    (task-local ``_extend_ragged`` chunks, ``finish_prefill`` /
+    ``insert``, decode-only ``step_batch([])`` dispatches)."""
     rng = np.random.default_rng(3)
     pa = list(rng.integers(0, 200, 20))   # slot 1: first chunk in step 3
     pb = list(rng.integers(0, 200, 30))   # slot 0: mid-extend in step 3
@@ -101,32 +104,35 @@ def test_fused_mixed_roles_single_call(served):
     out4 = eng.collect(s4)
     assert set(out4) == {0, 1, 2}       # A's first token + two decodes
 
-    # ---- unfused reference drive of the same prompts ----
+    # ---- sequential reference drive of the same prompts: task-local
+    # ragged chunks + decode-only fused dispatches ----
     ref = _engine(served)
+
+    def chunks(task, n=1):
+        task.caches = ref._fresh_task_caches()
+        for _ in range(n):
+            ref._extend_ragged([task], CHUNK)
+        return ref.finish_prefill(task)
+
     tc = ref.start_prefill(pc)
-    ref.prefill_step_batch([tc], CHUNK)
-    fc = ref.finish_prefill(tc)
+    fc = chunks(tc)
     ref.insert(fc, 2)
     assert fc.first_token == out1[2]
     assert tc.adm_weighted == pytest.approx(c.adm_weighted, rel=1e-5)
     # C's decode tokens across fused steps 2-4
-    dec1 = ref.collect(ref.dispatch_decode())
+    dec1 = ref.collect(ref.step_batch([]))
     assert dec1[2] == out2[2]
     tb = ref.start_prefill(pb)
-    ref.prefill_step_batch([tb], CHUNK)
-    ref.prefill_step_batch([tb], CHUNK)
-    fb = ref.finish_prefill(tb)
+    fb = chunks(tb, 2)
     assert fb.first_token == out3[0]
     assert tb.adm_weighted == pytest.approx(b.adm_weighted, rel=1e-5)
-    dec2 = ref.collect(ref.dispatch_decode())
+    dec2 = ref.collect(ref.step_batch([]))
     assert dec2[2] == out3[2]
     ref.insert(fb, 0)
-    dec3 = ref.collect(ref.dispatch_decode())
+    dec3 = ref.collect(ref.step_batch([]))
     assert dec3[0] == out4[0] and dec3[2] == out4[2]
     ta = ref.start_prefill(pa)
-    ref.prefill_step_batch([ta], CHUNK)
-    ref.prefill_step_batch([ta], CHUNK)
-    fa = ref.finish_prefill(ta)
+    fa = chunks(ta, 2)
     assert fa.first_token == out4[1]
     assert ta.adm_weighted == pytest.approx(a.adm_weighted, rel=1e-5)
 
@@ -166,38 +172,36 @@ def test_fused_freed_row_reopens_clean(served):
 
 
 # ==========================================================================
-# orchestrator level: fused driver streams byte-identical to the
-# unfused split-path driver, all backend families, async and sync
+# orchestrator level: the always-fused driver streams byte-identical
+# across dispatch depths, all backend families
 # ==========================================================================
 @pytest.mark.parametrize("name", BACKEND_NAMES)
-def test_stream_parity_fused_vs_unfused(served, name):
+def test_stream_parity_async_vs_sync(served, name):
     prompts = [list(range(10, 58)), list(range(5, 60)),
                list(range(20, 30)), list(range(7, 52))]
 
-    def serve(fused, depth=1):
+    def serve(depth):
         orch = Orchestrator(_engine(served, name), sched=SchedulerConfig(
-            chunk_tokens=CHUNK, fused_step=fused, dispatch_ahead=depth))
+            chunk_tokens=CHUNK, dispatch_ahead=depth))
         for p in prompts:
             orch.submit(p, max_new=5)
         orch.run()
         return ([orch.tokens(r) for r in range(len(prompts))],
                 orch.telemetry.summary())
 
-    toks_f, s_f = serve(True)
-    toks_u, s_u = serve(False)
-    toks_s, _ = serve(True, depth=0)
-    assert toks_f == toks_u
-    assert toks_s == toks_u
-    assert all(len(t) == 5 for t in toks_f)
-    cf, cu = s_f["counters"], s_u["counters"]
-    assert cf["fused_steps"] > 0 and cu["fused_steps"] == 0
-    # chunk/token accounting keeps its meaning across drivers
-    assert cf["prefill_chunks"] == cu["prefill_chunks"]
-    assert cf["prefill_tokens"] == cu["prefill_tokens"]
-    assert cf["fused_prefill_tokens"] == cf["prefill_tokens"]
-    # the batch-1 open path is gone from the fused tick
-    assert cf["open_time_s"] == 0.0 and cf["prefill_time_s"] == 0.0
-    assert s_f["mean_admission"] == pytest.approx(s_u["mean_admission"],
+    toks_a, s_a = serve(1)
+    toks_s, s_s = serve(0)
+    assert toks_a == toks_s
+    assert all(len(t) == 5 for t in toks_a)
+    ca, cs = s_a["counters"], s_s["counters"]
+    assert ca["fused_steps"] > 0 and cs["fused_steps"] > 0
+    # chunk/token accounting keeps its meaning across dispatch depths
+    assert ca["prefill_chunks"] == cs["prefill_chunks"]
+    assert ca["prefill_tokens"] == cs["prefill_tokens"]
+    # every prefill token rides the fused tick; the split stage is gone
+    assert ca["fused_prefill_tokens"] == ca["prefill_tokens"]
+    assert ca["prefill_time_s"] == 0.0
+    assert s_a["mean_admission"] == pytest.approx(s_s["mean_admission"],
                                                   rel=1e-5)
 
 
@@ -216,15 +220,17 @@ def test_fused_phase_accounting_and_trace(served):
     assert ph["phase_sum_s"] <= ph["tick_time_s"] + 1e-12
     # the fused call's wall is apportioned, never invented: the prefill
     # share is bounded by the fused total, and the old batch-1 open
-    # stage is gone entirely
+    # stage is gone entirely (open_time_s retired with it)
     assert ph["fused_time_s"] > 0.0
     assert 0.0 < ph["fused_prefill_time_s"] <= ph["fused_time_s"]
-    assert ph["prefill_time_s"] == 0.0 and ph["open_time_s"] == 0.0
+    assert ph["prefill_time_s"] == 0.0
+    assert "open_time_s" not in ph
     # dispatch_time_s carries the fused dispatch spans
     assert ph["dispatch_time_s"] > 0.0
     tick_names = {s.name for s in tracer.spans if s.lane == (LANE_TICK, 0)}
     assert "fused_step" in tick_names
-    assert "dispatch_decode" not in tick_names
+    # with selection off, no decode-only dispatch runs the sel variant
+    assert "selection" not in {s.name for s in tracer.spans}
     assert any(s.name == "fused_open" for s in tracer.spans)
     # request-lane lifecycle survives the fused path (chunk spans carry
     # fused=True, insert instants mark the prefill->decode flip)

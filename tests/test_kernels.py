@@ -7,7 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.gate_mlp import gate_mlp
 from repro.kernels.gated_flash import gated_flash
-from repro.kernels.paged_decode import paged_decode
+from repro.kernels.paged_decode import paged_decode, paged_decode_selected
 from repro.kernels.rglru_scan import rglru_scan_pallas
 from repro.kernels.vertical_slash import vertical_slash
 
@@ -77,6 +77,49 @@ def test_paged_decode_sweep(n, hd, page, ptotal, mp, dtype):
                              tbl, lens)
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(r),
                                atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("n,hd,page,ptotal,mp,kp", [
+    (6, 64, 16, 32, 8, 3), (2, 128, 16, 8, 4, 2), (4, 64, 32, 64, 16, 5),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_selected_sweep(n, hd, page, ptotal, mp, kp, dtype):
+    """Quest-selected paged decode vs oracle: random sorted K-subsets of
+    each stream's logical pages, ragged n_sel (trailing ids dropped)."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 7)
+    q = _rand(ks[0], (n, hd), dtype)
+    kpool = _rand(ks[1], (ptotal, page, hd), dtype)
+    vpool = _rand(ks[2], (ptotal, page, hd), dtype)
+    tbl = jax.random.randint(ks[3], (n, mp), 0, ptotal)
+    lens = jax.random.randint(ks[4], (n,), 1, mp * page)
+    perm = jax.random.uniform(ks[5], (n, mp)).argsort(axis=-1)[:, :kp]
+    sel = jnp.sort(perm, axis=-1).astype(jnp.int32)
+    nsel = jax.random.randint(ks[6], (n,), 1, kp + 1)
+    out = paged_decode_selected(q, kpool, vpool, tbl, lens, sel, nsel)
+    r = ref.paged_decode_selected_ref(
+        *(x.astype(jnp.float32) for x in (q, kpool, vpool)),
+        tbl, lens, sel, nsel)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(r),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_decode_selected_all_pages_identity():
+    """K covering every page with the ascending id list is the identity
+    permutation: the selected kernel reduces over the same lanes in the
+    same order as the dense-page kernel, so outputs are BITWISE equal —
+    the kernel-level form of the serving parity acceptance axis."""
+    n, hd, page, ptotal, mp = 4, 64, 16, 16, 6
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = _rand(ks[0], (n, hd), jnp.float32)
+    kpool = _rand(ks[1], (ptotal, page, hd), jnp.float32)
+    vpool = _rand(ks[2], (ptotal, page, hd), jnp.float32)
+    tbl = jax.random.randint(ks[3], (n, mp), 0, ptotal)
+    lens = jax.random.randint(ks[4], (n,), 1, mp * page)
+    sel = jnp.broadcast_to(jnp.arange(mp, dtype=jnp.int32)[None], (n, mp))
+    nsel = jnp.full((n,), mp, jnp.int32)
+    a = paged_decode(q, kpool, vpool, tbl, lens)
+    b = paged_decode_selected(q, kpool, vpool, tbl, lens, sel, nsel)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 @pytest.mark.parametrize("b,s,d,bt,bd", [

@@ -13,8 +13,8 @@ from typing import Dict
 
 import pytest
 
-from repro.serving.backend import (BackendCapabilities, InflightStep,
-                                   Prefix, PrefillTask)
+from repro.serving.backend import (BackendCapabilities, FusedStep,
+                                   PrefillTask)
 from repro.serving.obs import (CAT_ENGINE, CAT_REQUEST, LANE_REQ, LANE_TICK,
                                NULL_TRACER, MetricsRegistry, Tracer,
                                chrome_trace, chrome_trace_events,
@@ -39,7 +39,10 @@ class FakeClock:
 
 
 class FakeEngine:
-    """Host-only EngineBackend: prefill/decode are pure bookkeeping."""
+    """Host-only EngineBackend: the fused megabatch tick as pure
+    bookkeeping (one ``step_batch`` per tick advancing prompt chunks
+    teacher-forced and marking decode rows; ``collect`` delivers one
+    token per finishing/decoding row)."""
     eos = None
 
     def __init__(self, slots: int = 2):
@@ -47,14 +50,16 @@ class FakeEngine:
         self.live = [False] * slots
         self.stats = {"steps": 0, "evict_triggers": 0.0,
                       "decode_adm_sum": 0.0, "extend_time_s": 0.0,
-                      "extend_tokens": 0.0, "open_time_s": 0.0,
-                      "open_tokens": 0.0}
+                      "extend_tokens": 0.0, "fused_steps": 0.0,
+                      "fused_time_s": 0.0, "fused_prefill_time_s": 0.0,
+                      "fused_prefill_tokens": 0.0, "fused_slot_rows": 0.0,
+                      "fused_active_rows": 0.0, "selected_pages": 0.0,
+                      "selection_time_s": 0.0}
         self.tracer = NULL_TRACER
         self._n = 0
 
     def capabilities(self):
-        return BackendCapabilities(name="fake", gated=False, paged=False,
-                                   batched_prefill=True)
+        return BackendCapabilities(name="fake", gated=False, paged=False)
 
     def memory_snapshot(self) -> Dict[str, float]:
         return {"kv_tokens": float(sum(self.live) * 10), "kv_bytes": 64.0}
@@ -62,35 +67,47 @@ class FakeEngine:
     def start_prefill(self, prompt):
         return PrefillTask(prompt=list(prompt))
 
-    def prefill_step_batch(self, tasks, max_tokens=None):
+    def step_batch(self, tasks, chunk=None, decode=True):
+        decode_rows = tuple(s for s in range(self.slots)
+                            if decode and self.live[s])
+        takes, fins = [], []
         for t in tasks:
-            take = (len(t.prompt) - t.pos if max_tokens is None
-                    else min(len(t.prompt) - t.pos, max_tokens))
+            take = (len(t.prompt) - t.pos if chunk is None
+                    else min(len(t.prompt) - t.pos, chunk))
             t.pos += take
-            t.caches = "c"
-            self.stats["extend_tokens"] += take
-            self.stats["extend_time_s"] += 1e-5
-        return [t.done for t in tasks]
-
-    def finish_prefill(self, task, *, emit_first=True):
-        return Prefix(caches="c", prompt_len=len(task.prompt),
-                      mean_admission=0.5, first_token=7)
-
-    def insert(self, prefix, slot):
-        self.live[slot] = True
-
-    def dispatch_decode(self):
-        if not any(self.live):
+            t.adm_weighted += 0.5 * take
+            takes.append(take)
+            fins.append(t.done)
+            if t.done:          # row resident + live; first token at collect
+                self.live[t.slot] = True
+            self.stats["fused_prefill_tokens"] += take
+            self.stats["fused_prefill_time_s"] += 1e-5
+        if not tasks and not decode_rows:
             return None
-        return InflightStep(tokens=None, stats=None, before=None, after=None,
-                            live=tuple(self.live), gen=(0,) * self.slots)
+        self.stats["fused_steps"] += 1
+        self.stats["fused_time_s"] += 1e-4
+        self.stats["fused_slot_rows"] += float(self.slots)
+        self.stats["fused_active_rows"] += float(len(tasks)
+                                                 + len(decode_rows))
+        return FusedStep(tokens=None, stats=None, before=None, after=None,
+                         live=tuple(self.live), gen=(0,) * self.slots,
+                         tasks=tuple(tasks), takes=tuple(takes),
+                         fulls=tuple(tk == chunk for tk in takes),
+                         finishing=tuple(fins), decode_rows=decode_rows,
+                         had_prefill=bool(tasks))
 
     def collect(self, step):
         self.stats["steps"] += 1
         self.stats["decode_adm_sum"] += 0.5
         self._n += 1
-        return {s: 100 + self._n for s in range(self.slots)
-                if step.live[s] and self.live[s]}
+        out = {}
+        for t, fin in zip(step.tasks, step.finishing):
+            if fin and self.live[t.slot]:
+                out[t.slot] = 100 + self._n
+        for s in step.decode_rows:
+            if step.live[s] and self.live[s]:
+                out[s] = 100 + self._n
+        return out
 
     def free_slot(self, slot):
         self.live[slot] = False
@@ -284,10 +301,12 @@ def test_phase_times_sum_within_tick_wall():
     assert ph["phase_sum_s"] <= ph["tick_time_s"] + 1e-12
     assert ph["phase_sum_s"] == pytest.approx(
         sum(ph[k] for k in PHASE_TIME_KEYS))
-    # every disjoint phase that ran is represented
-    for k in ("prefill_time_s", "dispatch_time_s", "collect_time_s",
+    # every disjoint phase that ran is represented (prefill_time_s stays
+    # 0 — prompt chunks ride the fused dispatch, not a separate stage)
+    for k in ("dispatch_time_s", "collect_time_s",
               "evict_time_s", "memory_sample_time_s", "admit_time_s"):
         assert ph[k] > 0.0, k
+    assert ph["prefill_time_s"] == 0.0
 
 
 def test_request_lifecycle_spans_complete():
@@ -306,10 +325,10 @@ def test_request_lifecycle_spans_complete():
         queued = next(s for s in spans if s.name == "queued")
         decode = next(s for s in spans if s.name == "decode")
         assert queued.t1 <= decode.t0
-    # engine-lane phases landed too
+    # engine-lane phases landed too (the fused tick's span vocabulary)
     tick_names = {s.name for s in tr.spans if s.lane == (LANE_TICK, 0)}
-    assert {"memory_sample", "admit", "prefill_advance",
-            "dispatch_decode", "collect", "evict"} <= tick_names
+    assert {"memory_sample", "admit", "fused_step",
+            "collect", "evict"} <= tick_names
 
 
 def test_cancel_emits_terminal_instant():

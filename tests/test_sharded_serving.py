@@ -164,14 +164,15 @@ prompts = [list(range(7 + i, 39 + i)) for i in range(3)]
 
 engines = {}  # engines are reusable: jit caches amortize across drivers
 
-def serve(name, m, depth, batched=True):
-    key = (name, m is not None)
+def serve(name, m, depth, selection=None):
+    key = (name, m is not None, selection)
     if key not in engines:
         engines[key] = make_backend(name, params, cfg, slots=2, capacity=128,
-                                    mirror_paged=False, mesh=m)
+                                    mirror_paged=False, mesh=m,
+                                    selection=selection)
     eng = engines[key]
     orch = Orchestrator(eng, sched=SchedulerConfig(
-        chunk_tokens=16, dispatch_ahead=depth, batched_prefill=batched))
+        chunk_tokens=16, dispatch_ahead=depth))
     for p in prompts:
         orch.submit(p, max_new=4)
     orch.run()
@@ -182,9 +183,14 @@ def serve(name, m, depth, batched=True):
 out = {}
 for name in ("wgkv", "dense"):
     out[name] = {"mesh": serve(name, mesh, 0), "flat": serve(name, None, 0),
-                 "mesh_async": serve(name, mesh, 1),
-                 "mesh_seq_prefill": serve(name, mesh, 0, batched=False),
-                 "flat_seq_prefill": serve(name, None, 0, batched=False)}
+                 "mesh_async": serve(name, mesh, 1)}
+    if name == "wgkv":   # dense has no page metadata to select against
+        # capacity 128 = 8 pages: quest:8 selects every page, so the
+        # gathered decode path must stream byte-identical, sharded too
+        out[name]["mesh_sel_all"] = serve(name, mesh, 1,
+                                          selection="quest:8")
+        out[name]["flat_sel_all"] = serve(name, None, 1,
+                                          selection="quest:8")
 print("RESULT" + json.dumps(out))
 """
 
@@ -214,13 +220,13 @@ def test_sharded_parity_vs_unsharded():
         # the async dispatch/collect driver on the mesh streams the same
         # bytes: the on-device sampled-token feed survives SPMD placement
         assert out[name]["mesh_async"]["tokens"] == flat_run["tokens"], name
-        # batched ragged prefill (the default driver above) streams the
-        # same bytes as the per-request prefill driver — on the mesh AND
-        # unsharded (the acceptance axis of the batched-prefill PR)
-        assert out[name]["mesh_seq_prefill"]["tokens"] == \
-            mesh_run["tokens"], name
-        assert out[name]["flat_seq_prefill"]["tokens"] == \
-            flat_run["tokens"], name
+    # gathered top-K page selection at K = all resident pages streams
+    # byte-identical to the full decode path — on the mesh AND unsharded
+    # (ascending-sorted top-K at K = P is the identity permutation)
+    assert out["wgkv"]["mesh_sel_all"]["tokens"] == \
+        out["wgkv"]["mesh"]["tokens"]
+    assert out["wgkv"]["flat_sel_all"]["tokens"] == \
+        out["wgkv"]["flat"]["tokens"]
 
 
 # ==========================================================================
@@ -251,6 +257,13 @@ def test_bench_serving_smoke_mesh(tmp_path):
         # async driver metrics ride along (sync baseline + speedup ratio)
         assert m["sync_tokens_per_s"] is not None
         assert m["async_speedup_vs_sync"] > 0
+    # the selection A/B rides the mesh smoke too (paged backends only):
+    # all-pages parity ran, the timed K sweep carries needle accuracy
+    sel = rec["backends"]["wgkv"]["selection"]
+    assert sel["parity_k"] == 12
+    for v in sel["per_k"].values():
+        assert v["needle_accuracy"] is not None
+    assert "selection" not in rec["backends"]["dense"]
     assert "ab" in rec and "wgkv" in rec["ab"]
 
 
@@ -273,7 +286,7 @@ def test_sharded_memory_snapshot_and_free():
     snap = eng.memory_snapshot()
     assert snap["mesh_devices"] == float(N_DEVICES)
     assert 0 < snap["kv_bytes_per_shard"] <= snap["kv_bytes"]
-    out = eng.collect(eng.dispatch_decode())
+    out = eng.collect(eng.step_batch([]))
     assert set(out) == {0}
     eng.free_slot(0)
     assert eng.last_token[0] == 0
