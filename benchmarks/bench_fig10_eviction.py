@@ -41,8 +41,6 @@ def _run_policy(cfg, params, *, tau, hard_budget, n=16, seed=91):
         if t >= qpos:
             preds.append(np.asarray(jnp.argmax(logits, -1)))
     acc = float((np.stack(preds[:2], 1) == np.asarray(b["answer"])).mean())
-    from repro.core.dual_cache import DualCache
-
     node = caches["blocks"]["b0"]
     dc = node["self"] if isinstance(node, dict) else node
     mem = float(np.asarray(dc.gcnt, np.float32).mean())

@@ -7,9 +7,8 @@ import dataclasses
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from benchmarks.common import (SEQ, VOCAB, bench_cfg, _distill, _pretrain,
+from benchmarks.common import (SEQ, VOCAB, bench_cfg, _distill,
                                cache_size_at, trained_model)
 from repro.core.losses import distill_loss
 from repro.data.synthetic import needle_task

@@ -6,14 +6,10 @@ Expected: marked degradation without the local window ("transient
 utility" hypothesis)."""
 from __future__ import annotations
 
-import dataclasses
 import functools
 
-import jax
-
-from benchmarks.common import (SEQ, VOCAB, bench_cfg, _distill,
-                               cache_size_at, needle_accuracy, trained_model)
-from repro.data.synthetic import needle_task
+from benchmarks.common import (bench_cfg, _distill, cache_size_at,
+                               needle_accuracy, trained_model)
 
 
 @functools.lru_cache(maxsize=1)

@@ -7,7 +7,6 @@ different mean sparsity), unlike any static policy."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import SEQ, VOCAB, trained_model

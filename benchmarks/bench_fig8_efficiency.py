@@ -9,8 +9,6 @@ dual-cache decode against the dense baselines, plus cache-byte accounting
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 

@@ -17,7 +17,6 @@ import numpy as np
 from benchmarks.common import SEQ, VOCAB, trained_model
 from repro.data.synthetic import needle_task
 from repro.models import inference as I
-from repro.models import transformer as T
 
 
 def _decode_acc(cfg, params, opts, n=16, seed=881):

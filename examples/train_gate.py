@@ -9,11 +9,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_reduced_config
 from repro.configs.base import WGKVConfig
-from repro.data.synthetic import DistillStream, lm_loss, needle_task
+from repro.data.synthetic import DistillStream, lm_loss
 from repro.launch.train import run_training
 from repro.models import transformer as T
 from repro.training.optimizer import adamw_init, adamw_update, cosine_schedule

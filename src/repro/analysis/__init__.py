@@ -1,0 +1,43 @@
+"""repro.analysis — repo-specific static analysis + runtime contract sentinels.
+
+Static side (stdlib-only, runs without jax)::
+
+    python -m repro.analysis.lint src --baseline analysis/baseline.json
+
+Runtime side (needs jax; imported lazily so the hot-path modules can import
+:func:`hot_path` without pulling jax back in through here)::
+
+    from repro.analysis import CompileSentinel, SyncSentinel
+"""
+
+from __future__ import annotations
+
+from .contracts import hot_path  # stdlib-only, safe at import time
+
+__all__ = [
+    "hot_path",
+    "CompileSentinel",
+    "SyncSentinel",
+    "CompileBudgetExceeded",
+    "SyncViolation",
+    "Finding",
+    "lint_paths",
+]
+
+_LAZY = {
+    "CompileSentinel": "repro.analysis.sentinels",
+    "SyncSentinel": "repro.analysis.sentinels",
+    "CompileBudgetExceeded": "repro.analysis.sentinels",
+    "SyncViolation": "repro.analysis.sentinels",
+    "Finding": "repro.analysis.findings",
+    "lint_paths": "repro.analysis.lint",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,196 @@
+"""Annotation grammar shared by the static passes and the runtime markers.
+
+The serving stack's invariants are declared in source via ``# jaxlint:``
+comments and the :func:`hot_path` decorator.  This module is pure stdlib —
+it is imported by the hot-path modules themselves (for ``hot_path``) and by
+the lint CLI, neither of which may pull in jax at import time.
+
+Grammar (one directive per comment, attached to the physical line)::
+
+    # jaxlint: hot-path                      scope marker on a ``def`` line
+    # jaxlint: sharded-path                  scope marker on a ``def`` line
+    # jaxlint: masked-scan-body              scope marker on a ``def`` line
+    # jaxlint: allow-sync(reason)            suppress JL001 on this line
+    # jaxlint: allow-concat(reason)          suppress JL002 on this line
+    # jaxlint: allow-unmasked-write(reason)  suppress JL003 on this line
+    # jaxlint: allow-tracer-branch(reason)   suppress JL004 on this line
+    # jaxlint: allow-dead-import(reason)     suppress JL006 on this line
+    # jaxlint: shapes(name=N, ...)           declare a jit shape budget (JL005)
+
+``allow-*`` directives REQUIRE a non-empty reason; a reasonless suppression
+is itself reported (JL000).  Scope markers may sit on the ``def`` line or on
+the line directly above it.  Suppressions apply to the line carrying the
+flagged expression's first token, or the line directly above it.
+"""
+
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple, TypeVar
+
+# Directive kinds -----------------------------------------------------------
+
+SCOPE_MARKERS = frozenset({"hot-path", "sharded-path", "masked-scan-body"})
+SUPPRESSIONS = frozenset(
+    {
+        "allow-sync",
+        "allow-concat",
+        "allow-unmasked-write",
+        "allow-tracer-branch",
+        "allow-dead-import",
+    }
+)
+DECLARATIONS = frozenset({"shapes"})
+KNOWN_DIRECTIVES = SCOPE_MARKERS | SUPPRESSIONS | DECLARATIONS
+
+# Which suppression silences which pass.
+SUPPRESSION_FOR_CODE = {
+    "JL001": "allow-sync",
+    "JL002": "allow-concat",
+    "JL003": "allow-unmasked-write",
+    "JL004": "allow-tracer-branch",
+    "JL006": "allow-dead-import",
+}
+
+_DIRECTIVE_RE = re.compile(
+    r"#\s*jaxlint:\s*(?P<name>[a-z][a-z0-9-]*)\s*(?:\((?P<arg>[^)]*)\))?"
+)
+
+
+@dataclass(frozen=True)
+class Directive:
+    """One parsed ``# jaxlint:`` comment."""
+
+    name: str
+    arg: Optional[str]  # text inside parens, stripped; None if absent
+    line: int  # 1-based physical line carrying the comment
+
+    @property
+    def is_scope(self) -> bool:
+        return self.name in SCOPE_MARKERS
+
+    @property
+    def is_suppression(self) -> bool:
+        return self.name in SUPPRESSIONS
+
+
+@dataclass
+class AnnotationIndex:
+    """All directives of one source file, indexed for the passes."""
+
+    by_line: Dict[int, List[Directive]] = field(default_factory=dict)
+    errors: List[Directive] = field(default_factory=list)  # malformed (JL000)
+
+    def at(self, line: int) -> List[Directive]:
+        return self.by_line.get(line, [])
+
+    def suppressed(self, code: str, line: int) -> bool:
+        """True if a valid suppression for `code` sits on `line` or `line-1`."""
+        want = SUPPRESSION_FOR_CODE.get(code)
+        if want is None:
+            return False
+        for ln in (line, line - 1):
+            for d in self.at(ln):
+                if d.name == want and d.arg:
+                    return True
+        return False
+
+    def scope_marker(self, marker: str, def_line: int) -> bool:
+        """True if a scope marker sits on the ``def`` line or the line above."""
+        for ln in (def_line, def_line - 1):
+            for d in self.at(ln):
+                if d.name == marker:
+                    return True
+        return False
+
+    def shapes_decl(self, line: int) -> Optional[Directive]:
+        """A ``shapes(...)`` declaration on `line` or `line-1`, if any."""
+        for ln in (line, line - 1):
+            for d in self.at(ln):
+                if d.name == "shapes":
+                    return d
+        return None
+
+
+def parse_annotations(source: str) -> AnnotationIndex:
+    """Extract every ``# jaxlint:`` directive from `source`.
+
+    Malformed directives (unknown name, or an ``allow-*`` with a missing or
+    empty reason) land in ``index.errors`` for the driver to report as JL000;
+    they never suppress anything.
+    """
+    index = AnnotationIndex()
+    for lineno, text in _comments(source):
+        if "jaxlint" not in text:
+            continue
+        for m in _DIRECTIVE_RE.finditer(text):
+            arg = m.group("arg")
+            d = Directive(
+                name=m.group("name"),
+                arg=arg.strip() if arg is not None else None,
+                line=lineno,
+            )
+            bad = d.name not in KNOWN_DIRECTIVES or (
+                d.name in SUPPRESSIONS and not d.arg
+            )
+            if bad:
+                index.errors.append(d)
+            else:
+                index.by_line.setdefault(lineno, []).append(d)
+    return index
+
+
+def _comments(source: str) -> List[Tuple[int, str]]:
+    """(lineno, text) of every real comment token — directives inside string
+    literals (docstrings quoting the grammar) must not parse as annotations.
+    Falls back to whole lines if the file doesn't tokenize."""
+    try:
+        return [
+            (tok.start[0], tok.string)
+            for tok in tokenize.generate_tokens(io.StringIO(source).readline)
+            if tok.type == tokenize.COMMENT
+        ]
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return list(enumerate(source.splitlines(), start=1))
+
+
+def parse_shapes_decl(arg: Optional[str]) -> Optional[Dict[str, str]]:
+    """Parse ``shapes(fused_step=2, call=per-structure)`` into a dict.
+
+    Values are either decimal shape counts or symbolic tags (e.g.
+    ``per-structure`` for calls keyed on input structure, ``per-batch-width``
+    for the legacy per-width decode jits).  Returns None when malformed.
+    """
+    if not arg:
+        return None
+    out: Dict[str, str] = {}
+    for part in arg.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            return None
+        key, _, val = part.partition("=")
+        key, val = key.strip(), val.strip()
+        if not key or not re.fullmatch(r"\d+|[a-z][a-z0-9-]*", val):
+            return None
+        out[key] = val
+    return out or None
+
+
+# Runtime marker ------------------------------------------------------------
+
+_F = TypeVar("_F", bound=Callable)
+
+
+def hot_path(fn: _F) -> _F:
+    """Mark `fn` as serving-hot-path: JL001 forbids unannotated host syncs
+    inside it, and the runtime sentinels treat it as tick-critical.
+
+    Pure marker — zero call overhead, no wrapper frame.
+    """
+    fn.__jaxlint_hot_path__ = True  # type: ignore[attr-defined]
+    return fn

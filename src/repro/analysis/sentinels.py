@@ -1,0 +1,210 @@
+"""Runtime contract sentinels for the serving hot path.
+
+Two executable counterparts to the static passes:
+
+* :class:`CompileSentinel` — the PR 7/8 claim "exactly three compiled
+  shapes per engine" as an assertion: jit-cache entry counts per fused-step
+  kind must stay within ``Engine.COMPILE_SHAPE_BUDGETS``.
+* :class:`SyncSentinel` — the PR 4/8 dispatch discipline as an assertion:
+  while a fused step is in flight, ``jax.device_get`` may only run inside a
+  sanctioned engine method (``collect`` above all); a naked host sync
+  between dispatch and collect raises.
+
+Unlike the rest of ``repro.analysis`` these need jax at runtime — import
+them from test/serving code only.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterable, Optional
+
+import jax
+
+
+class CompileBudgetExceeded(AssertionError):
+    pass
+
+
+class SyncViolation(AssertionError):
+    pass
+
+
+class CompileSentinel:
+    """Assert an engine's jit-cache growth stays within its declared budget.
+
+    Usage::
+
+        with CompileSentinel(engine):
+            ... full serve replay ...
+        # raises CompileBudgetExceeded if any fused-step kind compiled more
+        # shapes than Engine.COMPILE_SHAPE_BUDGETS declares
+
+    Pass ``budgets`` to override the engine's declaration (e.g. tightening
+    to the shapes one specific replay may legally touch).  ``check()`` can
+    be called mid-run; ``__exit__`` always checks (except when unwinding an
+    exception, which it never masks).
+    """
+
+    def __init__(self, engine, budgets: Optional[Dict[str, int]] = None):
+        self.engine = engine
+        self.budgets = dict(
+            budgets
+            if budgets is not None
+            else getattr(engine, "COMPILE_SHAPE_BUDGETS", {})
+        )
+        if not self.budgets:
+            raise ValueError(
+                "no shape budgets: engine declares no COMPILE_SHAPE_BUDGETS "
+                "and none were passed"
+            )
+
+    def counts(self) -> Dict[str, int]:
+        return self.engine.compiled_shape_counts()
+
+    def check(self) -> Dict[str, int]:
+        counts = self.counts()
+        over = {
+            kind: (counts.get(kind, 0), budget)
+            for kind, budget in self.budgets.items()
+            if counts.get(kind, 0) > budget
+        }
+        if over:
+            detail = ", ".join(
+                f"{kind}: {got} compiled shapes > budget {budget}"
+                for kind, (got, budget) in sorted(over.items())
+            )
+            raise CompileBudgetExceeded(
+                f"jit cache exceeded declared shape budget ({detail}); "
+                "every extra shape is a recompile stall in the serving tick "
+                "— either the feed shapes regressed or the budget "
+                "declaration (Engine.COMPILE_SHAPE_BUDGETS) must be updated "
+                "with the jaxlint shapes(...) annotation"
+            )
+        return counts
+
+    def __enter__(self) -> "CompileSentinel":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.check()
+        return False
+
+
+class SyncSentinel:
+    """Assert no host sync escapes the two-phase dispatch/collect contract.
+
+    Patches ``jax.device_get`` and wraps the engine's tick methods: after a
+    ``step_batch`` dispatch returns an in-flight step, any ``device_get``
+    raises :class:`SyncViolation` until the step is collected — unless it
+    runs inside a sanctioned engine method (``collect`` is the designated
+    sync point; ``insert``/``free_slot``/``memory_snapshot`` are host-side
+    slot maintenance the dispatch-ahead window deliberately overlaps).
+    A sync *inside* ``step_batch`` itself is always a violation: dispatch
+    must never block on device results.
+    """
+
+    SANCTIONED: Iterable[str] = (
+        "collect",
+        "insert",
+        "free_slot",
+        "memory_snapshot",
+    )
+
+    def __init__(self, engine, sanctioned: Optional[Iterable[str]] = None):
+        self.engine = engine
+        self.sanctioned = tuple(
+            sanctioned if sanctioned is not None else self.SANCTIONED
+        )
+        self.outstanding = 0
+        self._depth = 0  # inside a sanctioned frame
+        self.syncs_in_collect = 0
+        self._orig_device_get = None
+        self._wrapped: Dict[str, object] = {}
+
+    # -- patching ----------------------------------------------------------
+
+    def _guard_device_get(self, orig):
+        @functools.wraps(orig)
+        def device_get(x):
+            if self._depth == 0 and self.outstanding > 0:
+                raise SyncViolation(
+                    "jax.device_get while a fused step is in flight and "
+                    "outside any sanctioned engine method — collect() is "
+                    "the tick's only sync point (PR 4/8 dispatch "
+                    "discipline); hoist this host pull into collect or out "
+                    "of the dispatch window"
+                )
+            if self._depth > 0:
+                self.syncs_in_collect += 1
+            return orig(x)
+
+        return device_get
+
+    def _wrap_step_batch(self, orig):
+        @functools.wraps(orig)
+        def step_batch(*args, **kwargs):
+            # dispatch itself must be sync-free: outstanding>0 covers the
+            # steady state, and even the first dispatch runs under the
+            # guard via a provisional in-flight count
+            self.outstanding += 1
+            try:
+                step = orig(*args, **kwargs)
+            finally:
+                self.outstanding -= 1
+            if step is not None:
+                self.outstanding += 1
+            return step
+
+        return step_batch
+
+    def _wrap_collect(self, orig):
+        @functools.wraps(orig)
+        def collect(*args, **kwargs):
+            self._depth += 1
+            try:
+                return orig(*args, **kwargs)
+            finally:
+                self._depth -= 1
+                self.outstanding = max(0, self.outstanding - 1)
+
+        return collect
+
+    def _wrap_sanctioned(self, orig):
+        @functools.wraps(orig)
+        def method(*args, **kwargs):
+            self._depth += 1
+            try:
+                return orig(*args, **kwargs)
+            finally:
+                self._depth -= 1
+
+        return method
+
+    def __enter__(self) -> "SyncSentinel":
+        self._orig_device_get = jax.device_get
+        jax.device_get = self._guard_device_get(self._orig_device_get)
+        eng = self.engine
+        self._wrapped["step_batch"] = eng.step_batch
+        eng.step_batch = self._wrap_step_batch(eng.step_batch)
+        for name in self.sanctioned:
+            fn = getattr(eng, name, None)
+            if fn is None:
+                continue
+            self._wrapped[name] = fn
+            wrap = self._wrap_collect if name == "collect" \
+                else self._wrap_sanctioned
+            setattr(eng, name, wrap(fn))
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        jax.device_get = self._orig_device_get
+        for name in self._wrapped:
+            # instance attributes shadowed the bound methods; drop them
+            try:
+                delattr(self.engine, name)
+            except AttributeError:
+                setattr(self.engine, name, self._wrapped[name])
+        self._wrapped.clear()
+        return False

@@ -22,8 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.admission import select_global
 from repro.core.selection import (
-    META_BIG, PAGE_SIZE, build_page_meta, init_page_meta,
-    update_page_meta_on_write,
+    build_page_meta, init_page_meta, update_page_meta_on_write,
 )
 
 

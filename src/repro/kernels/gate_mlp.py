@@ -9,7 +9,6 @@ Grid: (H, S / Bs).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

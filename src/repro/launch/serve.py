@@ -22,10 +22,13 @@ Quest / SnapKV composition).
 from __future__ import annotations
 
 import argparse
+import sys
+import warnings
 
 import jax
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced_config
+from repro.core import admission as A
 from repro.models import inference as I
 from repro.models import transformer as T
 from repro.serving.backend import BACKEND_NAMES, make_backend
@@ -113,6 +116,27 @@ def main() -> None:
         raise SystemExit("enc-dec serving requires audio frontends; see "
                          "examples/ for whisper decode")
     params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
+    if args.backend == "wgkv" and cfg.wgkv.enabled:
+        # PR 8 knife-edge tau guard, now at startup: probe the gate-score
+        # cluster with one short forward and surface check_tau_margin's
+        # RuntimeWarning as a one-line stderr notice — a tau inside the
+        # cluster flips admissions between numerically-equivalent prefill
+        # paths, which shows up later as baffling parity failures.
+        ptoks = jax.random.randint(jax.random.PRNGKey(args.seed + 99),
+                                   (1, min(args.prompt_len, 32)), 0,
+                                   cfg.vocab_size - 8)
+        g = T.forward(params, cfg, ptoks, mode="gated",
+                      with_logits=False).gates
+        if g is not None:
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always", RuntimeWarning)
+                margin = A.check_tau_margin(g, cfg.wgkv.tau)
+            if any(issubclass(w.category, RuntimeWarning) for w in caught):
+                print(f"WARNING: knife-edge admission tau={cfg.wgkv.tau}: "
+                      f"min |g - tau| = {margin:.2e} over a "
+                      f"{ptoks.shape[1]}-token probe; admission may flip "
+                      "between numerically-equivalent prefill paths",
+                      file=sys.stderr)
     opts = I.DecodeOptions(quest_pages=args.quest_pages,
                            evict_hard_budget=args.evict_budget)
     mesh = build_mesh(args.mesh)

@@ -5,7 +5,7 @@ allocation — plus direct cache-tree constructors for decode dry-runs.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

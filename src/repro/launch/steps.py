@@ -10,7 +10,6 @@ import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig

@@ -15,7 +15,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced_config
 from repro.data.synthetic import DistillStream

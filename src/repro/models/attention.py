@@ -16,7 +16,6 @@ against these semantics.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -29,9 +28,7 @@ from repro.core.admission import GlobalSelection, select_global
 from repro.core.dual_cache import (
     DualCache,
     cache_kv_for_attention,
-    init_dual_cache,
     lazy_promote_and_write,
-    prefill_populate,
 )
 from repro.core.gate import gate_scores, init_gate
 from repro.models import layers as L

@@ -248,7 +248,7 @@ def _quest_mask(cfg: ModelConfig, cache: DualCache, q: jax.Array,
     gmask = SEL.token_mask_from_pages(pmask) & gvalid
     b, h = gvalid.shape[:2]
     rest = jnp.ones((b, h, cache.w_local), bool)  # local ring always visible
-    return jnp.concatenate([gmask, rest], axis=-1)
+    return jnp.concatenate([gmask, rest], axis=-1)  # jaxlint: allow-concat(joins along the kv-position axis - batch axis untouched)
 
 
 def _attn_block_decode(p, cfg: ModelConfig, bt: str, x_t, cache, *,
@@ -334,7 +334,7 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
         dmax = cfg.d_model
         inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(dmax // 2) / max(dmax // 2 - 1, 1))
         ang = t[:, None].astype(jnp.float32) * inv[None]
-        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dt)
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dt)  # jaxlint: allow-concat(feature-axis sinusoid halves - batch axis untouched)
 
     new_caches: CacheTree = {"t": t + 1}
     trig_sum = jnp.zeros((b,), jnp.float32)  # per-row eviction triggers
@@ -386,6 +386,7 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
                 asum, an = asum + adm, an + 1.0
             if selp is not None:
                 ssum = ssum + selp
+        # jaxlint: allow-concat(stacks per-repeat obs on a NEW leading axis - rows replicate)
         ys = (new_bc, jax.tree.map(lambda *v: jnp.stack(v), *new_obs)) if new_obs \
             else (new_bc,)
         return (xc, trig, asum, an, ssum), ys
@@ -483,7 +484,7 @@ def prefill_extend_ragged(params: Params, cfg: ModelConfig,
                               moe_groups=moe_groups, opts=opts,
                               scan_unroll=scan_unroll)[0], caches)
 
-    def body(carry, xs):
+    def body(carry, xs):  # jaxlint: masked-scan-body
         old, last_logits = carry
         tok, active = xs                                      # [B], [B] bool
 

@@ -1,7 +1,7 @@
 """Shared model building blocks (pure-JAX, functional params-as-pytrees)."""
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

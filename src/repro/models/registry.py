@@ -2,7 +2,7 @@
 and modality-frontend stubs (VLM patch embeddings, whisper frames)."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

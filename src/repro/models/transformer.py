@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.dual_cache import DualCache, init_dual_cache, prefill_populate
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as MoE

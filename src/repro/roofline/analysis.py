@@ -25,7 +25,7 @@ import json
 import os
 from typing import Any, Dict, Optional
 
-from repro.configs import get_config, get_shape, shape_applicable
+from repro.configs import get_config, get_shape
 from repro.configs.base import InputShape, ModelConfig
 
 PEAK_FLOPS = 197e12      # bf16 per chip (v5e)

@@ -58,7 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +66,7 @@ import numpy as np
 
 from jax.sharding import Mesh
 
+from repro.analysis.contracts import hot_path
 from repro.configs.base import ModelConfig
 from repro.core.dual_cache import DualCache
 from repro.launch.specs import (alloc_batched_caches, build_decode_caches,
@@ -185,6 +186,34 @@ class Engine(ShardedDecodeMixin):
             description="write-gated dual cache (learned admission)",
             sharded=self.mesh is not None, selection=self.selection)
 
+    # the fused tick's declared compiled-shape budget — PR 7/8's "exactly
+    # three compiled shapes" as data: the base fused step compiles
+    # (slots, chunk) for prefill-carrying ticks and (slots, 1) for
+    # decode-only ticks; the selection variant compiles (slots, 1) only.
+    # analysis.CompileSentinel asserts the jit caches stay within this
+    # over a replay; the legacy synchronous extend path ("extend_batch")
+    # is per-batch-width by design and carries no budget.
+    COMPILE_SHAPE_BUDGETS: Dict[str, int] = {
+        "fused_step": 2,
+        "fused_step_sel": 1,
+    }
+
+    def compiled_shape_counts(self) -> Dict[str, int]:
+        """Jit-cache entry count per step kind: ``_cache_size()`` of the
+        plain jits when unmeshed, ``_fn_cache`` entries per kind under a
+        mesh (each memoized entry is one compiled structure)."""
+        out: Dict[str, int] = {}
+        for kind, fn in (("extend_batch", self._extend_batch),
+                         ("fused_step", self._fused),
+                         ("fused_step_sel", self._fused_sel)):
+            if fn is None:
+                continue
+            size = getattr(fn, "_cache_size", None)
+            out[kind] = (int(size()) if size is not None else
+                         sum(1 for k in self._fn_cache if k and k[0] == kind))
+        return out
+
+    @hot_path
     def memory_snapshot(self) -> Dict[str, float]:
         """Point-in-time memory telemetry: resident logical KV tokens/bytes
         over live slots, plus physical pool occupancy when mirroring and
@@ -240,6 +269,7 @@ class Engine(ShardedDecodeMixin):
             caches["obs"] = I._init_obs_tree(self.cfg, 1, self.opts)
         return caches
 
+    @hot_path
     def _extend_ragged(self, tasks: List[PrefillTask],
                        max_tokens: Optional[int]) -> None:
         """ONE batched ragged extend for every mid-prefill task. ``S`` is
@@ -270,8 +300,8 @@ class Engine(ShardedDecodeMixin):
                 (jnp.asarray(toks), jnp.asarray(takes, jnp.int32)), batched)
             outs = (batched,) if b == 1 \
                 else self.batched_prefill_unstack(batched, b)
-            trig, adm = jax.device_get((st["evict_trigger_rows"],
-                                        st["adm_sum_rows"]))
+            trig, adm = jax.device_get(  # jaxlint: allow-sync(synchronous extend path - the sync IS the extend_time_s measure)
+                (st["evict_trigger_rows"], st["adm_sum_rows"]))
         # the device_get above blocked on the extend, so this wall delta
         # is a true device+host measure of the coalesced advance — the
         # batched-vs-per-request axis bench_serving's speedup rides on
@@ -355,6 +385,7 @@ class Engine(ShardedDecodeMixin):
     # ------------------------------------------------------------------
     # fused megabatch tick: ONE jitted ragged call per dispatched step
     # ------------------------------------------------------------------
+    @hot_path
     def step_batch(self, tasks: List[PrefillTask],
                    max_tokens: Optional[int] = None, *,
                    decode: bool = True) -> Optional[FusedStep]:
@@ -494,6 +525,7 @@ class Engine(ShardedDecodeMixin):
         capacity overflow guard; the dual cache never overflows (ring
         wraps, global is budget-bounded)."""
 
+    @hot_path
     def _collect_fused(self, step: FusedStep) -> Dict[int, int]:
         """Collect one fused step: ONE host sync pulls sampled tokens and
         per-row stats; fold admission/eviction accounting, mirror
@@ -504,7 +536,7 @@ class Engine(ShardedDecodeMixin):
         re-opened) while the step was in flight."""
         assert not step.collected, "in-flight step collected twice"
         step.collected = True
-        nxt, trig, adm, selp = jax.device_get(
+        nxt, trig, adm, selp = jax.device_get(  # jaxlint: allow-sync(collect is THE designated sync point of the dispatch/collect contract)
             (step.tokens, step.stats["evict_trigger_rows"],
              step.stats["adm_sum_rows"],
              step.stats["selected_pages_rows"]))
@@ -559,6 +591,7 @@ class Engine(ShardedDecodeMixin):
     # ------------------------------------------------------------------
     # collect: the host sync point of the two-phase dispatch contract
     # ------------------------------------------------------------------
+    @hot_path
     def collect(self, step: FusedStep) -> Dict[int, int]:
         """Synchronize one in-flight fused step: pull its sampled tokens
         to host, fold eviction/admission/selection stats, and apply the

@@ -53,7 +53,7 @@ import dataclasses
 import time
 from typing import Callable, Deque, Dict, List, Optional
 
-from repro.serving.backend import EngineBackend, FusedStep, PrefillTask
+from repro.serving.backend import EngineBackend, FusedStep
 from repro.serving.obs.trace import (CAT_ENGINE, CAT_REQUEST, LANE_REQ,
                                      LANE_TICK, NULL_TRACER, Tracer)
 from repro.serving.orchestrator.queue import (InvalidRequest, QueueFull,

@@ -145,7 +145,7 @@ class ShardedDecodeMixin:
     # ------------------------------------------------------------------
     # jitted model steps
     # ------------------------------------------------------------------
-    def _make_extend_batch(self) -> Callable:
+    def _make_extend_batch(self) -> Callable:  # jaxlint: shapes(extend_batch=per-batch-width)
         """(params, (tokens [B, S], lengths [B]), caches) ->
         (last_logits [B, V], caches, per-row stats): the batched ragged
         prefill extend. Under a mesh the prefill rows shard over "data"
@@ -161,6 +161,7 @@ class ShardedDecodeMixin:
         return jax.jit(fn) if self.mesh is None \
             else self._mesh_jit(fn, kind="extend_batch")
 
+    # jaxlint: shapes(fused_step=2, fused_step_sel=1)
     def _make_fused_step(self, opts=None, *,
                          kind: str = "fused_step") -> Callable:
         """(params, feed, caches) -> (last_logits, caches, stats): the
@@ -188,7 +189,7 @@ class ShardedDecodeMixin:
         temperature = self.temperature
         opts = self.opts if opts is None else opts
 
-        def fn(params, feed, caches):
+        def fn(params, feed, caches):  # jaxlint: masked-scan-body
             tokens, lengths, tok_dev, use_dev, key = feed
             tokens = tokens.at[:, 0].set(
                 jnp.where(use_dev, tok_dev, tokens[:, 0]))
@@ -221,7 +222,7 @@ class ShardedDecodeMixin:
 
         return call
 
-    def _build_mesh_jit(self, fn, tokens, caches):
+    def _build_mesh_jit(self, fn, tokens, caches):  # jaxlint: shapes(mesh-jit=per-structure)
         mesh, cfg = self.mesh, self.cfg
         csh = self.cache_shardings_for(caches)
         # feed leaves with a batch-leading axis (tokens/lengths/device
@@ -250,7 +251,7 @@ class ShardedDecodeMixin:
     # ------------------------------------------------------------------
     # batched ragged prefill: stack / unstack around the one jitted call
     # ------------------------------------------------------------------
-    def batched_prefill_stack(self, trees):
+    def batched_prefill_stack(self, trees):  # jaxlint: shapes(stack=per-structure)
         """Stack B batch-1 prefill cache trees into one batch-B tree in a
         single jitted call (memoized per structure; under a mesh the
         result is pinned to the canonical batched shardings — prefill
@@ -288,7 +289,7 @@ class ShardedDecodeMixin:
             trees = jax.device_put(trees, ish)
         return jfn(trees)
 
-    def batched_prefill_unstack(self, batched, n: int):
+    def batched_prefill_unstack(self, batched, n: int):  # jaxlint: shapes(unstack=per-structure)
         """Slice a batch-``n`` prefill cache tree back into ``n`` batch-1
         trees in a single jitted call (inverse of
         :meth:`batched_prefill_stack`; bitwise row-preserving)."""
@@ -312,7 +313,7 @@ class ShardedDecodeMixin:
     # ------------------------------------------------------------------
     # sharded slot splice (insert)
     # ------------------------------------------------------------------
-    def sharded_splice(self, batch_tree, one_tree, slot: int):
+    def sharded_splice(self, batch_tree, one_tree, slot: int):  # jaxlint: shapes(splice=per-structure)
         """``splice_caches`` with the batch-1 prefix device-put onto the
         mesh and the result pinned to the batched tree's canonical
         shardings (plain splice when unmeshed)."""

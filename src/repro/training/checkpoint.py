@@ -3,9 +3,8 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

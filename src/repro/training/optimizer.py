@@ -2,7 +2,7 @@
 AdamW, wd 0.01, peak lr 1e-3, 10% warmup, cosine decay)."""
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,6 +17,7 @@ import numpy as np
 import pytest
 
 from conftest import make_cfg
+from repro.analysis import CompileSentinel, SyncSentinel, SyncViolation
 from repro.launch.specs import extract_slot_caches
 from repro.models import transformer as T
 from repro.serving.backend import FusedStep, make_backend
@@ -242,16 +243,58 @@ def test_fused_phase_accounting_and_trace(served):
 
 def test_fused_step_is_single_device_call_kind(served):
     """Exactly two compiled fused shapes per engine — (slots, chunk) and
-    (slots, 1) — however rows mix roles across a whole serve."""
+    (slots, 1) — however rows mix roles across a whole serve; the whole
+    replay runs under both runtime sentinels, so the PR 7 shape-count
+    claim AND the PR 4/8 sync discipline (no host pull between dispatch
+    and collect outside sanctioned engine methods) are executable."""
     eng = _engine(served)
     orch = Orchestrator(eng, sched=SchedulerConfig(
         chunk_tokens=CHUNK, dispatch_ahead=1))
-    for n in (48, 55, 10, 33):
-        orch.submit(list(range(2, 2 + n)), max_new=4)
-    orch.run()
+    with CompileSentinel(eng) as cs, SyncSentinel(eng) as ss:
+        for n in (48, 55, 10, 33):
+            orch.submit(list(range(2, 2 + n)), max_new=4)
+        orch.run()
+        counts = cs.check()             # raises if over the declared budget
+    assert counts["fused_step"] == 2    # (slots, chunk) + (slots, 1)
+    assert counts.get("fused_step_sel", 0) == 0   # selection off
+    assert counts["extend_batch"] == 0  # legacy sync path never compiled
+    assert ss.syncs_in_collect > 0      # collect() did the pulling
     fused = eng._fused
     sizes = getattr(fused, "_cache_size", None)
     if sizes is not None:               # plain jax.jit exposes the count
         assert fused._cache_size() <= 2
     assert isinstance(orch.telemetry.counters["fused_steps"], float)
     assert orch.telemetry.counters["fused_steps"] > 0
+
+
+def test_sync_sentinel_trips_on_naked_sync(served):
+    """The sentinel is not a no-op: a host pull between dispatch and
+    collect raises SyncViolation, and a sync inside step_batch itself
+    (dispatch must never block) raises too."""
+    eng = _engine(served)
+    t = eng.start_prefill(list(range(2, 30)))
+    t.slot = 0
+    with pytest.raises(SyncViolation):
+        with SyncSentinel(eng):
+            step = eng.step_batch([t], CHUNK)
+            jax.device_get(step.tokens)          # naked pre-collect pull
+    # device_get must be restored even after the raise
+    assert jax.device_get.__module__ != "repro.analysis.sentinels"
+    eng.collect(step)                            # settle for hygiene
+
+
+def test_compile_sentinel_over_selection_replay(served):
+    """Full fused serve with decode-time selection on: the third declared
+    shape ((slots, 1) selection variant) lands and the budget holds."""
+    cfg, params = served
+    eng = make_backend("wgkv", params, cfg, slots=4, capacity=128,
+                       mirror_paged=False, selection="quest:2")
+    orch = Orchestrator(eng, sched=SchedulerConfig(
+        chunk_tokens=CHUNK, dispatch_ahead=1))
+    with CompileSentinel(eng) as cs:
+        for n in (48, 10):
+            orch.submit(list(range(2, 2 + n)), max_new=6)
+        orch.run()
+        counts = cs.check()
+    assert counts["fused_step_sel"] == 1
+    assert counts["fused_step"] <= 2

@@ -149,6 +149,7 @@ jax.config.update("jax_enable_x64", False)
 from repro.configs import get_reduced_config
 from repro.configs.base import WGKVConfig
 from repro.models import transformer as T
+from repro.analysis import CompileSentinel, SyncSentinel
 from repro.serving.backend import make_backend
 from repro.serving.orchestrator import Orchestrator, SchedulerConfig
 from repro.serving.sharded import build_mesh
@@ -175,10 +176,16 @@ def serve(name, m, depth, selection=None):
         chunk_tokens=16, dispatch_ahead=depth))
     for p in prompts:
         orch.submit(p, max_new=4)
-    orch.run()
+    # every parity drive runs under both contract sentinels: the shape
+    # budget and the no-sync-between-dispatch-and-collect discipline must
+    # hold on the mesh exactly as they do unsharded
+    with CompileSentinel(eng) as cs, SyncSentinel(eng) as ss:
+        orch.run()
+        counts = cs.check()
     return {"tokens": [orch.tokens(r) for r in range(len(prompts))],
             "sharded": eng.capabilities().sharded,
-            "devices": eng.memory_snapshot().get("mesh_devices")}
+            "devices": eng.memory_snapshot().get("mesh_devices"),
+            "compiled": counts, "collect_syncs": ss.syncs_in_collect}
 
 out = {}
 for name in ("wgkv", "dense"):
@@ -217,6 +224,11 @@ def test_sharded_parity_vs_unsharded():
         assert flat_run["devices"] is None
         assert mesh_run["tokens"] == flat_run["tokens"], name
         assert all(len(t) == 4 for t in mesh_run["tokens"])
+        # sentinel evidence rides back: the fused shape budget held on the
+        # mesh (CompileSentinel.check() raised otherwise -> nonzero exit)
+        # and collect() accounted at least one sanctioned host pull
+        assert mesh_run["compiled"]["fused_step"] <= 2, name
+        assert mesh_run["collect_syncs"] > 0, name
         # the async dispatch/collect driver on the mesh streams the same
         # bytes: the on-device sampled-token feed survives SPMD placement
         assert out[name]["mesh_async"]["tokens"] == flat_run["tokens"], name
