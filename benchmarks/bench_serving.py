@@ -36,6 +36,13 @@ together, with in-jit sampling):
     the local window, the accuracy axis that catches a selection policy
     gathering the wrong pages.
 
+  * the **multi-turn prefix-cache A/B**: conversations that resend a
+    growing shared context each turn replay cold and then through a
+    content-addressed prefix store (serving/prefix_cache.py) — cached
+    streams are asserted byte-identical to cold prefill, and the record
+    carries ``prefix.hit_rate`` plus TTFT-on-hit vs the in-run miss and
+    cold-matched p50s (the splice-instead-of-re-prefill win).
+
 Greedy token streams from all drivers are asserted byte-identical
 before any timing is trusted. Warmup replays run first per engine and
 their wall time is recorded as ``compile_time_s``, so the steady-state
@@ -102,6 +109,13 @@ CAPACITY = 192
 DISPATCH_AHEAD = 1
 SMOKE = dict(n_requests=4, prompt_len=48, max_new=4)
 
+# multi-turn chat driver (prefix-cache A/B): every turn resends the whole
+# growing conversation, so turns 2..T share an ever-longer chunk-aligned
+# prefix with their predecessor — the workload the content-addressed
+# prefix store exists for
+MULTI_TURN = dict(convs=4, turns=3, user_tokens=16)
+SMOKE_MULTI_TURN = dict(convs=2, turns=2, user_tokens=8)
+
 # decode-time page-selection A/B: timed K sweep (smoke trims the sweep;
 # the K = all-pages parity replay always runs on paged backends)
 SELECTION_KS = (2, 4, 8)
@@ -117,8 +131,10 @@ JSON_PATH = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
 # and the fused phase counters; v4 retired the unfused/unbatched drivers
 # (the split prefill/decode paths are gone from the scheduler) and added
 # the decode-time page-selection A/B ("selection", selection_speedup,
-# needle_accuracy) and fused_padding_frac
-BENCH_SCHEMA_VERSION = 4
+# needle_accuracy) and fused_padding_frac; v5 added the per-backend
+# multi-turn prefix-cache A/B ("prefix": hit_rate, ttft_on_hit_p50_s vs
+# the miss/cold-matched p50s, tokens_reused) and the prefix_* counters
+BENCH_SCHEMA_VERSION = 5
 
 # trace fields that must match before an SLO comparison against history
 # is meaningful (different traffic -> different tails, not a regression)
@@ -198,6 +214,88 @@ def replay(eng, trace: List[Dict], *, chunk: int = CHUNK,
             raise RuntimeError("trace replay did not drain")
     sess.close()
     return sess, [h.tokens() for h in handles]
+
+
+def multi_turn_replay(eng, *, convs: int, turns: int, user_tokens: int,
+                      plen: int, mnew: int, vocab: int, seed: int = 5,
+                      prefix_cache=None):
+    """Multi-turn chat driver: ``convs`` conversations served for
+    ``turns`` rounds; each round's prompt is the previous prompt plus the
+    model's output plus fresh user tokens, so rounds 2..T resend a
+    growing shared context. One ServeSession per round (the engine and
+    the prefix store persist across rounds — exactly how a frontend
+    would hold them). Returns per-(conv, turn) token streams and the
+    completed request records per turn, rid-sorted so cold and cached
+    replays align request-for-request."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, vocab - 8, size=plen).tolist()
+               for _ in range(convs)]
+    streams = [[] for _ in range(convs)]
+    turn_recs = []
+    for _ in range(turns):
+        sess = ServeSession(eng, sched=SchedulerConfig(
+            chunk_tokens=CHUNK, dispatch_ahead=DISPATCH_AHEAD),
+            prefix_cache=prefix_cache)
+        hs = [sess.submit(p, max_new=mnew) for p in prompts]
+        sess.run()
+        sess.close()
+        turn_recs.append(sorted(sess.telemetry.records,
+                                key=lambda r: r.rid))
+        for c, h in enumerate(hs):
+            out = h.tokens()
+            streams[c].append(out)
+            prompts[c] = prompts[c] + out + rng.integers(
+                0, vocab - 8, size=user_tokens).tolist()
+    return streams, turn_recs
+
+
+def _prefix_ab(eng, *, convs: int, turns: int, user_tokens: int,
+               plen: int, mnew: int, vocab: int) -> Dict:
+    """Prefix-cache A/B on one warm engine: the multi-turn trace replayed
+    cold (no store), then with the store — greedy streams must be
+    byte-identical (a hit splices the SAME post-admission state the cold
+    run recomputes), and TTFT-on-hit is compared against both the
+    in-run misses and the cold replay's matched requests."""
+    from repro.serving.prefix_cache import PrefixCache
+    kw = dict(convs=convs, turns=turns, user_tokens=user_tokens,
+              plen=plen, mnew=mnew, vocab=vocab)
+    cold_streams, cold_recs = multi_turn_replay(eng, **kw)
+    pc = PrefixCache(quantum=CHUNK, free_fn=eng.release_prefix)
+    warm_streams, warm_recs = multi_turn_replay(eng, prefix_cache=pc, **kw)
+    if warm_streams != cold_streams:
+        raise AssertionError(
+            "prefix-cache replay diverged from cold prefill on the same "
+            "multi-turn trace")
+    flat_warm = [r for recs in warm_recs for r in recs]
+    flat_cold = [r for recs in cold_recs for r in recs]
+    hit_ttfts = [r.ttft for r in flat_warm
+                 if r.prefix_hit and r.ttft is not None]
+    miss_ttfts = [r.ttft for r in flat_warm
+                  if not r.prefix_hit and r.ttft is not None]
+    # cold TTFTs of the SAME (conv, turn) requests that hit when cached:
+    # identical prompts, identical scheduler — the isolated splice win
+    cold_matched = [c.ttft for w, c in zip(flat_warm, flat_cold)
+                    if w.prefix_hit and c.ttft is not None]
+    out = {
+        "convs": convs, "turns": turns, "user_tokens": user_tokens,
+        "hit_rate": pc.hits / max(pc.hits + pc.misses, 1),
+        "hits": pc.hits, "misses": pc.misses,
+        "inserts": pc.inserts, "evictions": pc.evictions,
+        "bytes": pc.bytes_used,
+        "tokens_reused": float(sum(r.prefix_tokens for r in flat_warm)),
+        "ttft_on_hit_p50_s": (float(np.percentile(hit_ttfts, 50))
+                              if hit_ttfts else None),
+        "ttft_on_miss_p50_s": (float(np.percentile(miss_ttfts, 50))
+                               if miss_ttfts else None),
+        "ttft_cold_matched_p50_s": (float(np.percentile(cold_matched, 50))
+                                    if cold_matched else None),
+    }
+    if hit_ttfts and cold_matched:
+        out["ttft_hit_speedup_vs_cold"] = (
+            float(np.percentile(cold_matched, 50))
+            / float(np.percentile(hit_ttfts, 50)))
+    pc.clear()
+    return out
 
 
 def needle_serving_accuracy(eng, vocab: int, *, n: int = NEEDLE_N,
@@ -396,6 +494,7 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
                          else (N_REQUESTS, PROMPT_LEN, MAX_NEW))
     sel_ks = SMOKE_SELECTION_KS if smoke else SELECTION_KS
     needle_n = SMOKE_NEEDLE_N if smoke else NEEDLE_N
+    mt_kw = SMOKE_MULTI_TURN if smoke else MULTI_TURN
     # the distilled bench substrate (pretrained teacher + trained write
     # gates): with random-init gates every token passes tau and the memory
     # A/B axis degenerates to 1.0
@@ -513,6 +612,12 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
             s2 = replay(eng, trace)[0].telemetry.summary()
             rec["pool_utilization"] = s2["pool_util_mean"]
             rec["pool_pages_peak"] = s2["pool_pages_peak"]
+            eng.mirror = False
+        # multi-turn prefix-cache A/B on the warm engine: hit-rate and
+        # the TTFT win of splicing a stored shared-context prefix vs
+        # re-prefilling it (streams asserted byte-identical inside)
+        rec["prefix"] = _prefix_ab(eng, plen=plen, mnew=mnew,
+                                   vocab=cfg.vocab_size, **mt_kw)
         record["backends"][name] = rec
         rows += [
             (f"serving/{name}/trace", (s["wall_s"] or 0.0) * 1e6,
@@ -534,6 +639,15 @@ def run(backends: Optional[Sequence[str]] = None, smoke: bool = False,
              .format(pad=rec["fused_padding_frac"] or 0.0,
                      **rec["phases"])),
         ]
+        pfx = rec["prefix"]
+        rows.append((
+            f"serving/{name}/prefix",
+            (pfx["ttft_on_hit_p50_s"] or 0.0) * 1e6,
+            f"hit_rate={pfx['hit_rate']:.3f} "
+            f"tokens_reused={pfx['tokens_reused']:.0f} "
+            f"ttft_hit_p50={(pfx['ttft_on_hit_p50_s'] or 0.0) * 1e3:.1f}ms "
+            f"miss_p50={(pfx['ttft_on_miss_p50_s'] or 0.0) * 1e3:.1f}ms "
+            f"cold_p50={(pfx['ttft_cold_matched_p50_s'] or 0.0) * 1e3:.1f}ms"))
         if paged and "selection" in rec:
             sel = rec["selection"]
             per_k = " ".join(

@@ -99,8 +99,9 @@ class SyncSentinel:
     ``step_batch`` dispatch returns an in-flight step, any ``device_get``
     raises :class:`SyncViolation` until the step is collected — unless it
     runs inside a sanctioned engine method (``collect`` is the designated
-    sync point; ``insert``/``free_slot``/``memory_snapshot`` are host-side
-    slot maintenance the dispatch-ahead window deliberately overlaps).
+    sync point; ``insert``/``free_slot``/``memory_snapshot``/
+    ``capture_prefix`` are host-side slot maintenance the dispatch-ahead
+    window deliberately overlaps).
     A sync *inside* ``step_batch`` itself is always a violation: dispatch
     must never block on device results.
     """
@@ -110,6 +111,7 @@ class SyncSentinel:
         "insert",
         "free_slot",
         "memory_snapshot",
+        "capture_prefix",
     )
 
     def __init__(self, engine, sanctioned: Optional[Iterable[str]] = None):

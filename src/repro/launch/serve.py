@@ -61,6 +61,14 @@ def main() -> None:
                          "per (row, kv head), scored query-aware from "
                          "incremental per-page key min/max metadata "
                          "(dual-cache backends only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the content-addressed prefix store: "
+                         "requests sharing a chunk-aligned prompt prefix "
+                         "splice the cached post-admission KV instead of "
+                         "re-prefilling it (multi-turn / shared-context "
+                         "TTFT win)")
+    ap.add_argument("--prefix-cache-mb", type=int, default=256,
+                    help="prefix store LRU byte budget in MiB")
     ap.add_argument("--dispatch-ahead", type=int, default=1,
                     help="decode steps kept in flight on the device "
                          "(0 = synchronous one-step-per-tick baseline)")
@@ -107,6 +115,8 @@ def main() -> None:
         ap.error("--trace-capacity must be >= 1")
     if args.metrics_interval is not None and args.metrics_interval <= 0:
         ap.error("--metrics-interval must be > 0")
+    if args.prefix_cache_mb < 1:
+        ap.error("--prefix-cache-mb must be >= 1")
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     cfg = cfg.replace(dtype="float32")
     if not cfg.has_attention_cache:
@@ -151,6 +161,12 @@ def main() -> None:
     if args.trace_out or args.device_annotations:
         tracer = Tracer(capacity=args.trace_capacity,
                         annotate_device=args.device_annotations)
+    prefix_cache = None
+    if args.prefix_cache:
+        from repro.serving.prefix_cache import PrefixCache
+        prefix_cache = PrefixCache(quantum=args.chunk_tokens,
+                                   budget_bytes=args.prefix_cache_mb << 20,
+                                   free_fn=eng.release_prefix)
     session = ServeSession(
         eng,
         sched=SchedulerConfig(chunk_tokens=args.chunk_tokens,
@@ -158,7 +174,8 @@ def main() -> None:
                               max_prefill_batch=args.max_prefill_batch),
         max_pending=args.max_pending,
         tracer=tracer,
-        metrics_interval_s=args.metrics_interval)
+        metrics_interval_s=args.metrics_interval,
+        prefix_cache=prefix_cache)
 
     def on_token(rid: int, tok: int, is_last: bool) -> None:
         if not args.quiet_stream:

@@ -9,6 +9,7 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.core.dual_cache import init_dual_cache
@@ -166,6 +167,18 @@ def extract_slot_caches(batch_tree: Any, slot: int) -> Any:
             jnp.take(full, slot, axis=cache_batch_axis(p)),
             cache_batch_axis(p)),
         batch_tree)
+
+
+def cache_tree_bytes(tree: Any) -> int:
+    """Device-buffer bytes a cache tree holds, from leaf shape/dtype
+    metadata only (no device sync). The prefix store budgets its LRU on
+    this: a stored batch-1 tree keeps its full-capacity buffers resident
+    however few tokens are admitted into them."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(np.shape(leaf), dtype=np.int64)) * \
+            jnp.dtype(jnp.result_type(leaf)).itemsize
+    return total
 
 
 def decode_cache_structs(cfg: ModelConfig, shape: InputShape, *,

@@ -135,6 +135,15 @@ class PrefillTask:
     # fused path: the decode row this task is resident in (set by the
     # scheduler at admit; step_batch requires it)
     slot: Optional[int] = None
+    # prefix-cache hit (serving/prefix_cache.py CachedPrefix), adopted at
+    # admit: the engine splices the entry's cached tree instead of the
+    # empty template on this task's first fused dispatch, so the ragged
+    # scan resumes at the suffix (``pos`` starts at ``entry.n_tokens``).
+    # The orchestrator releases the store reference after that dispatch.
+    prefix_entry: Any = None
+    # miss path: (n_tokens, chain_key) boundary the orchestrator wants
+    # captured once ``pos`` reaches it (consumed at dispatch registration)
+    capture_plan: Optional[Tuple[int, str]] = None
 
     @property
     def done(self) -> bool:
@@ -236,6 +245,19 @@ class EngineBackend(Protocol):
     def free_slot(self, slot: int) -> None: ...
 
     def memory_snapshot(self) -> Dict[str, float]: ...
+
+    # content-addressed prefix store hooks (serving/prefix_cache.py). The
+    # store itself lives ABOVE this protocol in the orchestrator; the
+    # backend only provides the two narrow primitives it cannot: freezing
+    # one row of a collected step into a shareable batch-1 artifact
+    # (a sanctioned sync point — SyncSentinel.SANCTIONED), and freeing an
+    # evicted entry's pool streams. Adoption of a hit needs no extra
+    # protocol surface: step_batch splices ``task.prefix_entry`` in place
+    # of the empty template on the task's first dispatch.
+    def capture_prefix(self, step: FusedStep, slot: int, key: str, *,
+                       adm_weighted: float = 0.0) -> Any: ...
+
+    def release_prefix(self, entry: Any) -> None: ...
 
 
 # ==========================================================================

@@ -24,7 +24,7 @@ prefill path and the memory accounting differ:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,21 +66,30 @@ class DenseEngine(Engine):
             description="uncompressed full-KV cache (no admission)",
             sharded=self.mesh is not None)
 
-    def memory_snapshot(self) -> Dict[str, float]:
-        toks = 0
-        leaf = None
-        live = [s for s in range(self.slots) if self.live[s]]
-        if self.caches is not None and live:
-            for dc in self._iter_dense(self.caches):
-                t = np.asarray(dc.t)                  # [B]
-                toks += int(t[live].sum()) * dc.k.shape[1]
-                if leaf is None:
-                    leaf = dc.k
-        return self._per_shard_snapshot({
-            "kv_tokens": float(toks),
-            "kv_bytes": float(toks * 2 * self.cfg.head_dim *
-                              jnp.dtype(self.cfg.dtype).itemsize),
-        }, leaf)
+    # memory_snapshot itself is inherited: the base reads the host-cached
+    # per-row counts (fused stats / insert), so the dense baseline only
+    # supplies its own in-jit counter and snapshot leaf
+    def _kv_tokens_device(self, caches) -> jax.Array:
+        total = None
+        for dc in self._iter_dense(caches):
+            per = dc.t * dc.k.shape[1]            # t tokens x kv heads
+            total = per if total is None else total + per
+        if total is None:
+            b = int(np.shape(caches["t"])[0])
+            return jnp.zeros((b,), jnp.int32)
+        return total.astype(jnp.int32)
+
+    def _snapshot_leaf(self):
+        if self.caches is None:
+            return None
+        blocks = self.caches["blocks"]
+        for i in range(len(self.cfg.block_pattern)):
+            node = blocks[f"b{i}"]
+            if isinstance(node, dict) and "self" in node:
+                node = node["self"]
+            if isinstance(node, DenseCache):
+                return node.k
+        return None
 
     def _iter_dense(self, caches) -> List[DenseCache]:
         """Batched DenseCache leaves, one per (repeat, block) layer."""
@@ -146,6 +155,27 @@ class DenseEngine(Engine):
     def free_slot(self, slot: int) -> None:
         super().free_slot(slot)
         self._slot_len[slot] = 0
+
+    # ------------------------------------------------------------------
+    # prefix store hooks: the dense baseline participates logically (the
+    # stored artifact is its full-KV batch-1 tree; no pool streams)
+    # ------------------------------------------------------------------
+    def _adopt_prefix(self, slot: int, entry) -> None:
+        super()._adopt_prefix(slot, entry)
+        self._slot_len[slot] = entry.n_tokens
+
+    def capture_prefix(self, step, slot: int, key: str, *,
+                       adm_weighted: float = 0.0):
+        from repro.launch.specs import cache_tree_bytes, extract_slot_caches
+        from repro.serving.prefix_cache import CachedPrefix
+        caches = extract_slot_caches(step.after, slot)
+        n = int(jax.device_get(caches["t"])[0])
+        layers = self._iter_dense(caches)
+        heads = layers[0].k.shape[1] if layers else 0
+        return CachedPrefix(key=key, n_tokens=n, caches=caches,
+                            adm_weighted=adm_weighted, meta={},
+                            kv_tokens=n * heads * len(layers),
+                            n_bytes=cache_tree_bytes(caches))
 
     # ------------------------------------------------------------------
     def _decode_admission(self, st: Any, live_rows: List[int]) -> float:

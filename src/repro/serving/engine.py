@@ -70,7 +70,7 @@ from repro.analysis.contracts import hot_path
 from repro.configs.base import ModelConfig
 from repro.core.dual_cache import DualCache
 from repro.launch.specs import (alloc_batched_caches, build_decode_caches,
-                                extract_slot_caches)
+                                cache_tree_bytes, extract_slot_caches)
 from repro.models import inference as I
 from repro.serving import paged
 from repro.serving.backend import (BackendCapabilities, FusedStep,  # noqa: F401,E501
@@ -148,6 +148,17 @@ class Engine(ShardedDecodeMixin):
         # mid-prefill task's state (spliced empty at its first step_batch)
         self._resident: List[bool] = [False] * slots
         self._empty_tree = None
+        # host cache of per-row resident KV tokens: computed IN-JIT by the
+        # fused step (stats["kv_tokens_rows"]) and refreshed at collect's
+        # one sync — memory_snapshot reads this instead of pulling device
+        # counters on the metrics path
+        self._kv_rows = np.zeros((slots,), np.float64)
+        # prefix-cache adoption bookkeeping: the CachedPrefix a row was
+        # seeded from (drives the suffix-only pool mirror at finish) and
+        # whether an eviction trigger fired since the row opened (eviction
+        # compacts/reorders the global cache, forcing the full re-mirror)
+        self._slot_prefix: List[Optional[object]] = [None] * slots
+        self._slot_evicted: List[bool] = [False] * slots
         self.stats = {"steps": 0, "evict_triggers": 0.0, "decode_adm_sum": 0.0,
                       # extend-phase advances only (the path batching
                       # coalesces): wall time is a true device measure
@@ -217,26 +228,53 @@ class Engine(ShardedDecodeMixin):
     def memory_snapshot(self) -> Dict[str, float]:
         """Point-in-time memory telemetry: resident logical KV tokens/bytes
         over live slots, plus physical pool occupancy when mirroring and
-        per-shard KV bytes when meshed."""
+        per-shard KV bytes when meshed.
+
+        Reads HOST state only: the per-row token counts are computed
+        in-jit by the fused step (``stats["kv_tokens_rows"]``) and cached
+        at collect's designated sync (``insert`` seeds its slot the same
+        way), so sampling memory every tick never pulls device counters
+        inside the dispatch-ahead window."""
         snap: Dict[str, float] = {}
         if self.mirror:
             snap["pool_pages"] = float(self.pool.pages_in_use)
             snap["pool_util"] = float(self.pool.utilization())
-        toks = 0
-        leaf = None
         live = [s for s in range(self.slots) if self.live[s]]
-        if self.caches is not None and live:
-            for _, dc in self._iter_dual(self.caches):
-                gcnt = np.asarray(dc.gcnt)                     # [B, H]
-                local = np.minimum(np.asarray(dc.t), dc.w_local)  # [B]
-                toks += int(gcnt[live].sum())
-                toks += int(local[live].sum()) * gcnt.shape[1]
-                if leaf is None:
-                    leaf = dc.gk
+        toks = float(self._kv_rows[live].sum()) if live else 0.0
         snap["kv_tokens"] = float(toks)
         snap["kv_bytes"] = float(
             toks * 2 * self.cfg.head_dim * jnp.dtype(self.cfg.dtype).itemsize)
-        return self._per_shard_snapshot(snap, leaf)
+        return self._per_shard_snapshot(snap, self._snapshot_leaf())
+
+    def _snapshot_leaf(self):
+        """A representative batched cache leaf whose sharding metadata
+        gives the per-device KV fraction (no device sync)."""
+        if self.caches is None:
+            return None
+        blocks = self.caches["blocks"]
+        for i in range(len(self.cfg.block_pattern)):
+            node = blocks[f"b{i}"]
+            if isinstance(node, dict) and "self" in node:
+                node = node["self"]
+            if isinstance(node, DualCache):
+                return node.gk
+        return None
+
+    def _kv_tokens_device(self, caches) -> jax.Array:
+        """[B] resident KV token count per row, computed from device
+        values WITHOUT syncing (traced inside the fused step): per layer,
+        admitted global entries summed over kv heads plus the filled ring
+        window per head — the same accounting memory_snapshot reported
+        when it pulled these counters itself."""
+        total = None
+        for _, dc in self._iter_dual(caches):
+            per = (dc.gcnt.sum(axis=1)
+                   + jnp.minimum(dc.t, dc.w_local) * dc.gcnt.shape[1])
+            total = per if total is None else total + per
+        if total is None:
+            b = int(np.shape(caches["t"])[0])
+            return jnp.zeros((b,), jnp.int32)
+        return total.astype(jnp.int32)
 
     # ------------------------------------------------------------------
     # JetStream-style backend API: chunked prefill
@@ -379,6 +417,10 @@ class Engine(ShardedDecodeMixin):
         tok = prefix.first_token if prefix.first_token is not None else 0
         self.last_token[slot] = tok
         self._tok_dev = self._tok_dev.at[slot].set(tok)
+        # seed the host kv accounting (insert is a sanctioned sync point;
+        # fused rows are refreshed by every collect instead)
+        self._kv_rows[slot] = float(jax.device_get(
+            self._kv_tokens_device(prefix.caches))[0])
         if self.mirror:
             self._mirror_prefill(slot, prefix.caches)
 
@@ -427,12 +469,24 @@ class Engine(ShardedDecodeMixin):
             assert t.slot is not None, "fused step_batch needs slot-bound tasks"
             assert not self.live[t.slot], "prefill task in a live decode row"
             if not self._resident[t.slot]:
-                # first-chunk open: splice the empty template into the row
-                # (a dynamic-update-slice, not a model call — the chunk
-                # itself runs through the same fused scan below)
-                with self.tracer.span("fused_open", slot=t.slot):
-                    self.caches = self.sharded_splice(
-                        self.caches, self._fresh_task_caches(), t.slot)
+                if t.prefix_entry is not None:
+                    # prefix-cache hit: splice the cached (already
+                    # gate-filtered) tree instead of the empty template —
+                    # the row's per-cache ``t`` makes the ragged scan
+                    # resume at the suffix, skipping the re-prefill
+                    with self.tracer.span("prefix_splice", slot=t.slot,
+                                          tokens=t.prefix_entry.n_tokens):
+                        self.caches = self.sharded_splice(
+                            self.caches, t.prefix_entry.caches, t.slot)
+                    self._adopt_prefix(t.slot, t.prefix_entry)
+                else:
+                    # first-chunk open: splice the empty template into the
+                    # row (a dynamic-update-slice, not a model call — the
+                    # chunk itself runs through the same fused scan below)
+                    with self.tracer.span("fused_open", slot=t.slot):
+                        self.caches = self.sharded_splice(
+                            self.caches, self._fresh_task_caches(), t.slot)
+                    self._slot_prefix[t.slot] = None
                 self._resident[t.slot] = True
                 self._slot_gen[t.slot] += 1
         # ragged feed: prompt chunks left-aligned per row; S pinned to the
@@ -512,7 +566,10 @@ class Engine(ShardedDecodeMixin):
         return FusedStep(
             tokens=sampled, stats=st,
             before=before if mirror else None,
-            after=self.caches if mirror else None,
+            # ``after`` is kept unconditionally (a tree of references, no
+            # device copy): prefix capture snapshots it at collect even
+            # when the host paged mirror is off (timed/meshed engines)
+            after=self.caches,
             live=tuple(self.live), gen=tuple(self._slot_gen),
             tasks=tuple(tasks), takes=tuple(takes), fulls=tuple(fulls),
             finishing=tuple(finishing), decode_rows=decode_rows,
@@ -536,10 +593,21 @@ class Engine(ShardedDecodeMixin):
         re-opened) while the step was in flight."""
         assert not step.collected, "in-flight step collected twice"
         step.collected = True
-        nxt, trig, adm, selp = jax.device_get(  # jaxlint: allow-sync(collect is THE designated sync point of the dispatch/collect contract)
+        nxt, trig, adm, selp, kvr = jax.device_get(  # jaxlint: allow-sync(collect is THE designated sync point of the dispatch/collect contract)
             (step.tokens, step.stats["evict_trigger_rows"],
              step.stats["adm_sum_rows"],
-             step.stats["selected_pages_rows"]))
+             step.stats["selected_pages_rows"],
+             step.stats["kv_tokens_rows"]))
+        # refresh the host kv accounting memory_snapshot reads (rows whose
+        # slot churned while the step was in flight keep their newer value)
+        for sl in range(self.slots):
+            if self._slot_gen[sl] == step.gen[sl]:
+                self._kv_rows[sl] = float(kvr[sl])
+            if trig[sl] > 0:
+                # SnapKV eviction compacts/reorders the row's global cache:
+                # a prefix-hit row can no longer take the suffix-only
+                # mirror at finish
+                self._slot_evicted[sl] = True
         # the device_get blocked on the fused call, so this wall delta is
         # a true device+host measure of the whole dispatched step
         wall = time.perf_counter() - step.t_dispatch
@@ -569,10 +637,17 @@ class Engine(ShardedDecodeMixin):
         if self.mirror and step.before is not None:
             for t, fin in zip(step.tasks, step.finishing):
                 if fin and self._slot_gen[t.slot] == step.gen[t.slot]:
-                    # prompt complete: mirror the whole resident prefix
-                    # (the fused analogue of insert's mirror)
-                    self._mirror_prefill(
-                        t.slot, extract_slot_caches(step.after, t.slot))
+                    # prompt complete: mirror the resident prefix (the
+                    # fused analogue of insert's mirror). A prefix-hit row
+                    # already aliases the entry's pool pages, so only the
+                    # suffix is mirrored — unless an eviction compacted
+                    # the global cache, which forces the full re-sync.
+                    entry = self._slot_prefix[t.slot]
+                    sc = extract_slot_caches(step.after, t.slot)
+                    if entry is not None and not self._slot_evicted[t.slot]:
+                        self._mirror_prefill_suffix(t.slot, sc, entry)
+                    else:
+                        self._mirror_prefill(t.slot, sc)
             if rows:
                 self._mirror_decode(step.before, step.after, rows=rows,
                                     evicted_rows=trig > 0)
@@ -622,11 +697,132 @@ class Engine(ShardedDecodeMixin):
         # its token so the dead row never replays its final token
         self.last_token[slot] = 0
         self._tok_dev = self._tok_dev.at[slot].set(0)
+        self._kv_rows[slot] = 0.0
+        self._slot_prefix[slot] = None
+        self._slot_evicted[slot] = False
         if self.mirror and self.caches is not None:
             for lkey, _ in self._iter_dual(self.caches):
                 for h in range(self.cfg.n_kv_heads):
+                    # pages shared with a prefix-store entry are only
+                    # dereferenced here; the entry's own refs keep them
                     self.pool.free_stream((slot, lkey, h, "global"))
                     self.pool.free_stream((slot, lkey, h, "local"))
+
+    # ------------------------------------------------------------------
+    # content-addressed prefix store hooks (serving/prefix_cache.py)
+    # ------------------------------------------------------------------
+    @hot_path
+    def _adopt_prefix(self, slot: int, entry) -> None:
+        """Host-side adoption of a cached prefix into a freshly spliced
+        row: alias the entry's pool pages into the slot's streams (incref
+        only — copy-on-write unshares any page either side later writes,
+        so a hit can never alias mutable decode state) and seed the host
+        kv accounting. Runs inside the fused dispatch, so it is hot-path
+        code: pure host bookkeeping, never a device sync."""
+        self._slot_prefix[slot] = entry
+        self._slot_evicted[slot] = False
+        self._kv_rows[slot] = float(entry.kv_tokens)
+        if self.mirror:
+            for skey in entry.stream_keys:
+                # ("pfx", key, lkey, h, region) -> (slot, lkey, h, region)
+                dst = (slot,) + skey[2:]
+                self.pool.free_stream(dst)
+                self.pool.share_stream(skey, dst)
+
+    def capture_prefix(self, step: FusedStep, slot: int, key: str, *,
+                       adm_weighted: float = 0.0):
+        """Freeze row ``slot`` of a collected step into a shareable
+        :class:`~repro.serving.prefix_cache.CachedPrefix`: the batch-1
+        device tree (immutable — later dispatches update the batched tree
+        functionally and cannot disturb it), the per-layer host counters
+        the suffix mirror needs, and — when mirroring — entry-owned pool
+        streams holding the post-admission bytes, ready to be aliased
+        into a hitting slot with zero copies.
+
+        A sanctioned sync point (:data:`SyncSentinel.SANCTIONED`): the
+        per-layer pulls run once per unique prefix, off the dispatch
+        window, exactly like insert's mirror."""
+        from repro.serving.prefix_cache import CachedPrefix
+        caches = extract_slot_caches(step.after, slot)
+        meta: Dict[Tuple, Dict] = {}
+        stream_keys: List[Tuple] = []
+        kv_tokens = 0
+        n_tokens = 0
+        pool_pages = 0
+        for lkey, dc in self._iter_dual(caches):
+            hdc = jax.device_get(dc)          # batch-1: one pull per layer
+            n_tokens = int(hdc.t[0])
+            n_local = min(n_tokens, dc.w_local)
+            gcnt = np.asarray(hdc.gcnt[0], np.int64)        # [H]
+            meta[lkey] = {"gcnt": gcnt, "n_local": n_local}
+            kv_tokens += int(gcnt.sum()) + n_local * gcnt.shape[0]
+            if not self.mirror:
+                continue
+            for h in range(self.cfg.n_kv_heads):
+                gkey = ("pfx", key, lkey, h, "global")
+                self.pool.free_stream(gkey)
+                cnt = int(gcnt[h])
+                self.pool.bulk_append(
+                    gkey, np.asarray(hdc.gk[0, h, :cnt], np.float32),
+                    np.asarray(hdc.gv[0, h, :cnt], np.float32))
+                lkey_ = ("pfx", key, lkey, h, "local")
+                self.pool.free_stream(lkey_)
+                self.pool.bulk_append(
+                    lkey_, np.asarray(hdc.lk[0, h, :n_local], np.float32),
+                    np.asarray(hdc.lv[0, h, :n_local], np.float32))
+                stream_keys += [gkey, lkey_]
+                pool_pages += len(self.pool.table(gkey).pages)
+                pool_pages += len(self.pool.table(lkey_).pages)
+        n_bytes = cache_tree_bytes(caches) + \
+            pool_pages * paged.PAGE_SIZE * self.cfg.head_dim * 2 * 4
+        return CachedPrefix(key=key, n_tokens=n_tokens, caches=caches,
+                            adm_weighted=adm_weighted, meta=meta,
+                            kv_tokens=kv_tokens, n_bytes=n_bytes,
+                            stream_keys=tuple(stream_keys))
+
+    def release_prefix(self, entry) -> None:
+        """Free an evicted store entry's pool streams. Pages a live slot
+        still shares survive via their per-page refcounts."""
+        if self.mirror:
+            for skey in entry.stream_keys:
+                self.pool.free_stream(skey)
+
+    def _mirror_prefill_suffix(self, slot: int, caches, entry) -> None:
+        """Mirror only the tokens a prefix-hit row appended past the
+        cached boundary: global entries grown beyond the entry's per-head
+        counts are appended, and only the ring slots positions
+        ``[n_tokens, t)`` touched are written (copy-on-write unshares any
+        page the entry still references). The full :meth:`_mirror_prefill`
+        re-sync handles the eviction fallback upstream."""
+        t0 = entry.n_tokens
+        for lkey, dc in self._iter_dual(caches):
+            hdc = jax.device_get(dc)
+            t1 = int(hdc.t[0])
+            w = dc.w_local
+            len0, len1 = min(t0, w), min(t1, w)
+            touched = (set(range(len1)) if t1 - t0 >= w
+                       else {p % w for p in range(t0, t1)})
+            grow = list(range(len0, len1))
+            over = sorted(touched.difference(grow))
+            gcnt0 = entry.meta[lkey]["gcnt"]
+            for h in range(self.cfg.n_kv_heads):
+                c0, c1 = int(gcnt0[h]), int(hdc.gcnt[0, h])
+                assert c1 >= c0, \
+                    "global cache shrank without an eviction trigger"
+                if c1 > c0:
+                    self.pool.bulk_append(
+                        (slot, lkey, h, "global"),
+                        np.asarray(hdc.gk[0, h, c0:c1], np.float32),
+                        np.asarray(hdc.gv[0, h, c0:c1], np.float32))
+                lkey_ = (slot, lkey, h, "local")
+                for i in grow:
+                    self.pool.append(
+                        lkey_, np.asarray(hdc.lk[0, h, i], np.float32),
+                        np.asarray(hdc.lv[0, h, i], np.float32))
+                for i in over:
+                    self.pool.overwrite(
+                        lkey_, i, np.asarray(hdc.lk[0, h, i], np.float32),
+                        np.asarray(hdc.lv[0, h, i], np.float32))
 
     # ------------------------------------------------------------------
     # paged-pool mirroring

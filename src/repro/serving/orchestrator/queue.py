@@ -58,6 +58,10 @@ class ServeRequest:
     # queued ends at admit_t, decode runs insert_t -> finish_t
     admit_t: Optional[float] = None
     insert_t: Optional[float] = None
+    # prefix-cache outcome at admission: did a stored shared-context
+    # prefix splice in, and how many prompt tokens did it cover
+    prefix_hit: bool = False
+    prefix_tokens: int = 0
     # TTFT/TPOT live on the request's TokenStream (stream.py), the single
     # source of truth for per-token timing
 

@@ -179,8 +179,22 @@ class Orchestrator:
                  clock: Callable[[], float] = time.monotonic,
                  tracer: Optional[Tracer] = None,
                  metrics_interval_s: Optional[float] = None,
-                 on_metrics: Callable[[str], None] = print):
+                 on_metrics: Callable[[str], None] = print,
+                 prefix_cache=None):
         self.engine = engine
+        # content-addressed prefix store (serving/prefix_cache.py): cache
+        # state is only capturable/resumable at chunk boundaries, so the
+        # store's hash quantum must BE the scheduler chunk
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None and \
+                prefix_cache.quantum != sched.chunk_tokens:
+            raise ValueError(
+                f"prefix_cache.quantum={prefix_cache.quantum} must equal "
+                f"sched.chunk_tokens={sched.chunk_tokens}: prefixes are "
+                "only capturable/resumable at chunk boundaries")
+        # id(step) -> [(req, task, n_tokens, key)] capture obligations
+        # that mature when that in-flight step is collected
+        self._captures: Dict[int, List] = {}
         self.scheduler = Scheduler(sched)
         self.clock = clock
         # observability: the tracer records request-lifecycle and
@@ -256,7 +270,14 @@ class Orchestrator:
             # dispatched), so the row must be freed too — the per-slot
             # generation guard discards anything in-flight steps still
             # produce for it
-            self._prefills.pop(rid, None)
+            ent = self._prefills.pop(rid, None)
+            if (ent is not None and self.prefix_cache is not None
+                    and ent[1].prefix_entry is not None):
+                # admitted on a prefix hit but cancelled before its first
+                # dispatch spliced the entry in: drop the store pin so a
+                # pending eviction can reclaim the entry
+                self.prefix_cache.release(ent[1].prefix_entry)
+                ent[1].prefix_entry = None
             with self._phase("evict", counter="evict_time_s",
                              slot=req.slot, rid=rid):
                 self.engine.free_slot(req.slot)
@@ -334,6 +355,84 @@ class Orchestrator:
                 self._deadlined.pop(rid, None)
 
     # ------------------------------------------------------------------
+    # content-addressed prefix cache (serving/prefix_cache.py): hit at
+    # admission -> splice-and-resume; capture at the collect of the step
+    # whose row position lands on the target chunk boundary
+    # ------------------------------------------------------------------
+    def _prefix_admit(self, req: ServeRequest, task) -> None:
+        """Try the store at admission: on a hit the task starts at the
+        entry's boundary (step_batch splices the cached tree instead of
+        an empty one — the fused scan resumes at the suffix); on a miss
+        (or a shorter-than-ideal hit) plan a capture at the longest
+        unstored aligned boundary of this prompt."""
+        pc = self.prefix_cache
+        entry = pc.lookup(req.prompt)
+        if entry is not None:
+            task.prefix_entry = entry
+            task.pos = entry.n_tokens
+            task.adm_weighted = entry.adm_weighted
+            req.prefix_hit = True
+            req.prefix_tokens = entry.n_tokens
+            self.telemetry.bump("prefix_hit")
+            self.tracer.instant("prefix_hit", cat=CAT_REQUEST,
+                                lane=(LANE_REQ, req.rid), rid=req.rid,
+                                tokens=entry.n_tokens, key=entry.key)
+        else:
+            self.telemetry.bump("prefix_miss")
+        plan = pc.capture_target(req.prompt)
+        if plan is not None and (entry is None or plan[0] > entry.n_tokens):
+            task.capture_plan = plan
+
+    def _prefix_after_dispatch(self, step, pairs) -> None:
+        """Post-dispatch bookkeeping for the tasks just advanced: drop
+        admission pins (the splice copied the entry's device tree into
+        the slot row and the pool mirror is shared by COW refcount, so
+        the slot no longer depends on the entry) and register capture
+        obligations against the step whose ``after`` tree holds the row
+        at exactly the target boundary."""
+        if step is None:
+            return
+        pc = self.prefix_cache
+        for req, task in pairs:
+            if task.prefix_entry is not None:
+                pc.release(task.prefix_entry)
+                task.prefix_entry = None
+            if task.capture_plan is not None:
+                n, key = task.capture_plan
+                if task.pos == n:
+                    self._captures.setdefault(id(step), []).append(
+                        (req, task, n, key))
+                if task.pos >= n:
+                    task.capture_plan = None
+
+    def _run_captures(self, step) -> None:
+        """Mature this collected step's capture obligations: snapshot the
+        slot's post-admission cache state (``capture_prefix`` is a
+        sanctioned host sync, like the collect that just ran) and insert
+        it into the store. FIFO collect means the task's ``adm_weighted``
+        covers exactly the captured prefix here."""
+        jobs = self._captures.pop(id(step), None)
+        if not jobs:
+            return
+        pc = self.prefix_cache
+        for req, task, n, key in jobs:
+            if self._prefills.get(req.rid, (None, None))[1] is not task:
+                continue   # cancelled while the step was in flight
+            if key in pc:
+                continue   # another request already captured this prefix
+            with self._phase("prefix_capture",
+                             counter="prefix_capture_time_s",
+                             rid=req.rid, slot=task.slot, tokens=n):
+                entry = self.engine.capture_prefix(
+                    step, task.slot, key, adm_weighted=task.adm_weighted)
+            pc.insert(entry)
+            self.tracer.instant("prefix_capture", cat=CAT_REQUEST,
+                                lane=(LANE_REQ, req.rid), rid=req.rid,
+                                tokens=n)
+        self.telemetry.counters["prefix_evict"] = float(pc.evictions)
+        self.telemetry.counters["prefix_bytes"] = float(pc.bytes_used)
+
+    # ------------------------------------------------------------------
     def tick(self) -> bool:
         """One scheduling round; returns True if any work was done."""
         self.telemetry.start()
@@ -377,6 +476,8 @@ class Orchestrator:
                     # fused path: the task's row IS the reserved slot
                     # (spliced in empty on its first step_batch)
                     task.slot = slot
+                    if self.prefix_cache is not None:
+                        self._prefix_admit(req, task)
                     self._prefills[req.rid] = (req, task)
                     worked = True
 
@@ -433,6 +534,8 @@ class Orchestrator:
                                   "fused": True})
         if advanced:
             self.telemetry.bump("prefill_batches")
+        if self.prefix_cache is not None:
+            self._prefix_after_dispatch(step, pairs)
 
         # 3) collect the OLDEST in-flight step (the host sync point); at
         # depth 0 that is the step dispatched just above
@@ -447,6 +550,8 @@ class Orchestrator:
                 self.telemetry.bump("decode_steps")
             worked = True
         self._route_tokens(step, out)
+        if self.prefix_cache is not None and step is not None:
+            self._run_captures(step)
 
         self.telemetry.counters["rejected"] = float(self.queue.rejected)
         for k in _ENGINE_STAT_KEYS:
@@ -523,7 +628,9 @@ class Orchestrator:
                 ttft=st.ttft, tpot=st.tpot,
                 e2e=req.finish_t - req.arrival_t,
                 mean_admission=req.mean_admission,
-                prefill_chunks=req.prefill_chunks)
+                prefill_chunks=req.prefill_chunks,
+                prefix_hit=req.prefix_hit,
+                prefix_tokens=req.prefix_tokens)
 
     # ------------------------------------------------------------------
     def drain(self) -> None:
@@ -541,6 +648,8 @@ class Orchestrator:
             if self._is_decode_step(step):
                 self.telemetry.bump("decode_steps")
             self._route_tokens(step, out)
+            if self.prefix_cache is not None:
+                self._run_captures(step)
             # collect folded this step's eviction/admission stats into
             # engine.stats after the last tick's counter sync ran
             for k in _ENGINE_STAT_KEYS:

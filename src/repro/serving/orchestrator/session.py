@@ -126,7 +126,11 @@ class ServeSession:
 
     ``sched`` defaults to the dispatch-ahead driver
     (``dispatch_ahead=1``); everything else (chunking, backpressure
-    bound) is the orchestrator's."""
+    bound) is the orchestrator's. Pass ``prefix_cache=PrefixCache(
+    quantum=sched.chunk_tokens, free_fn=engine.release_prefix)`` to
+    enable content-addressed shared-context reuse across requests
+    (serving/prefix_cache.py) — the store outlives the session, so
+    multi-turn drivers reuse prefixes across rounds."""
 
     def __init__(self, engine: EngineBackend, *,
                  sched: Optional[SchedulerConfig] = None,

@@ -29,7 +29,7 @@ from repro.serving.obs.metrics import CounterView, MetricsRegistry
 
 # summary()/to_json() artifact schema: bump on shape changes so BENCH /
 # trace consumers across PRs can tell what they are reading
-TELEMETRY_SCHEMA_VERSION = 3
+TELEMETRY_SCHEMA_VERSION = 4
 
 # tick-phase wall-time counters (seconds), accumulated by the
 # orchestrator's phase spans: where each tick's time goes. ``extend``
@@ -37,7 +37,8 @@ TELEMETRY_SCHEMA_VERSION = 3
 # engine stats), so the disjoint per-tick decomposition is
 # prefill + dispatch + collect + evict + memory_sample + admit <= tick.
 PHASE_TIME_KEYS = ("prefill_time_s", "dispatch_time_s", "collect_time_s",
-                   "evict_time_s", "memory_sample_time_s", "admit_time_s")
+                   "evict_time_s", "memory_sample_time_s", "admit_time_s",
+                   "prefix_capture_time_s")
 
 
 @dataclasses.dataclass
@@ -52,6 +53,10 @@ class RequestRecord:
     # chunks this request's prefill took (batched ticks count one chunk
     # per task, same as the per-request driver)
     prefill_chunks: int = 0
+    # prefix-cache outcome: served off a stored shared-context prefix
+    # (and how many prompt tokens the splice skipped re-prefilling)
+    prefix_hit: bool = False
+    prefix_tokens: int = 0
 
 
 def _pct(xs: List[float], q: float) -> Optional[float]:
@@ -106,7 +111,13 @@ class Telemetry:
                 # (fused_padding_frac = 1 - active/slot rows)
                 ("fused_slot_rows", 0), ("fused_active_rows", 0),
                 # decode-time page selection (gathered top-K fused ticks)
-                ("selected_pages", 0.0), ("selection_time_s", 0.0)):
+                ("selected_pages", 0.0), ("selection_time_s", 0.0),
+                # content-addressed prefix store (admission-gated
+                # shared-context reuse): hit/miss at admission, LRU
+                # evictions, and the store's current byte footprint
+                ("prefix_hit", 0), ("prefix_miss", 0),
+                ("prefix_evict", 0.0), ("prefix_bytes", 0.0),
+                ("prefix_capture_time_s", 0.0)):
             self.counters[name] = v
         self.records: List[RequestRecord] = []
         self.pool_util_samples: List[float] = []
@@ -155,10 +166,13 @@ class Telemetry:
                        ttft: Optional[float], tpot: Optional[float],
                        e2e: Optional[float],
                        mean_admission: Optional[float],
-                       prefill_chunks: int = 0) -> None:
+                       prefill_chunks: int = 0,
+                       prefix_hit: bool = False,
+                       prefix_tokens: int = 0) -> None:
         self.records.append(RequestRecord(rid, prompt_len, n_out, ttft,
                                           tpot, e2e, mean_admission,
-                                          prefill_chunks))
+                                          prefill_chunks, prefix_hit,
+                                          prefix_tokens))
         self.bump("completed")
         self.bump("generated_tokens", n_out)
         # rolling-window view of the same observations (live_line)
@@ -190,6 +204,11 @@ class Telemetry:
         slot_rows = self.counters.get("fused_slot_rows", 0.0)
         pad_frac = (1.0 - self.counters.get("fused_active_rows", 0.0)
                     / slot_rows) if slot_rows else None
+        # prefix-cache split: TTFT on hit vs miss is the store's win axis
+        ttft_hit = [r.ttft for r in self.records
+                    if r.prefix_hit and r.ttft is not None]
+        ttft_miss = [r.ttft for r in self.records
+                     if not r.prefix_hit and r.ttft is not None]
         return {
             # self-description: artifacts (BENCH json, committed
             # summaries) say what schema they carry and when they were cut
@@ -212,6 +231,12 @@ class Telemetry:
             "tpot_p99_s": _pct(tpots, 99),
             "prefill_chunks_per_request_mean": _mean(
                 [float(r.prefill_chunks) for r in self.records]),
+            "prefix_hit_rate": (sum(1 for r in self.records if r.prefix_hit)
+                                / n if n else None),
+            "prefix_tokens_reused": float(sum(
+                r.prefix_tokens for r in self.records)),
+            "ttft_on_hit_p50_s": _pct(ttft_hit, 50),
+            "ttft_on_miss_p50_s": _pct(ttft_miss, 50),
             "e2e_mean_s": _mean(e2es),
             "mean_admission": _mean(adms),
             "pool_util_mean": _mean(self.pool_util_samples),
@@ -297,6 +322,14 @@ class Telemetry:
             f"fused padding_frac={f(s['fused_padding_frac'], nd=3)}  "
             f"selection: pages={c.get('selected_pages', 0.0):.0f} "
             f"time={f(ph['selection_time_s'], 's')}",
+            f"prefix cache: hit_rate={f(s['prefix_hit_rate'], nd=3)} "
+            f"(hits={c.get('prefix_hit', 0.0):.0f} "
+            f"misses={c.get('prefix_miss', 0.0):.0f} "
+            f"evictions={c.get('prefix_evict', 0.0):.0f}) "
+            f"tokens_reused={s['prefix_tokens_reused']:.0f} "
+            f"bytes={c.get('prefix_bytes', 0.0):.0f}  "
+            f"ttft_on_hit_p50={f(s['ttft_on_hit_p50_s'], 'ms', 1e3)} "
+            f"vs_miss_p50={f(s['ttft_on_miss_p50_s'], 'ms', 1e3)}",
             f"paged pool: util_mean={f(s['pool_util_mean'], nd=3)} "
             f"util_last={f(s['pool_util_last'], nd=3)} "
             f"pages_peak={s['pool_pages_peak']}",

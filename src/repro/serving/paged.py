@@ -49,18 +49,58 @@ class PagedKVPool:
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         # page 0 is reserved as the null page (masked in kernels)
         self.tables: Dict[Tuple, StreamTable] = {}
+        # physical-page refcounts; pages absent from the dict are free.
+        self._refs: Dict[int, int] = {}
         self.dtype = dtype
 
     # ---- allocator ------------------------------------------------------
     def alloc_page(self) -> int:
         if not self._free:
             raise PoolExhausted("KV pool exhausted")
-        return self._free.pop()
+        page = self._free.pop()
+        self._refs[page] = 1
+        return page
+
+    def _decref(self, page: int) -> None:
+        n = self._refs.get(page, 0)
+        if n <= 1:
+            self._refs.pop(page, None)
+            self._free.append(page)
+        else:
+            self._refs[page] = n - 1
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     def free_stream(self, key: Tuple) -> None:
         t = self.tables.pop(key, None)
         if t:
-            self._free.extend(t.pages)
+            for p in t.pages:
+                self._decref(p)
+
+    def share_stream(self, src: Tuple, dst: Tuple) -> None:
+        """Alias ``dst`` to ``src``'s pages (incref, no copy).
+
+        Subsequent writes through either key copy-on-write any shared page,
+        so neither stream can observe the other's mutations.
+        """
+        s = self.tables[src]
+        assert dst not in self.tables, f"share_stream: {dst} already exists"
+        for p in s.pages:
+            self._refs[p] = self._refs.get(p, 0) + 1
+        self.tables[dst] = StreamTable(pages=list(s.pages), length=s.length)
+
+    def _writable_page(self, t: StreamTable, idx: int) -> int:
+        """Return ``t.pages[idx]``, copying it first if shared (COW)."""
+        page = t.pages[idx]
+        if self._refs.get(page, 0) > 1:
+            fresh = self.alloc_page()
+            self.k[fresh] = self.k[page]
+            self.v[fresh] = self.v[page]
+            self._decref(page)
+            t.pages[idx] = fresh
+            page = fresh
+        return page
 
     def table(self, key: Tuple) -> StreamTable:
         if key not in self.tables:
@@ -83,7 +123,8 @@ class PagedKVPool:
         t = self.table(key)
         if t.length % PAGE_SIZE == 0:
             t.pages.append(self.alloc_page())
-        page, off = t.pages[t.length // PAGE_SIZE], t.length % PAGE_SIZE
+        page = self._writable_page(t, t.length // PAGE_SIZE)
+        off = t.length % PAGE_SIZE
         self.k[page, off] = np.asarray(k_vec, np.float32)
         self.v[page, off] = np.asarray(v_vec, np.float32)
         t.length += 1
@@ -93,7 +134,9 @@ class PagedKVPool:
             self.append(key, ks[i], vs[i])
 
     def overwrite(self, key: Tuple, pos: int, k_vec, v_vec) -> None:
-        page, off = self.table(key).slot(pos)
+        t = self.table(key)
+        page = self._writable_page(t, pos // PAGE_SIZE)
+        off = pos % PAGE_SIZE
         self.k[page, off] = np.asarray(k_vec, np.float32)
         self.v[page, off] = np.asarray(v_vec, np.float32)
 

@@ -196,7 +196,12 @@ class ShardedDecodeMixin:
             last_logits, caches, st = I.prefill_extend_ragged(
                 params, self.cfg, tokens, lengths, caches, opts=opts)
             sampled = sample(key[0], last_logits, temperature=temperature)
-            return last_logits, caches, {**st, "sampled": sampled}
+            # per-row resident KV tokens computed IN-JIT from the post-step
+            # tree and pulled with collect's one sync, so memory_snapshot
+            # reads host state only (the PR 9 allow-sync debt is gone)
+            kv_rows = self._kv_tokens_device(caches)
+            return last_logits, caches, {**st, "sampled": sampled,
+                                         "kv_tokens_rows": kv_rows}
 
         return jax.jit(fn) if self.mesh is None \
             else self._mesh_jit(fn, kind=kind)

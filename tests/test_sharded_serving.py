@@ -198,6 +198,24 @@ for name in ("wgkv", "dense"):
                                           selection="quest:8")
         out[name]["flat_sel_all"] = serve(name, None, 1,
                                           selection="quest:8")
+
+# prefix-cache round on the mesh: the same prompts served twice through a
+# shared store — round 2 admits every request off a cached prefix (the
+# splice re-enters the memoized sharded insert path, so the cached tree
+# lands under the mesh sharding) and must stream the cold bytes
+from repro.serving.prefix_cache import PrefixCache
+eng = engines[("wgkv", True, None)]
+pc = PrefixCache(quantum=16, free_fn=eng.release_prefix)
+rounds = []
+for _ in range(2):
+    orch = Orchestrator(eng, sched=SchedulerConfig(chunk_tokens=16),
+                        prefix_cache=pc)
+    for p in prompts:
+        orch.submit(p, max_new=4)
+    orch.run()
+    rounds.append([orch.tokens(r) for r in range(len(prompts))])
+out["prefix_mesh"] = {"rounds": rounds, "hits": pc.hits,
+                      "misses": pc.misses}
 print("RESULT" + json.dumps(out))
 """
 
@@ -239,6 +257,12 @@ def test_sharded_parity_vs_unsharded():
         out["wgkv"]["mesh"]["tokens"]
     assert out["wgkv"]["flat_sel_all"]["tokens"] == \
         out["wgkv"]["flat"]["tokens"]
+    # prefix-cache round on the mesh: round 1 misses and captures, round 2
+    # hits for every request — and both rounds stream the cold bytes
+    pfx = out["prefix_mesh"]
+    assert pfx["misses"] == 3 and pfx["hits"] == 3
+    assert pfx["rounds"][0] == out["wgkv"]["mesh"]["tokens"]
+    assert pfx["rounds"][1] == out["wgkv"]["mesh"]["tokens"]
 
 
 # ==========================================================================
